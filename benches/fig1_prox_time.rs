@@ -1,0 +1,66 @@
+//! Figure 1: proximal-policy log-prob computation time per training step.
+//!
+//! Paper result: `recompute` needs a full forward pass (4–8 s/step on their
+//! 8-GPU testbed); A-3PO's `loglinear` interpolation is ~1.2 ms — a
+//! ≥3,000× reduction. `sync` has no prox phase at all.
+//!
+//! This bench measures the same two operations on this testbed: the
+//! `prox_forward` executable over a real training batch vs the Eq. 3
+//! elementwise interpolation, and prints the Fig. 1 bars plus the ratio.
+//!
+//!   cargo bench --bench fig1_prox_time -- --preset setup1
+
+use a3po::bench::{bench, BenchConfig};
+use a3po::coordinator::trainer::interp_prox_host;
+use a3po::runtime::{HostTensor, Runtime};
+use a3po::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig::from_env_args(
+        "fig1_prox_time",
+        "Fig. 1 — prox log-prob computation time (recompute vs loglinear vs sync)",
+    );
+    std::env::set_var("A3PO_QUIET", "1");
+    let rt = Runtime::load(&a3po::bench::artifact_dir(&cfg), Some(&["init", "prox_forward"]))?;
+    let geo = rt.manifest.preset.clone();
+    let snapshot = rt.init_params(cfg.seed as i32)?;
+    let prox_exec = rt.exec("prox_forward")?;
+
+    // A realistic training batch (token ids + behaviour logps + alphas).
+    let mut rng = Pcg64::from_seed(cfg.seed);
+    let (b, s) = (geo.train_batch, geo.seq_len);
+    let t = s - 1;
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(geo.vocab as u64) as i32).collect();
+    let behav: Vec<f32> = (0..b * t).map(|_| -rng.next_f32() * 4.0).collect();
+    let alpha: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+    let tokens_lit = HostTensor::i32(vec![b, s], tokens).to_literal()?;
+
+    println!("\n== Fig. 1: prox log-prob computation time per training step ==");
+    println!("preset={} batch={}x{} params={}\n", geo.name, b, s, geo.param_count);
+
+    let iters = 20;
+    let recompute = bench("recompute: prox_forward (full fwd pass)", iters, || {
+        let mut refs = snapshot.literal_refs();
+        refs.push(&tokens_lit);
+        let _ = prox_exec.run_literals(&refs).unwrap();
+    });
+
+    let mut sink = 0.0f32;
+    let loglinear = bench("loglinear: Eq.3 interpolation (A-3PO)", 200, || {
+        let v = interp_prox_host(&behav, &alpha, t);
+        sink += v[0];
+    });
+    std::hint::black_box(sink);
+
+    println!("\nsync: no prox computation (coupled loss)          0.0 ns by definition");
+    let ratio = recompute.mean_ns / loglinear.mean_ns;
+    println!("\n{:<28} {:>14} {:>14}", "method", "mean / step", "paper");
+    println!("{:<28} {:>11.3} ms {:>14}", "recompute", recompute.mean_ns / 1e6, "4000-8000 ms");
+    println!("{:<28} {:>11.3} ms {:>14}", "loglinear (A-3PO)", loglinear.mean_ns / 1e6, "1.2 ms");
+    println!("{:<28} {:>11.3} ms {:>14}", "sync", 0.0, "0 ms");
+    println!(
+        "\nrecompute / loglinear = {ratio:.0}x   (paper: >= 3,000x)  {}",
+        if ratio >= 100.0 { "— shape reproduced" } else { "" }
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Figure 2: training progress — average task reward vs wall-clock time for
+//! sync / recompute / loglinear at equal training epochs.
+//!
+//! Paper shape: loglinear reaches the shared final reward fastest;
+//! recompute second (it pays a forward pass per step); sync slowest (no
+//! rollout/training overlap).
+//!
+//!   cargo bench --bench fig2_training_progress -- --preset setup1 --steps 80
+
+use a3po::bench::{comparison_runs, downsample, BenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig::from_env_args(
+        "fig2_training_progress",
+        "Fig. 2 — task reward vs wall-clock time, equal epochs, 3 methods",
+    );
+    let runs = comparison_runs(&cfg)?;
+
+    println!("\n== Fig. 2: training reward vs wall-clock ({} / {} steps) ==", cfg.preset, cfg.steps);
+    println!("{:<12} {:>10} {:>10} {:>10}", "method", "t_total(s)", "final rew", "rew@half-t");
+    for r in &runs {
+        let half_t = r.total_secs / 2.0;
+        let rew_half = r
+            .reward_curve
+            .iter()
+            .take_while(|(_, w, _, _)| *w <= half_t)
+            .last()
+            .map(|(_, _, rew, _)| *rew)
+            .unwrap_or(0.0);
+        let final_rew = r.reward_curve.last().map(|x| x.2).unwrap_or(0.0);
+        println!(
+            "{:<12} {:>10.1} {:>10.3} {:>10.3}",
+            r.method.label(),
+            r.total_secs,
+            final_rew,
+            rew_half
+        );
+    }
+
+    println!("\nseries (wallclock_s, shaped_reward):");
+    for r in &runs {
+        let pts = downsample(&r.reward_curve, 12);
+        let series: Vec<String> =
+            pts.iter().map(|(_, w, rew, _)| format!("({w:.1}, {rew:.3})")).collect();
+        println!("  {:<12} {}", r.method.label(), series.join(" "));
+    }
+
+    // The paper's headline: same epochs, loglinear fastest wall-clock.
+    let t = |m: &str| {
+        runs.iter().find(|r| r.method.label() == m).map(|r| r.total_secs).unwrap_or(0.0)
+    };
+    println!(
+        "\nwall-clock: sync {:.1}s, recompute {:.1}s, loglinear {:.1}s  \
+         (paper: loglinear < recompute < sync)",
+        t("sync"),
+        t("recompute"),
+        t("loglinear")
+    );
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Figure 3: evaluation reward on held-out test prompts over training steps.
+//!
+//! Paper shape: Setup 1 — all three methods converge to similar eval
+//! rewards; Setup 2 — the asynchronous decoupled methods substantially
+//! outperform sync.
+//!
+//!   cargo bench --bench fig3_eval_reward -- --preset setup1 --steps 80
+
+use a3po::bench::{comparison_runs, BenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig::from_env_args(
+        "fig3_eval_reward",
+        "Fig. 3 — held-out eval reward vs training step, 3 methods",
+    );
+    let runs = comparison_runs(&cfg)?;
+
+    println!("\n== Fig. 3: held-out eval reward over training ({}) ==", cfg.preset);
+    println!("series (step, eval_exact_reward):");
+    for r in &runs {
+        let series: Vec<String> =
+            r.eval_curve.iter().map(|(s, _, rew)| format!("({s}, {rew:.3})")).collect();
+        println!("  {:<12} {}", r.method.label(), series.join(" "));
+    }
+
+    println!("\n{:<12} {:>12} {:>12}", "method", "final eval", "best eval");
+    for r in &runs {
+        let best =
+            r.eval_curve.iter().map(|(_, _, x)| *x).fold(f64::NEG_INFINITY, f64::max);
+        println!("{:<12} {:>12.3} {:>12.3}", r.method.label(), r.final_eval, best);
+    }
+    let gap = |a: &str, b: &str| {
+        let get = |m: &str| {
+            runs.iter().find(|r| r.method.label() == m).map(|r| r.final_eval).unwrap_or(0.0)
+        };
+        get(a) - get(b)
+    };
+    println!(
+        "\nasync-vs-sync gap: loglinear-sync = {:+.3}, recompute-sync = {:+.3}",
+        gap("loglinear", "sync"),
+        gap("recompute", "sync")
+    );
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Figure 4: policy entropy over training steps.
+//!
+//! Paper shape: all three methods show comparable, healthy entropy decay —
+//! the A-3PO approximation does not distort exploration dynamics.
+//!
+//!   cargo bench --bench fig4_entropy -- --preset setup1 --steps 80
+
+use a3po::bench::{comparison_runs, downsample, BenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig::from_env_args(
+        "fig4_entropy",
+        "Fig. 4 — policy entropy vs training step, 3 methods",
+    );
+    let runs = comparison_runs(&cfg)?;
+
+    println!("\n== Fig. 4: policy entropy over training ({}) ==", cfg.preset);
+    println!("series (step, entropy nats):");
+    for r in &runs {
+        let pts = downsample(&r.entropy_curve, 12);
+        let series: Vec<String> =
+            pts.iter().map(|(s, e)| format!("({s}, {e:.3})")).collect();
+        println!("  {:<12} {}", r.method.label(), series.join(" "));
+    }
+
+    println!("\n{:<12} {:>10} {:>10} {:>12}", "method", "start", "end", "decayed?");
+    for r in &runs {
+        let start = r.entropy_curve.first().map(|x| x.1).unwrap_or(f64::NAN);
+        let end = r.entropy_curve.last().map(|x| x.1).unwrap_or(f64::NAN);
+        println!(
+            "{:<12} {:>10.3} {:>10.3} {:>12}",
+            r.method.label(),
+            start,
+            end,
+            if end <= start { "yes" } else { "no" }
+        );
+    }
+    Ok(())
+}

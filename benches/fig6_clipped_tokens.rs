@@ -1,0 +1,44 @@
+//! Figure 6: number of clipped tokens per training step, all three methods.
+//!
+//! Paper shape: recompute and sync clip significantly more tokens than
+//! loglinear — A-3PO's contractive ratios naturally stay inside the trust
+//! region, wasting fewer tokens.
+//!
+//!   cargo bench --bench fig6_clipped_tokens -- --preset setup1
+
+use a3po::bench::{comparison_runs, downsample, BenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig::from_env_args(
+        "fig6_clipped_tokens",
+        "Fig. 6 — clipped tokens per training step, 3 methods",
+    );
+    let runs = comparison_runs(&cfg)?;
+
+    println!("\n== Fig. 6: clipped tokens per training step ({}) ==", cfg.preset);
+    println!("series (step, clipped tokens):");
+    for r in &runs {
+        let pts = downsample(&r.clip_curve, 12);
+        let series: Vec<String> =
+            pts.iter().map(|(s, c)| format!("({s}, {c:.0})")).collect();
+        println!("  {:<12} {}", r.method.label(), series.join(" "));
+    }
+
+    println!("\n{:<12} {:>14} {:>14}", "method", "total clipped", "mean / step");
+    let mut totals = vec![];
+    for r in &runs {
+        let total: f64 = r.clip_curve.iter().map(|x| x.1).sum();
+        let mean = total / r.clip_curve.len().max(1) as f64;
+        totals.push((r.method.label(), total));
+        println!("{:<12} {:>14.0} {:>14.2}", r.method.label(), total, mean);
+    }
+    let get = |m: &str| totals.iter().find(|(l, _)| *l == m).map(|(_, t)| *t).unwrap_or(0.0);
+    println!(
+        "\nloglinear clips {:.0} vs recompute {:.0} and sync {:.0}  \
+         (paper: loglinear clips least)",
+        get("loglinear"),
+        get("recompute"),
+        get("sync")
+    );
+    Ok(())
+}

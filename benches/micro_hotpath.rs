@@ -1,0 +1,126 @@
+//! L3 hot-path micro-benchmarks (criterion stand-in) — §Perf instrumentation.
+//!
+//! Covers every function on the coordinator's per-step path: sampling,
+//! log-softmax, Eq. 3 interpolation, GRPO advantages, batch assembly,
+//! buffer push/pop, tokenizer encode/decode, JSON serialisation, and
+//! literal packing.
+//!
+//!   cargo bench --bench micro_hotpath
+
+use a3po::bench::bench;
+use a3po::buffer::{Episode, EpisodeBuffer};
+use a3po::config::{AlphaSchedule, StalenessPolicy};
+use a3po::coordinator::advantage::grpo_group_advantages;
+use a3po::coordinator::batch::assemble;
+use a3po::coordinator::trainer::interp_prox_host;
+use a3po::env::{tokenizer, Problem};
+use a3po::runtime::{HostTensor, PresetConfig};
+use a3po::sampler::{log_softmax, sample, SamplerConfig};
+use a3po::util::json::Json;
+use a3po::util::rng::Pcg64;
+
+fn geo() -> PresetConfig {
+    PresetConfig {
+        name: "bench".into(),
+        vocab: 64,
+        seq_len: 48,
+        prompt_len: 16,
+        gen_len: 32,
+        group_size: 4,
+        rollout_batch: 32,
+        train_batch: 64,
+        n_minibatch: 4,
+        param_count: 0,
+        lr: 1e-3,
+        temperature: 1.0,
+    }
+}
+
+fn episode(rng: &mut Pcg64, version: u64, t: usize, s: usize) -> Episode {
+    Episode {
+        tokens: (0..s).map(|_| rng.below(64) as i32).collect(),
+        behav_logp: (0..t).map(|_| -rng.next_f32() * 3.0).collect(),
+        mask: (0..t).map(|i| if i >= 15 { 1.0 } else { 0.0 }).collect(),
+        reward: rng.next_f64(),
+        reward_exact: 0.0,
+        version,
+        group: 0,
+        text: "42".into(),
+        problem: Problem { prompt: "6*7=".into(), answer: "42".into() },
+    }
+}
+
+fn main() {
+    let mut rng = Pcg64::from_seed(0);
+    let g = geo();
+    let (s, t) = (g.seq_len, g.seq_len - 1);
+
+    println!("\n== L3 hot-path micro-benchmarks ==\n");
+
+    // Sampler path (called once per generated token per sequence).
+    let logits: Vec<f32> = (0..64).map(|_| rng.next_f32() * 8.0 - 4.0).collect();
+    let cfg = SamplerConfig::default();
+    let mut srng = Pcg64::from_seed(1);
+    bench("sampler::sample (V=64, full vocab)", 20_000, || {
+        std::hint::black_box(sample(&logits, &cfg, &mut srng));
+    });
+    bench("sampler::log_softmax (V=64)", 20_000, || {
+        std::hint::black_box(log_softmax(&logits, 1.0));
+    });
+
+    // Eq. 3 interpolation over a full train batch (the Fig. 1 op).
+    let behav: Vec<f32> = (0..g.train_batch * t).map(|_| -rng.next_f32()).collect();
+    let alpha: Vec<f32> = (0..g.train_batch).map(|_| rng.next_f32()).collect();
+    bench("trainer::interp_prox_host (64x47)", 5_000, || {
+        std::hint::black_box(interp_prox_host(&behav, &alpha, t));
+    });
+
+    // GRPO advantages.
+    let rewards = [0.2f64, 1.0, 0.0, 0.7];
+    bench("advantage::grpo_group_advantages (G=4)", 50_000, || {
+        std::hint::black_box(grpo_group_advantages(&rewards));
+    });
+
+    // Batch assembly from 16 groups of 4.
+    let groups: Vec<Vec<Episode>> = (0..16)
+        .map(|_| (0..4).map(|_| episode(&mut rng, 3, t, s)).collect())
+        .collect();
+    bench("batch::assemble (64 episodes)", 2_000, || {
+        std::hint::black_box(assemble(&groups, &g, 5, AlphaSchedule::InverseD, 0));
+    });
+
+    // Buffer push/pop throughput.
+    let buf = EpisodeBuffer::new(StalenessPolicy { max_staleness: 8, max_buffered: 100_000 });
+    let mut brng = Pcg64::from_seed(2);
+    bench("buffer::push+pop group (G=4)", 5_000, || {
+        let grp: Vec<Episode> = (0..4).map(|_| episode(&mut brng, 0, t, s)).collect();
+        buf.push_group(grp);
+        std::hint::black_box(buf.try_pop_groups(1, 0));
+    });
+
+    // Tokenizer.
+    bench("tokenizer::encode_prompt_padded", 50_000, || {
+        std::hint::black_box(tokenizer::encode_prompt_padded("((417+88)%53*9)%41=", 36));
+    });
+    bench("tokenizer::decode (32 tokens)", 50_000, || {
+        let toks: Vec<i32> = (4..36).collect();
+        std::hint::black_box(tokenizer::decode(&toks));
+    });
+
+    // JSON metrics serialisation (per-step logging cost).
+    let j = Json::obj(vec![
+        ("step", Json::Num(12.0)),
+        ("reward", Json::Num(0.734)),
+        ("train", Json::arr_f64(&[0.1, 2.0, 1.5, 0.5, 10.0, 1.0, 0.9, 0.01])),
+    ]);
+    bench("json::dump (step record)", 50_000, || {
+        std::hint::black_box(j.dump());
+    });
+
+    // Literal packing (host tensor -> XLA literal) for a train batch.
+    let tokens: Vec<i32> = (0..g.train_batch * s).map(|_| rng.below(64) as i32).collect();
+    bench("tensor::to_literal (64x48 i32)", 5_000, || {
+        let t = HostTensor::i32(vec![g.train_batch, s], tokens.clone());
+        std::hint::black_box(t.to_literal().unwrap());
+    });
+}

@@ -1,0 +1,50 @@
+//! Table 1: final evaluation reward and total training time for all three
+//! methods at equal epochs.
+//!
+//! Paper (Setup 1, GSM8K): rewards 0.791–0.797 across methods; times
+//! 2.36 h (sync) / 1.82 h (recompute) / 1.53 h (loglinear) — 1.5× speedup.
+//! Paper (Setup 2, DAPO-Math): async methods 0.623–0.627 vs sync 0.443;
+//! 26.15 / 16.10 / 14.54 h — 1.8× speedup.
+//!
+//!   cargo bench --bench table1_summary -- --preset setup1 --steps 80
+
+use a3po::bench::{comparison_runs, BenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig::from_env_args(
+        "table1_summary",
+        "Table 1 — final eval reward + total training time, 3 methods",
+    );
+    let runs = comparison_runs(&cfg)?;
+
+    println!("\n== Table 1: final eval reward and training time ({}) ==\n", cfg.preset);
+    println!(
+        "{:<20} {:>18} {:>20} {:>12}",
+        "Method", "Final Eval Reward", "Training Time (s)", "Speedup"
+    );
+    let sync_time = runs
+        .iter()
+        .find(|r| r.method.label() == "sync")
+        .map(|r| r.total_secs)
+        .unwrap_or(f64::NAN);
+    for r in &runs {
+        let label = match r.method.label() {
+            "sync" => "Sync GRPO",
+            "recompute" => "Recompute",
+            _ => "Loglinear (A-3PO)",
+        };
+        println!(
+            "{:<20} {:>18.3} {:>20.1} {:>11.2}x",
+            label,
+            r.final_eval,
+            r.total_secs,
+            sync_time / r.total_secs
+        );
+    }
+
+    println!("\npaper reference:");
+    println!("  Setup 1: 0.793 / 0.797 / 0.791   2.36h / 1.82h / 1.53h  (1.0x/1.3x/1.5x)");
+    println!("  Setup 2: 0.443 / 0.627 / 0.623  26.15h / 16.10h / 14.54h (1.0x/1.6x/1.8x)");
+    println!("\nexpected shape: loglinear fastest at comparable (or better) final reward.");
+    Ok(())
+}

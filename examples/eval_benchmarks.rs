@@ -1,0 +1,79 @@
+//! Benchmark evaluation (paper Table 2): load a trained checkpoint and
+//! measure pass@1 ± stderr on the frozen AIME24-like and MATH500-like
+//! suites.
+//!
+//! ```bash
+//! cargo run --release --example train_async -- --preset setup2 \
+//!     --method loglinear --steps 120
+//! cargo run --release --example eval_benchmarks -- --preset setup2 \
+//!     --ckpt runs/setup2_loglinear
+//! ```
+
+use std::path::PathBuf;
+
+use a3po::coordinator::eval::evaluate_pass_at_1;
+use a3po::env::suites;
+use a3po::runtime::{checkpoint, Runtime};
+use a3po::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let parsed = Args::new("eval_benchmarks", "Table-2 style benchmark evaluation")
+        .opt("preset", "setup2", "artifact preset")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt_optional("ckpt", "checkpoint base path (default: fresh init)")
+        .opt("samples", "1", "sampled attempts per problem (pass@1 repeats)")
+        .flag("greedy", "use greedy decoding")
+        .parse();
+
+    std::env::set_var("A3PO_QUIET", "1");
+    let dir = PathBuf::from(parsed.str("artifacts")).join(parsed.str("preset"));
+    let rt = Runtime::load(&dir, Some(&["decode", "init"]))?;
+    let geo = rt.manifest.preset.clone();
+
+    let snapshot = match parsed.get("ckpt") {
+        Some(base) => {
+            eprintln!("loading checkpoint {base}");
+            checkpoint::load(&PathBuf::from(base), &rt.manifest)?
+        }
+        None => {
+            eprintln!("no --ckpt: evaluating a freshly initialised policy (baseline floor)");
+            rt.init_params(0)?
+        }
+    };
+    let decode = rt.exec("decode")?;
+
+    println!(
+        "\n{:<16} {:>6} {:>20}   note",
+        "suite", "n", "pass@1 ± stderr"
+    );
+    let mut avg = 0.0;
+    let all = suites::table2_suites();
+    for suite in &all {
+        let fit = suites::fitting(
+            suite,
+            geo.prompt_len.saturating_sub(1),
+            geo.gen_len.saturating_sub(1),
+        );
+        let skipped = suite.problems.len() - fit.problems.len();
+        let (p, se) =
+            evaluate_pass_at_1(decode, &snapshot, &fit.problems, &geo, parsed.flag("greedy"))?;
+        avg += 100.0 * p / all.len() as f64;
+        println!(
+            "{:<16} {:>6} {:>12.2}% ± {:>4.2}%   {}",
+            suite.name,
+            fit.problems.len(),
+            100.0 * p,
+            100.0 * se,
+            if skipped > 0 {
+                format!("({skipped} problems exceed this preset's window)")
+            } else {
+                String::new()
+            }
+        );
+    }
+    println!("{:<16} {:>6} {:>12.2}%", "Average", "", avg);
+    println!(
+        "\npaper Table 2 (Setup 2): sync 43.4%, recompute 64.7%, loglinear (A-3PO) 66.6%"
+    );
+    Ok(())
+}

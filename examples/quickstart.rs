@@ -1,0 +1,39 @@
+//! Quickstart: the smallest end-to-end tour of the system.
+//!
+//! Loads the `tiny` preset's artifacts, warm-starts the policy with a few
+//! supervised steps, runs a handful of A-3PO training steps, and prints the
+//! metrics — all in under a minute on a laptop-class CPU.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use a3po::config::{Method, RunOptions};
+use a3po::coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let parsed = RunOptions::cli("quickstart", "minimal end-to-end A-3PO run").parse();
+    let mut opts = RunOptions::from_parsed(&parsed).map_err(anyhow::Error::msg)?;
+    // Quickstart defaults: tiny preset, short run, warm start included.
+    if parsed.str("preset") == "tiny" && opts.steps == 50 {
+        opts.steps = 12;
+    }
+    if opts.pretrain_steps == 0 {
+        opts.pretrain_steps = 30;
+    }
+    opts.method = Method::Loglinear;
+    opts.eval_every = 4;
+
+    eprintln!("== A-3PO quickstart: preset={} ==", opts.preset);
+    let out = coordinator::run(&opts)?;
+
+    println!("\n== phase breakdown ==\n{}", out.phases.report());
+    println!("== summary ==\n{}", out.summary_json(&opts).dump());
+    println!(
+        "\nfinal held-out exact-match reward: {:.3}  (total {:.1}s, prox mean {:.2}ms)",
+        out.final_eval,
+        out.total_secs,
+        1e3 * out.phases.mean("prox"),
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! End-to-end training driver — the repo's E2E validation workload.
+//!
+//! Runs the full system on a real (synthetic-data) training job: supervised
+//! warm start, then asynchronous RL with the chosen method, periodic
+//! held-out evaluation, JSONL metrics, phase breakdown, and a final
+//! checkpoint. This is the binary behind the EXPERIMENTS.md runs.
+//!
+//! ```bash
+//! # Setup-1 surrogate, all three methods (paper Fig. 2/3, Table 1):
+//! cargo run --release --example train_async -- --preset setup1 \
+//!     --method sync      --steps 120 --pretrain-steps 600
+//! cargo run --release --example train_async -- --preset setup1 \
+//!     --method recompute --steps 120 --pretrain-steps 600
+//! cargo run --release --example train_async -- --preset setup1 \
+//!     --method loglinear --steps 120 --pretrain-steps 600
+//! ```
+
+use a3po::config::RunOptions;
+use a3po::coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let parsed = RunOptions::cli(
+        "train_async",
+        "full asynchronous RL training driver (E2E validation workload)",
+    )
+    .flag("no-ckpt", "skip saving the final checkpoint")
+    .parse();
+    let mut opts = RunOptions::from_parsed(&parsed).map_err(anyhow::Error::msg)?;
+    if opts.pretrain_steps == 0 {
+        // The paper starts from instruct-tuned models; an RL run from a
+        // random policy mostly measures noise. Default to a real warm start.
+        opts.pretrain_steps = 400;
+    }
+
+    eprintln!(
+        "== train_async: preset={} method={} steps={} (pretrain {}) workers={} ==",
+        opts.preset,
+        opts.method.label(),
+        opts.steps,
+        opts.pretrain_steps,
+        opts.workers
+    );
+    let out = coordinator::run(&opts)?;
+
+    if !parsed.flag("no-ckpt") {
+        let p = coordinator::save_checkpoint(&opts, &out)?;
+        eprintln!("checkpoint: {}.{{json,bin}}", p.display());
+    }
+
+    println!("\n== phase breakdown ==\n{}", out.phases.report());
+    println!("== exec stats ==");
+    for (name, s) in out.runtime.exec_stats() {
+        if s.calls > 0 {
+            println!(
+                "  {:<16} {:>6} calls  {:>9.3}s total  {:>8.2}ms mean",
+                name,
+                s.calls,
+                s.total_secs,
+                1e3 * s.total_secs / s.calls as f64
+            );
+        }
+    }
+    println!("\n== summary ==\n{}", out.summary_json(&opts).dump());
+
+    // Reward trajectory (condensed) for quick eyeballing.
+    println!("\nreward curve (step, shaped, exact):");
+    let n = out.logger.steps.len();
+    for s in out.logger.steps.iter().step_by((n / 12).max(1)) {
+        println!("  {:>5}  {:.3}  {:.3}", s.step, s.reward, s.reward_exact);
+    }
+    println!("\neval curve (step, exact):");
+    for e in &out.logger.evals {
+        println!("  {:>5}  {:.3}", e.step, e.eval_reward);
+    }
+    Ok(())
+}

@@ -1,0 +1,246 @@
+"""AOT pipeline: lower every entry point to HLO *text* + write the manifest.
+
+Python runs only here (``make artifacts``); the Rust coordinator then loads
+``artifacts/<preset>/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+never touches Python again.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Every executable is lowered with ``return_tuple=True``; the Rust runtime
+unpacks the result tuple positionally using the signatures recorded in
+``manifest.json``.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --preset tiny --preset setup1
+    python -m compile.aot --out-dir ../artifacts --all
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import PRESETS, RunConfig, N_METRICS, METRIC_NAMES, get_preset
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _sig(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class EntryPoint:
+    """A jax callable plus its flat positional I/O signature."""
+
+    def __init__(self, name, fn, inputs, outputs):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs    # list of (name, shape, dtype-str)
+        self.outputs = outputs  # list of (name, shape, dtype-str)
+
+    def example_args(self):
+        dt = {"f32": jnp.float32, "i32": jnp.int32}
+        return [_spec(s, dt[d]) for (_, s, d) in self.inputs]
+
+    def manifest_entry(self, filename):
+        return {
+            "file": filename,
+            "inputs": [_sig(n, s, d) for (n, s, d) in self.inputs],
+            "outputs": [_sig(n, s, d) for (n, s, d) in self.outputs],
+        }
+
+
+def build_entry_points(cfg: RunConfig) -> list[EntryPoint]:
+    mc = cfg.model
+    names = M.param_names(mc)
+    specs = M.param_specs(mc)
+    n = len(names)
+    S, T, V = cfg.seq_len, cfg.seq_len - 1, mc.vocab
+    B, Br = cfg.train_batch, cfg.rollout_batch
+
+    p_in = [(f"param.{nm}", shp, "f32") for nm, shp in specs]
+    m_in = [(f"adam_m.{nm}", shp, "f32") for nm, shp in specs]
+    v_in = [(f"adam_v.{nm}", shp, "f32") for nm, shp in specs]
+
+    def unflat(args, k):
+        return M.unflatten_params(mc, args[k * n:(k + 1) * n])
+
+    eps: list[EntryPoint] = []
+
+    # --- init(seed) -> params ---------------------------------------------
+    def init_fn(seed):
+        p = M.init_params(mc, seed)
+        return tuple(M.flatten_params(mc, p))
+
+    eps.append(EntryPoint(
+        "init", init_fn,
+        [("seed", (), "i32")],
+        [(f"param.{nm}", shp, "f32") for nm, shp in specs],
+    ))
+
+    # --- decode(params, tokens, pos) -> logits ----------------------------
+    def decode_fn(*args):
+        p = unflat(args, 0)
+        tokens, pos = args[n], args[n + 1]
+        return (M.decode_logits(mc, p, tokens, pos),)
+
+    eps.append(EntryPoint(
+        "decode", decode_fn,
+        p_in + [("tokens", (Br, S), "i32"), ("pos", (), "i32")],
+        [("logits", (Br, V), "f32")],
+    ))
+
+    # --- prox_forward(params, tokens) -> logp -----------------------------
+    # The expensive extra forward pass of decoupled PPO ("recompute"); also
+    # reused as eval_logp. Its wall-clock per call is Fig. 1's 'recompute'.
+    def prox_fn(*args):
+        p = unflat(args, 0)
+        tokens = args[n]
+        logp, _ent = M.sequence_logp(mc, p, tokens)
+        return (logp,)
+
+    eps.append(EntryPoint(
+        "prox_forward", prox_fn,
+        p_in + [("tokens", (B, S), "i32")],
+        [("logp", (B, T), "f32")],
+    ))
+
+    # --- train_{sync,recompute,loglinear} ---------------------------------
+    batch_in = [
+        ("step", (), "i32"),
+        ("tokens", (B, S), "i32"),
+        ("mask", (B, T), "f32"),
+        ("behav_logp", (B, T), "f32"),
+        ("adv", (B, T), "f32"),
+        ("alpha", (B,), "f32"),
+        ("prox_logp", (B, T), "f32"),
+    ]
+    state_out = (
+        [(f"param.{nm}", shp, "f32") for nm, shp in specs]
+        + [(f"adam_m.{nm}", shp, "f32") for nm, shp in specs]
+        + [(f"adam_v.{nm}", shp, "f32") for nm, shp in specs]
+        + [("step", (), "i32"), ("metrics", (N_METRICS,), "f32")]
+    )
+
+    def make_train(mode):
+        def fn(*args):
+            p, m_, v_ = unflat(args, 0), unflat(args, 1), unflat(args, 2)
+            step, tokens, mask, behav, adv, alpha, prox = args[3 * n:3 * n + 7]
+            p2, m2, v2, step2, metrics = M.train_step(
+                cfg, mode, p, m_, v_, step, tokens, mask, behav, adv, alpha, prox
+            )
+            return (
+                *M.flatten_params(mc, p2),
+                *M.flatten_params(mc, m2),
+                *M.flatten_params(mc, v2),
+                step2,
+                metrics,
+            )
+        return fn
+
+    for method, mode in M.MODES.items():
+        eps.append(EntryPoint(
+            f"train_{method}", make_train(mode),
+            p_in + m_in + v_in + batch_in,
+            state_out,
+        ))
+
+    # --- pretrain(params, m, v, step, tokens, mask) -----------------------
+    def pretrain_fn(*args):
+        p, m_, v_ = unflat(args, 0), unflat(args, 1), unflat(args, 2)
+        step, tokens, mask = args[3 * n:3 * n + 3]
+        p2, m2, v2, step2, metrics = M.pretrain_step(cfg, p, m_, v_, step, tokens, mask)
+        return (
+            *M.flatten_params(mc, p2),
+            *M.flatten_params(mc, m2),
+            *M.flatten_params(mc, v2),
+            step2,
+            metrics,
+        )
+
+    eps.append(EntryPoint(
+        "pretrain", pretrain_fn,
+        p_in + m_in + v_in + [
+            ("step", (), "i32"),
+            ("tokens", (B, S), "i32"),
+            ("mask", (B, T), "f32"),
+        ],
+        state_out,
+    ))
+
+    return eps
+
+
+def lower_preset(cfg: RunConfig, out_dir: str, only: set[str] | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text-v1",
+        "preset": cfg.name,
+        "config": cfg.to_json_dict(),
+        "params": [
+            {"name": nm, "shape": list(shp), "dtype": "f32"}
+            for nm, shp in M.param_specs(cfg.model)
+        ],
+        "metric_names": list(METRIC_NAMES),
+        "executables": {},
+    }
+    for ep in build_entry_points(cfg):
+        if only and ep.name not in only:
+            continue
+        t0 = time.time()
+        lowered = jax.jit(ep.fn).lower(*ep.example_args())
+        text = to_hlo_text(lowered)
+        fname = f"{ep.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        entry = ep.manifest_entry(fname)
+        entry["sha256_16"] = digest
+        entry["hlo_bytes"] = len(text)
+        manifest["executables"][ep.name] = entry
+        print(f"[aot:{cfg.name}] {ep.name:16s} {len(text)/1e6:7.2f} MB  "
+              f"{time.time()-t0:6.1f}s")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", action="append", default=[])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--entry", action="append", default=[],
+                    help="lower only these entry points (debug)")
+    args = ap.parse_args()
+    presets = list(PRESETS) if args.all else (args.preset or ["tiny"])
+    only = set(args.entry) or None
+    for name in presets:
+        cfg = get_preset(name)
+        lower_preset(cfg, os.path.join(args.out_dir, name), only)
+
+
+if __name__ == "__main__":
+    main()

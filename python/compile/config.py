@@ -1,0 +1,167 @@
+"""Model / run configuration shared between the JAX compile path and the
+Rust coordinator.
+
+The Rust side never imports this module: ``aot.py`` serialises everything the
+coordinator needs (shapes, dtypes, parameter order, executable signatures)
+into ``artifacts/<preset>/manifest.json``.
+
+Presets mirror the paper's two experimental setups, scaled to this testbed
+(see DESIGN.md "Paper -> testbed substitutions"):
+
+* ``setup1``  — surrogate for Qwen2.5-1.5B-Instruct on GSM8K
+* ``setup2``  — surrogate for Qwen3-8B on DAPO-Math-17k (bigger model,
+  longer sequences, harder task)
+* ``tiny``    — CI-sized preset used by unit/integration tests
+* ``big``     — ~100M-parameter preset for the end-to-end example driver
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+# Vocabulary layout — must match rust/src/env/tokenizer.rs exactly.
+# 0..=2 specials, 3 '=', 4..=13 digits, 14.. operators/punctuation.
+VOCAB_SIZE = 64
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+
+# Metric vector layout produced by every train executable -- must match
+# rust/src/metrics/mod.rs::TRAIN_METRIC_NAMES.
+METRIC_NAMES = (
+    "loss",
+    "entropy",
+    "max_is_weight",
+    "min_is_weight",
+    "clipped_tokens",
+    "mean_ratio",
+    "grad_norm",
+    "approx_kl",
+)
+N_METRICS = len(METRIC_NAMES)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer hyper-parameters."""
+
+    vocab: int = VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 48
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, v, s, f = self.d_model, self.vocab, self.max_seq, self.d_ff
+        per_layer = 4 * d * d + 2 * d * f + f + d + 4 * d  # attn + mlp + lns
+        return v * d + s * d + self.n_layers * per_layer + 2 * d + d * v
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """One experimental setup: model + batching + optimisation params."""
+
+    name: str
+    model: ModelConfig
+    # Rollout geometry. ``group_size`` responses are sampled per prompt
+    # (GRPO), so rollout batches are multiples of the group size.
+    prompt_len: int = 16
+    gen_len: int = 16
+    group_size: int = 4
+    rollout_batch: int = 32          # sequences generated per decode call
+    # Training geometry. The paper uses 4 gradient updates per step.
+    train_batch: int = 64            # sequences per training step
+    n_minibatch: int = 4
+    # Optimisation (paper: Adam, lr 8.5e-6; scaled for surrogate scale).
+    # ``lr`` drives the supervised warm start; ``rl_lr`` drives the RL
+    # updates (much lower, like the paper's post-training regime).
+    lr: float = 3e-4
+    rl_lr: float = 5e-5
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    clip_eps: float = 0.2
+    grad_clip: float = 1.0
+    entropy_bonus: float = 0.0
+    # Sampling (paper: temperature 1.0, top-p 1.0, full-vocab top-k).
+    temperature: float = 1.0
+
+    @property
+    def seq_len(self) -> int:
+        s = self.prompt_len + self.gen_len
+        assert s <= self.model.max_seq, (s, self.model.max_seq)
+        return s
+
+    @property
+    def minibatch(self) -> int:
+        assert self.train_batch % self.n_minibatch == 0
+        return self.train_batch // self.n_minibatch
+
+    def to_json_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["model"]["head_dim"] = self.model.head_dim
+        d["model"]["param_count"] = self.model.param_count()
+        d["seq_len"] = self.seq_len
+        d["minibatch"] = self.minibatch
+        d["metric_names"] = list(METRIC_NAMES)
+        return d
+
+
+PRESETS: dict[str, RunConfig] = {
+    # CI-sized: fast to lower, fast to run; used by pytest + cargo test.
+    "tiny": RunConfig(
+        name="tiny",
+        model=ModelConfig(d_model=64, n_layers=2, n_heads=4, d_ff=128, max_seq=32),
+        prompt_len=12,
+        gen_len=8,
+        rollout_batch=16,
+        train_batch=16,
+        lr=1e-3,
+        rl_lr=2e-4,
+    ),
+    # Qwen2.5-1.5B on GSM8K surrogate: 2-step arithmetic, short answers.
+    "setup1": RunConfig(
+        name="setup1",
+        model=ModelConfig(d_model=192, n_layers=4, n_heads=6, d_ff=768, max_seq=48),
+        prompt_len=16,
+        gen_len=10,
+        rollout_batch=32,
+        train_batch=64,
+        lr=4e-4,
+    ),
+    # Qwen3-8B on DAPO-Math-17k surrogate: longer chains, bigger model.
+    "setup2": RunConfig(
+        name="setup2",
+        model=ModelConfig(d_model=256, n_layers=6, n_heads=8, d_ff=1024, max_seq=64),
+        prompt_len=36,
+        gen_len=12,
+        rollout_batch=32,
+        train_batch=64,
+        lr=3e-4,
+    ),
+    # ~100M-parameter configuration for the end-to-end driver.
+    "big": RunConfig(
+        name="big",
+        model=ModelConfig(d_model=768, n_layers=12, n_heads=12, d_ff=3072, max_seq=64),
+        prompt_len=36,
+        gen_len=12,
+        rollout_batch=16,
+        train_batch=32,
+        lr=2e-4,
+    ),
+}
+
+
+def get_preset(name: str) -> RunConfig:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise SystemExit(
+            f"unknown preset {name!r}; available: {sorted(PRESETS)}"
+        ) from None

@@ -1,0 +1,158 @@
+"""Pallas kernel: fused decoupled-PPO clipped loss with A-3PO interpolation.
+
+One VMEM-resident elementwise pass over ``[block_b, block_t]`` token tiles
+computes, per token:
+
+  * the proximal anchor (paper Eq. 3, mode-dependent; see below),
+  * the importance weight  ``iw = pi_prox / pi_behav``  (Fig. 5 stats),
+  * the trust-region ratio ``r = pi_theta / pi_prox``   (Eq. 2),
+  * the clipped objective and the active-branch flag    (Fig. 6 stats),
+  * the analytic gradient ``d obj / d theta_logp`` used by the custom VJP.
+
+Modes (static, trace-time — shared with ref.py):
+  MODE_COUPLED  sync GRPO          anchor = behaviour policy
+  MODE_FROZEN   decoupled recompute anchor = explicit prox_logp input
+  MODE_INTERP   A-3PO loglinear     anchor = a*behav + (1-a)*theta, detached
+
+The anchor is *frozen* in every mode (the paper detaches pi_prox), so the
+objective's only gradient path is the explicit ``theta_logp`` in the ratio;
+on the unclipped branch ``d obj/d theta_logp = iw * adv * r`` and zero on the
+clipped branch. The custom VJP applies exactly that, making the kernel safe
+under ``jax.grad`` without autodiff through Pallas.
+
+Correctness oracle: ``ref.decoupled_loss_ref`` (pytest + hypothesis sweeps in
+python/tests/test_kernel_loss.py, including grad-vs-finite-difference).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MODE_COUPLED, MODE_FROZEN, MODE_INTERP  # noqa: F401 (re-export)
+
+DEFAULT_BLOCK_B = 32
+DEFAULT_BLOCK_T = 128
+
+# Output slots of the fused kernel, in order.
+OUT_OBJ, OUT_IW, OUT_RATIO, OUT_CLIPPED, OUT_DTHETA = range(5)
+
+
+def _loss_kernel(theta_ref, behav_ref, prox_ref, alpha_ref, adv_ref,
+                 obj_ref, iw_ref, ratio_ref, clip_ref, dtheta_ref,
+                 *, mode: int, clip_eps: float):
+    theta = theta_ref[...].astype(jnp.float32)
+    behav = behav_ref[...].astype(jnp.float32)
+
+    if mode == MODE_COUPLED:
+        prox = behav
+    elif mode == MODE_FROZEN:
+        prox = prox_ref[...].astype(jnp.float32)
+    else:  # MODE_INTERP — Eq. 3, alpha broadcast per sequence row.
+        a = alpha_ref[...].astype(jnp.float32)[:, None]
+        prox = a * behav + (1.0 - a) * theta
+
+    adv = adv_ref[...].astype(jnp.float32)
+    iw = jnp.exp(prox - behav)
+    ratio = jnp.exp(theta - prox)
+    unclipped = ratio * adv
+    clipped_term = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    is_clipped = (unclipped > clipped_term).astype(jnp.float32)
+
+    obj_ref[...] = iw * jnp.minimum(unclipped, clipped_term)
+    iw_ref[...] = iw
+    ratio_ref[...] = ratio
+    clip_ref[...] = is_clipped
+    # Analytic gradient with the anchor detached (all modes freeze pi_prox).
+    dtheta_ref[...] = iw * adv * ratio * (1.0 - is_clipped)
+
+
+def _pick(n: int, block: int) -> int:
+    b = min(block, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _loss_call(theta, behav, prox, alpha, adv, mode, clip_eps, block_b, block_t):
+    bsz, tlen = theta.shape
+    bb, bt = _pick(bsz, block_b), _pick(tlen, block_t)
+    grid = (bsz // bb, tlen // bt)
+    tile = pl.BlockSpec((bb, bt), lambda i, j: (i, j))
+    row = pl.BlockSpec((bb,), lambda i, j: (i,))
+    outs = pl.pallas_call(
+        functools.partial(_loss_kernel, mode=mode, clip_eps=clip_eps),
+        grid=grid,
+        in_specs=[tile, tile, tile, row, tile],
+        out_specs=[tile] * 5,
+        out_shape=[jax.ShapeDtypeStruct((bsz, tlen), jnp.float32)] * 5,
+        interpret=True,
+    )(theta, behav, prox, alpha, adv)
+    return outs
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _fused_loss(theta, behav, prox, alpha, adv, mode, clip_eps, block_b, block_t):
+    return tuple(_loss_call(theta, behav, prox, alpha, adv, mode, clip_eps,
+                            block_b, block_t))
+
+
+def _fused_loss_fwd(theta, behav, prox, alpha, adv, mode, clip_eps, block_b, block_t):
+    outs = _loss_call(theta, behav, prox, alpha, adv, mode, clip_eps,
+                      block_b, block_t)
+    return tuple(outs), outs[OUT_DTHETA]
+
+
+def _fused_loss_bwd(mode, clip_eps, block_b, block_t, dtheta_tok, cts):
+    # Only the per-token objective is differentiable; the stats outputs
+    # (iw / ratio / clipped / dtheta) are metrics and their cotangents are
+    # ignored by contract (the training loss never consumes them).
+    g_obj = cts[OUT_OBJ]
+    d_theta = g_obj * dtheta_tok
+    zeros = jnp.zeros_like(dtheta_tok)
+    zrow = jnp.zeros(dtheta_tok.shape[0], jnp.float32)
+    return d_theta, zeros, zeros, zrow, zeros
+
+
+_fused_loss.defvjp(_fused_loss_fwd, _fused_loss_bwd)
+
+
+def fused_decoupled_loss(
+    theta_logp,
+    behav_logp,
+    adv,
+    mask,
+    *,
+    mode: int,
+    clip_eps: float,
+    prox_logp=None,
+    alpha=None,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_t: int = DEFAULT_BLOCK_T,
+):
+    """Fused decoupled clipped loss (paper Eq. 2 + Eq. 3) and stats.
+
+    Shapes: theta/behav/adv/mask f32[B, T]; alpha f32[B]; prox f32[B, T].
+    Returns ``(loss, stats)`` where ``loss`` is the masked mean negative
+    objective and ``stats`` is a dict of per-token f32[B, T] tensors:
+    ``is_weight``, ``ratio``, ``clipped`` (all stop-gradient metrics).
+    """
+    bsz, tlen = theta_logp.shape
+    if prox_logp is None:
+        prox_logp = jnp.zeros((bsz, tlen), jnp.float32)
+    if alpha is None:
+        alpha = jnp.zeros((bsz,), jnp.float32)
+    outs = _fused_loss(theta_logp, behav_logp, prox_logp, alpha, adv,
+                       mode, clip_eps, block_b, block_t)
+    obj = outs[OUT_OBJ]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(obj * mask) / denom
+    stats = {
+        "is_weight": jax.lax.stop_gradient(outs[OUT_IW]),
+        "ratio": jax.lax.stop_gradient(outs[OUT_RATIO]),
+        "clipped": jax.lax.stop_gradient(outs[OUT_CLIPPED]),
+    }
+    return loss, stats

@@ -1,0 +1,114 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth for correctness: pytest/hypothesis sweeps compare
+the kernels in ``token_logprob.py`` and ``a3po_loss.py`` against these
+implementations across shapes and dtypes. They are also used directly by the
+theory tests (sandwich / contractive properties, Appendix A of the paper).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Loss-kernel modes -- static trace-time selector, shared with a3po_loss.py.
+MODE_COUPLED = 0   # sync GRPO: anchor == behaviour policy (standard PPO clip)
+MODE_FROZEN = 1    # decoupled "recompute": prox logp is an explicit input
+MODE_INTERP = 2    # A-3PO "loglinear": prox = a*behav + (1-a)*theta (Eq. 3)
+
+
+def token_logprob_ref(logits: jnp.ndarray, targets: jnp.ndarray):
+    """Log-prob of ``targets`` under ``logits`` plus the policy entropy.
+
+    logits: f32[..., V]; targets: i32[...] -> (logp[...], entropy[...]).
+    entropy = logsumexp(z) - sum softmax(z) * z  (nats).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    ex = jnp.exp(logits - m)
+    denom = jnp.sum(ex, axis=-1, keepdims=True)
+    lse = jnp.squeeze(m + jnp.log(denom), axis=-1)
+    tgt_logit = jnp.take_along_axis(
+        logits, targets[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    logp = tgt_logit - lse
+    p = ex / denom
+    entropy = lse - jnp.sum(p * logits, axis=-1)
+    return logp, entropy
+
+
+def interp_prox_logp(behav_logp, theta_logp, alpha):
+    """Eq. 3: log pi_prox = alpha*log pi_behav + (1-alpha)*log pi_theta.
+
+    ``alpha`` broadcasts per sequence ([B] against [B, T]).
+    """
+    a = alpha[..., None] if alpha.ndim + 1 == behav_logp.ndim else alpha
+    return a * behav_logp + (1.0 - a) * theta_logp
+
+
+def staleness_alpha(d):
+    """Eq. 4: alpha = 0 when d == 0, 1/d when d >= 1 (d = version lag)."""
+    d = jnp.asarray(d, jnp.float32)
+    return jnp.where(d >= 1.0, 1.0 / jnp.maximum(d, 1.0), 0.0)
+
+
+def decoupled_loss_ref(
+    theta_logp,
+    behav_logp,
+    adv,
+    mask,
+    *,
+    mode: int,
+    clip_eps: float,
+    prox_logp=None,
+    alpha=None,
+):
+    """Decoupled PPO clipped objective (paper Eq. 2) + per-token stats.
+
+    Returns a dict with:
+      loss          -- scalar, -(sum obj * mask) / max(sum mask, 1)
+      obj           -- f32[B, T] per-token objective (before masking)
+      is_weight     -- f32[B, T] importance weight pi_prox / pi_behav
+      ratio         -- f32[B, T] trust-region ratio pi_theta / pi_prox
+      clipped       -- f32[B, T] 1.0 where the clipped branch is active
+      dtheta        -- f32[B, T] analytic d obj / d theta_logp (for VJP tests)
+
+    In MODE_INTERP the anchor is detached (the paper freezes pi_prox), so
+    gradients flow only through the explicit ``theta_logp`` in ``ratio``.
+    """
+    theta_logp = theta_logp.astype(jnp.float32)
+    behav_logp = behav_logp.astype(jnp.float32)
+    if mode == MODE_COUPLED:
+        prox = behav_logp
+    elif mode == MODE_FROZEN:
+        assert prox_logp is not None
+        prox = prox_logp.astype(jnp.float32)
+    elif mode == MODE_INTERP:
+        assert alpha is not None
+        prox = interp_prox_logp(behav_logp, theta_logp, alpha.astype(jnp.float32))
+    else:  # pragma: no cover - defensive
+        raise ValueError(f"bad mode {mode}")
+
+    log_iw = prox - behav_logp
+    is_weight = jnp.exp(log_iw)
+    ratio = jnp.exp(theta_logp - prox)
+    unclipped = ratio * adv
+    clip_ratio = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    clipped_term = clip_ratio * adv
+    obj = is_weight * jnp.minimum(unclipped, clipped_term)
+    clipped = (unclipped > clipped_term).astype(jnp.float32)
+
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(obj * mask) / denom
+
+    # Analytic per-token gradient of ``obj`` w.r.t. theta_logp with the
+    # anchor detached: d obj = iw * adv * ratio on the unclipped branch.
+    dtheta = is_weight * adv * ratio * (1.0 - clipped)
+    return {
+        "loss": loss,
+        "obj": obj,
+        "is_weight": is_weight,
+        "ratio": ratio,
+        "clipped": clipped,
+        "dtheta": dtheta,
+        "prox_logp": prox,
+    }

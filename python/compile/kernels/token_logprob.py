@@ -1,0 +1,177 @@
+"""Pallas kernel: fused token log-prob + policy entropy over vocab tiles.
+
+This is the L1 compute hot-spot of the training path: for every token
+position we need ``log pi(target | prefix)`` (for the PPO ratio) *and* the
+policy entropy (Fig. 4 of the paper) from the same ``[rows, V]`` logits.
+
+TPU adaptation (DESIGN.md "Hardware-Adaptation"): instead of a CUDA-style
+row-per-warp reduction, the kernel tiles the vocabulary axis into
+VMEM-resident ``[block_r, block_v]`` blocks and maintains an *online softmax*
+(flash-attention-style running max / running sum-exp / running
+``sum exp*logit``) across vocab tiles, so a full vocab row never needs to be
+resident. The BlockSpec grid expresses the HBM<->VMEM schedule.
+
+The backward pass is a second single-sweep Pallas kernel that reuses the
+forward's logsumexp residual: ``dlogits = (onehot(tgt) - softmax) * g``.
+Entropy is a metrics output only and is non-differentiable by contract.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); interpret mode lowers to plain HLO so the kernel runs inside
+the AOT'd executables. Correctness: ``ref.token_logprob_ref`` via
+pytest/hypothesis (python/tests/test_kernel_logprob.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. Rows tile at 8 sublanes * n; vocab tiles at 128 lanes
+# (the TPU vector-register shape is (8, 128) for f32). On this testbed the
+# kernels run under interpret=True, so these choices shape the HLO loop
+# structure rather than real VMEM residency; the VMEM-footprint estimate for
+# a real TPU is recorded in DESIGN.md §Perf.
+DEFAULT_BLOCK_R = 64
+DEFAULT_BLOCK_V = 128
+
+_NEG_INF = -1e30
+
+
+def _fwd_kernel(logits_ref, tgt_ref, logp_ref, ent_ref, lse_ref,
+                m_ref, s_ref, dot_ref, tl_ref, *, block_v: int):
+    """Grid = (rows/block_r, V/block_v); vocab axis is innermost."""
+    j = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        tl_ref[...] = jnp.zeros_like(tl_ref)
+
+    z = logits_ref[...].astype(jnp.float32)          # [br, bv]
+    cols = j * block_v + jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(z, axis=1))
+    scale = jnp.exp(m_old - m_new)
+    ex = jnp.exp(z - m_new[:, None])
+    s_ref[...] = s_ref[...] * scale + jnp.sum(ex, axis=1)
+    dot_ref[...] = dot_ref[...] * scale + jnp.sum(ex * z, axis=1)
+    m_ref[...] = m_new
+
+    # The target column lands in exactly one vocab tile; accumulate it.
+    tgt = tgt_ref[...].astype(jnp.int32)
+    hit = jnp.where(cols == tgt[:, None], z, 0.0)
+    tl_ref[...] = tl_ref[...] + jnp.sum(hit, axis=1)
+
+    @pl.when(j == nv - 1)
+    def _finish():
+        lse = m_ref[...] + jnp.log(s_ref[...])
+        logp_ref[...] = tl_ref[...] - lse
+        ent_ref[...] = lse - dot_ref[...] / s_ref[...]
+        lse_ref[...] = lse
+
+
+def _bwd_kernel(logits_ref, tgt_ref, lse_ref, g_ref, dlogits_ref, *, block_v: int):
+    """Single sweep: dlogits = (onehot(tgt) - softmax(logits)) * g."""
+    j = pl.program_id(1)
+    z = logits_ref[...].astype(jnp.float32)
+    cols = j * block_v + jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    p = jnp.exp(z - lse_ref[...][:, None])
+    onehot = (cols == tgt_ref[...].astype(jnp.int32)[:, None]).astype(jnp.float32)
+    dlogits_ref[...] = (onehot - p) * g_ref[...][:, None]
+
+
+def _pick_blocks(rows: int, vocab: int, block_r: int, block_v: int):
+    br = min(block_r, rows)
+    while rows % br:
+        br -= 1
+    bv = min(block_v, vocab)
+    while vocab % bv:
+        bv -= 1
+    return br, bv
+
+
+def _fwd_call(logits, targets, block_r, block_v):
+    rows, vocab = logits.shape
+    br, bv = _pick_blocks(rows, vocab, block_r, block_v)
+    grid = (rows // br, vocab // bv)
+    row_spec = pl.BlockSpec((br,), lambda i, j: (i,))
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, block_v=bv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bv), lambda i, j: (i, j)),
+            row_spec,
+        ],
+        out_specs=[row_spec] * 7,
+        out_shape=[jax.ShapeDtypeStruct((rows,), jnp.float32)] * 7,
+        interpret=True,
+    )(logits, targets)
+    logp, ent, lse = out[0], out[1], out[2]
+    return logp, ent, lse
+
+
+def _bwd_call(logits, targets, lse, g, block_r, block_v):
+    rows, vocab = logits.shape
+    br, bv = _pick_blocks(rows, vocab, block_r, block_v)
+    grid = (rows // br, vocab // bv)
+    row_spec = pl.BlockSpec((br,), lambda i, j: (i,))
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, block_v=bv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bv), lambda i, j: (i, j)),
+            row_spec,
+            row_spec,
+            row_spec,
+        ],
+        out_specs=pl.BlockSpec((br, bv), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, vocab), jnp.float32),
+        interpret=True,
+    )(logits, targets, lse, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _token_logprob2d(logits, targets, block_r, block_v):
+    logp, ent, _ = _fwd_call(logits, targets, block_r, block_v)
+    return logp, ent
+
+
+def _token_logprob2d_fwd(logits, targets, block_r, block_v):
+    logp, ent, lse = _fwd_call(logits, targets, block_r, block_v)
+    return (logp, ent), (logits, targets, lse)
+
+
+def _token_logprob2d_bwd(block_r, block_v, res, cts):
+    logits, targets, lse = res
+    g_logp, _g_ent = cts  # entropy is a metric output: non-differentiable.
+    dlogits = _bwd_call(logits, targets, lse, g_logp, block_r, block_v)
+    return dlogits, None
+
+
+_token_logprob2d.defvjp(_token_logprob2d_fwd, _token_logprob2d_bwd)
+
+
+def token_logprob(logits, targets, *, block_r: int = DEFAULT_BLOCK_R,
+                  block_v: int = DEFAULT_BLOCK_V):
+    """Fused log-prob + entropy. logits f32[..., V], targets i32[...].
+
+    Returns ``(logp[...], entropy[...])`` (f32). Differentiable w.r.t.
+    ``logits`` through ``logp`` only; ``entropy``'s cotangent is ignored
+    (it is a stop-gradient metric by contract).
+    """
+    batch_shape = logits.shape[:-1]
+    vocab = logits.shape[-1]
+    rows = 1
+    for s in batch_shape:
+        rows *= s
+    z2 = logits.reshape(rows, vocab)
+    t2 = targets.reshape(rows).astype(jnp.int32)
+    logp, ent = _token_logprob2d(z2, t2, block_r, block_v)
+    return logp.reshape(batch_shape), jax.lax.stop_gradient(ent.reshape(batch_shape))

@@ -1,0 +1,295 @@
+"""L2: the policy model — a decoder-only transformer in pure JAX.
+
+This file defines everything that gets AOT-lowered to HLO text by
+``aot.py``: parameter init, the forward pass, single-position decode (the
+rollout engine's inner loop), the proximal forward pass (the expensive step
+A-3PO removes), and the three training-step variants. The per-token loss and
+log-prob/entropy computations call the L1 Pallas kernels.
+
+Parameter pytrees are flat ``dict[str, Array]`` with a deterministic name
+order (``param_names``); the same order is serialised into the artifact
+manifest so the Rust coordinator can pack/unpack literals positionally.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, RunConfig, N_METRICS
+from .kernels.token_logprob import token_logprob
+from .kernels.a3po_loss import (
+    fused_decoupled_loss,
+    MODE_COUPLED,
+    MODE_FROZEN,
+    MODE_INTERP,
+)
+
+# ---------------------------------------------------------------------------
+# Parameters
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the manifest's parameter order."""
+    d, v, s, f = cfg.d_model, cfg.vocab, cfg.max_seq, cfg.d_ff
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (v, d)),
+        ("pos_embed", (s, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1_scale", (d,)),
+            (p + "ln1_bias", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ln2_scale", (d,)),
+            (p + "ln2_bias", (d,)),
+            (p + "w1", (d, f)),
+            (p + "b1", (f,)),
+            (p + "w2", (f, d)),
+            (p + "b2", (d,)),
+        ]
+    specs += [
+        ("lnf_scale", (d,)),
+        ("lnf_bias", (d,)),
+        ("unembed", (d, v)),
+    ]
+    return specs
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    return [n for n, _ in param_specs(cfg)]
+
+
+def init_params(cfg: ModelConfig, seed) -> dict[str, jnp.ndarray]:
+    """Scaled-normal init. ``seed`` may be a traced i32 scalar (AOT entry)."""
+    key = jax.random.PRNGKey(seed)
+    params: dict[str, jnp.ndarray] = {}
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    for (name, shape), k in zip(specs, keys):
+        base = name.rsplit(".", 1)[-1]
+        if base.startswith("ln") or base.endswith("_scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif base.endswith("_bias") or base.startswith("b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif base in ("wo", "w2"):
+            # residual-branch outputs scaled down by depth (GPT-2 style)
+            std = 0.02 / jnp.sqrt(2.0 * cfg.n_layers)
+            params[name] = std * jax.random.normal(k, shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: dict) -> list[jnp.ndarray]:
+    return [params[n] for n in param_names(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> dict[str, jnp.ndarray]:
+    names = param_names(cfg)
+    assert len(names) == len(flat), (len(names), len(flat))
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(x, p, prefix: str, cfg: ModelConfig):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split(w):
+        y = x @ p[prefix + w]                       # [b, s, d]
+        return y.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # [b, h, s, hd]
+
+    q, k, v = split("wq"), split("wk"), split("wv")
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scores = jnp.where(causal[None, None] > 0, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ p[prefix + "wo"]
+
+
+def forward_logits(cfg: ModelConfig, params: dict, tokens) -> jnp.ndarray:
+    """tokens i32[B, S] -> logits f32[B, S, V] (pre-LN transformer)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos_embed"][None, :s, :]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        hx = _layernorm(x, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        x = x + _attention(hx, params, p, cfg)
+        hm = _layernorm(x, params[p + "ln2_scale"], params[p + "ln2_bias"])
+        hm = jax.nn.gelu(hm @ params[p + "w1"] + params[p + "b1"])
+        x = x + hm @ params[p + "w2"] + params[p + "b2"]
+    x = _layernorm(x, params["lnf_scale"], params["lnf_bias"])
+    return x @ params["unembed"]
+
+
+def sequence_logp(cfg: ModelConfig, params: dict, tokens):
+    """Per-position next-token logp/entropy via the L1 kernel.
+
+    tokens i32[B, S] -> (logp f32[B, S-1], entropy f32[B, S-1]) where
+    position t scores token ``tokens[:, t+1]`` given the prefix.
+    """
+    logits = forward_logits(cfg, params, tokens)[:, :-1, :]
+    targets = tokens[:, 1:]
+    return token_logprob(logits, targets)
+
+
+def decode_logits(cfg: ModelConfig, params: dict, tokens, pos):
+    """Rollout inner loop: logits for the token at position ``pos``.
+
+    tokens i32[B, S] (padded), pos i32[] -> f32[B, V]. The hidden state at
+    ``pos - 1`` predicts the token at ``pos``.
+    """
+    logits = forward_logits(cfg, params, tokens)
+    idx = jnp.clip(pos - 1, 0, tokens.shape[1] - 1)
+    return jax.lax.dynamic_slice_in_dim(logits, idx, 1, axis=1)[:, 0, :]
+
+
+# ---------------------------------------------------------------------------
+# Adam
+
+
+def adam_update(cfg: RunConfig, params, m, v, grads, step, lr=None):
+    """Adam with bias correction + global-norm gradient clipping."""
+    lr = cfg.lr if lr is None else lr
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(grads))
+    )
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    t = step.astype(jnp.float32) + 1.0
+    b1, b2 = cfg.adam_b1, cfg.adam_b2
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        g = grads[name] * scale
+        mi = b1 * m[name] + (1.0 - b1) * g
+        vi = b2 * v[name] + (1.0 - b2) * jnp.square(g)
+        mhat = mi / bc1
+        vhat = vi / bc2
+        new_p[name] = params[name] - lr * mhat / (jnp.sqrt(vhat) + cfg.adam_eps)
+        new_m[name] = mi
+        new_v[name] = vi
+    return new_p, new_m, new_v, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Training steps (one per paper method)
+
+
+def _masked_mean(x, mask):
+    return jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _policy_loss(cfg: RunConfig, params, tokens, mask, behav_logp, adv,
+                 alpha, prox_logp, mode: int):
+    theta_logp, entropy = sequence_logp(cfg.model, params, tokens)
+    loss, stats = fused_decoupled_loss(
+        theta_logp,
+        behav_logp,
+        adv,
+        mask,
+        mode=mode,
+        clip_eps=cfg.clip_eps,
+        prox_logp=prox_logp,
+        alpha=alpha,
+    )
+    iw, ratio, clipped = stats["is_weight"], stats["ratio"], stats["clipped"]
+    big = 1e30
+    aux = {
+        "entropy": _masked_mean(entropy, mask),
+        "max_iw": jnp.max(jnp.where(mask > 0, iw, -big)),
+        "min_iw": jnp.min(jnp.where(mask > 0, iw, big)),
+        "clipped_tokens": jnp.sum(clipped * mask),
+        "mean_ratio": _masked_mean(ratio, mask),
+        "approx_kl": _masked_mean(
+            jax.lax.stop_gradient(behav_logp) - jax.lax.stop_gradient(theta_logp),
+            mask,
+        ),
+    }
+    return loss, aux
+
+
+def train_step(cfg: RunConfig, mode: int, params, m, v, step, tokens, mask,
+               behav_logp, adv, alpha, prox_logp):
+    """One training step = ``n_minibatch`` Adam updates (paper: 4).
+
+    The batch's rows are split into consecutive minibatches; in MODE_FROZEN
+    the proximal anchor was computed once (by the separate ``prox_forward``
+    executable) before the step and stays frozen across minibatches, exactly
+    as in decoupled PPO. Returns new (params, m, v) and the metric vector
+    (see config.METRIC_NAMES).
+    """
+    mb = cfg.minibatch
+    loss_fn = lambda p, *args: _policy_loss(cfg, p, *args, mode=mode)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    losses, ents, ratios, kls, gnorms = [], [], [], [], []
+    max_iws, min_iws, clip_counts = [], [], []
+    for i in range(cfg.n_minibatch):
+        sl = slice(i * mb, (i + 1) * mb)
+        (loss, aux), grads = grad_fn(
+            params, tokens[sl], mask[sl], behav_logp[sl], adv[sl],
+            alpha[sl], prox_logp[sl],
+        )
+        params, m, v, gnorm = adam_update(cfg, params, m, v, grads, step, lr=cfg.rl_lr)
+        step = step + 1
+        losses.append(loss)
+        ents.append(aux["entropy"])
+        max_iws.append(aux["max_iw"])
+        min_iws.append(aux["min_iw"])
+        clip_counts.append(aux["clipped_tokens"])
+        ratios.append(aux["mean_ratio"])
+        kls.append(aux["approx_kl"])
+        gnorms.append(gnorm)
+
+    metrics = jnp.stack([
+        jnp.mean(jnp.stack(losses)),
+        jnp.mean(jnp.stack(ents)),
+        jnp.max(jnp.stack(max_iws)),
+        jnp.min(jnp.stack(min_iws)),
+        jnp.sum(jnp.stack(clip_counts)),
+        jnp.mean(jnp.stack(ratios)),
+        jnp.mean(jnp.stack(gnorms)),
+        jnp.mean(jnp.stack(kls)),
+    ])
+    assert metrics.shape == (N_METRICS,)
+    return params, m, v, step, metrics
+
+
+def pretrain_step(cfg: RunConfig, params, m, v, step, tokens, mask):
+    """Supervised warm-start: next-token cross-entropy on correct solutions.
+
+    Plays the role of the pretrained instruct model in the paper's setups
+    (DESIGN.md substitutions table). Metrics vector layout matches train_step
+    (slots beyond loss/entropy are zero).
+    """
+
+    def loss_fn(p):
+        logp, entropy = sequence_logp(cfg.model, p, tokens)
+        return -_masked_mean(logp, mask), _masked_mean(entropy, mask)
+
+    (loss, ent), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, m, v, gnorm = adam_update(cfg, params, m, v, grads, step)
+    z = jnp.zeros(())
+    metrics = jnp.stack([loss, ent, z, z, z, z, gnorm, z])
+    return params, m, v, step + 1, metrics
+
+
+MODES = {"sync": MODE_COUPLED, "recompute": MODE_FROZEN, "loglinear": MODE_INTERP}

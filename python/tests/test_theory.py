@@ -1,0 +1,96 @@
+"""Appendix-A theory checks (Theorem 1), executed numerically against the
+kernel implementations rather than just the algebra:
+
+1. Sandwich property:   min(b, t) <= prox <= max(b, t)      (Eq. 5/9)
+2. Contractive ratio:   r = w^alpha, r -> 1 as d -> inf     (Eq. 6/10)
+3. Vanishing variance:  Var[r] -> 0 as alpha -> 0           (Eq. 11)
+4. Staleness schedule:  Eq. 4 exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.a3po_loss import fused_decoupled_loss
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.integers(0, 64),
+)
+def test_sandwich_property(seed, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    behav = -5.0 * jax.random.uniform(ks[0], (16,))
+    theta = -5.0 * jax.random.uniform(ks[1], (16,))
+    alpha = ref.staleness_alpha(jnp.full((16,), d))
+    prox = ref.interp_prox_logp(behav, theta, alpha)
+    lo = jnp.minimum(behav, theta)
+    hi = jnp.maximum(behav, theta)
+    assert bool(jnp.all(prox >= lo - 1e-6)) and bool(jnp.all(prox <= hi + 1e-6))
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 100))
+def test_contractive_ratio_closed_form(seed, d):
+    """r = (pi_theta / pi_behav)^alpha — verified through the kernel."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    theta = -3.0 * jax.random.uniform(ks[0], (4, 8)) - 0.1
+    behav = -3.0 * jax.random.uniform(ks[1], (4, 8)) - 0.1
+    alpha = jnp.full((4,), 1.0 / d)
+    _, stats = fused_decoupled_loss(
+        theta, behav, jnp.ones((4, 8)), jnp.ones((4, 8)),
+        mode=ref.MODE_INTERP, clip_eps=0.2, alpha=alpha,
+    )
+    w = np.exp(np.asarray(theta - behav))
+    np.testing.assert_allclose(stats["ratio"], w ** (1.0 / d), rtol=1e-4)
+
+
+def test_ratio_tends_to_one_with_staleness():
+    theta = jnp.array([[-0.5, -4.0, -1.0]])
+    behav = jnp.array([[-3.0, -0.5, -1.0]])
+    prev_dev = np.inf
+    for d in [1, 2, 4, 16, 256, 1024]:
+        alpha = jnp.full((1,), 1.0 / d)
+        prox = ref.interp_prox_logp(behav, theta, alpha)
+        ratio = np.exp(np.asarray(theta - prox))
+        dev = np.abs(ratio - 1.0).max()
+        assert dev <= prev_dev + 1e-9
+        prev_dev = dev
+    assert prev_dev < 0.01  # d=1024: essentially 1
+
+
+def test_variance_vanishes_as_alpha_shrinks():
+    """Var_{a~behav}[w^alpha] -> 0 as alpha -> 0 (Eq. 11), Monte-Carlo."""
+    rng = np.random.default_rng(0)
+    # A behaviour distribution and importance weights with finite 2nd moment.
+    logw = rng.normal(0.0, 1.0, size=200_000)
+    w = np.exp(logw)
+    variances = []
+    for alpha in [1.0, 0.5, 0.25, 0.1, 0.02]:
+        variances.append(np.var(w**alpha))
+    assert all(b < a for a, b in zip(variances, variances[1:])), variances
+    assert variances[-1] < 1e-2
+
+
+def test_staleness_alpha_schedule_eq4():
+    d = jnp.array([0, 1, 2, 5, 100])
+    a = ref.staleness_alpha(d)
+    np.testing.assert_allclose(a, [0.0, 1.0, 0.5, 0.2, 0.01], rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    alpha=st.floats(0.0, 1.0),
+)
+def test_prox_is_valid_log_prob_upper_bound(seed, alpha):
+    """Geometric interpolation of two (sub)distributions never exceeds
+    probability 1: log pi_prox <= 0 when both inputs are log-probs."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    behav = -6.0 * jax.random.uniform(ks[0], (32,))
+    theta = -6.0 * jax.random.uniform(ks[1], (32,))
+    prox = ref.interp_prox_logp(behav, theta, jnp.full((32,), alpha))
+    assert bool(jnp.all(prox <= 1e-6))

@@ -1,0 +1,367 @@
+//! Bench support: a small criterion-replacement timing harness plus a
+//! cached "comparison run" driver shared by the per-figure bench targets.
+//!
+//! Every `benches/figN_*.rs` / `benches/tableN_*.rs` binary regenerates one
+//! table or figure of the paper. Training-based benches share one set of
+//! runs (sync / recompute / loglinear on the same preset, same epochs —
+//! exactly the paper's protocol) through an on-disk JSON cache so that
+//! `cargo bench` doesn't retrain six times.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{Method, RunOptions, StalenessPolicy};
+use crate::coordinator;
+use crate::util::json::Json;
+use crate::util::stats::Running;
+use crate::util::timer::Stopwatch;
+
+// ---------------------------------------------------------------------------
+// Micro-bench harness (criterion stand-in)
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+/// Time a closure: warmup, then fixed iterations; returns distribution
+/// statistics. Prints a criterion-style line.
+pub fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> BenchStats {
+    for _ in 0..iters / 10 + 1 {
+        f(); // warmup
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.secs() * 1e9);
+    }
+    let mut r = Running::new();
+    for &s in &samples {
+        r.push(s);
+    }
+    let stats = BenchStats {
+        iters,
+        mean_ns: r.mean(),
+        p50_ns: crate::util::stats::percentile(&samples, 50.0),
+        p95_ns: crate::util::stats::percentile(&samples, 95.0),
+    };
+    println!(
+        "{:<40} {:>12.1} ns/iter (p50 {:>10.1}, p95 {:>10.1}, n={})",
+        name, stats.mean_ns, stats.p50_ns, stats.p95_ns, iters
+    );
+    stats
+}
+
+// ---------------------------------------------------------------------------
+// Shared comparison runs (the paper's three-method protocol)
+
+/// One method's run data as needed by the figure printers.
+#[derive(Debug, Clone)]
+pub struct MethodRun {
+    pub method: Method,
+    pub final_eval: f64,
+    pub total_secs: f64,
+    pub prox_mean_secs: f64,
+    /// (step, wallclock, shaped reward, exact reward)
+    pub reward_curve: Vec<(u64, f64, f64, f64)>,
+    /// (step, entropy)
+    pub entropy_curve: Vec<(u64, f64)>,
+    /// (step, max_iw, min_iw)
+    pub is_weight_curve: Vec<(u64, f64, f64)>,
+    /// (step, clipped tokens)
+    pub clip_curve: Vec<(u64, f64)>,
+    /// (step, wallclock, eval reward)
+    pub eval_curve: Vec<(u64, f64, f64)>,
+    /// Path base of the saved checkpoint.
+    pub ckpt: String,
+}
+
+impl MethodRun {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::Str(self.method.label().into())),
+            ("final_eval", Json::Num(self.final_eval)),
+            ("total_secs", Json::Num(self.total_secs)),
+            ("prox_mean_secs", Json::Num(self.prox_mean_secs)),
+            (
+                "reward_curve",
+                Json::Arr(
+                    self.reward_curve
+                        .iter()
+                        .map(|(s, w, r, e)| {
+                            Json::arr_f64(&[*s as f64, *w, *r, *e])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "entropy_curve",
+                Json::Arr(
+                    self.entropy_curve
+                        .iter()
+                        .map(|(s, e)| Json::arr_f64(&[*s as f64, *e]))
+                        .collect(),
+                ),
+            ),
+            (
+                "is_weight_curve",
+                Json::Arr(
+                    self.is_weight_curve
+                        .iter()
+                        .map(|(s, mx, mn)| Json::arr_f64(&[*s as f64, *mx, *mn]))
+                        .collect(),
+                ),
+            ),
+            (
+                "clip_curve",
+                Json::Arr(
+                    self.clip_curve
+                        .iter()
+                        .map(|(s, c)| Json::arr_f64(&[*s as f64, *c]))
+                        .collect(),
+                ),
+            ),
+            (
+                "eval_curve",
+                Json::Arr(
+                    self.eval_curve
+                        .iter()
+                        .map(|(s, w, r)| Json::arr_f64(&[*s as f64, *w, *r]))
+                        .collect(),
+                ),
+            ),
+            ("ckpt", Json::Str(self.ckpt.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<MethodRun> {
+        let curve = |key: &str| -> Vec<Vec<f64>> {
+            j.get(key)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_f64())
+                        .collect()
+                })
+                .collect()
+        };
+        Ok(MethodRun {
+            method: Method::parse(j.get("method").as_str().unwrap_or(""))
+                .map_err(anyhow::Error::msg)?,
+            final_eval: j.get("final_eval").as_f64().unwrap_or(f64::NAN),
+            total_secs: j.get("total_secs").as_f64().unwrap_or(0.0),
+            prox_mean_secs: j.get("prox_mean_secs").as_f64().unwrap_or(0.0),
+            reward_curve: curve("reward_curve")
+                .iter()
+                .map(|r| (r[0] as u64, r[1], r[2], r[3]))
+                .collect(),
+            entropy_curve: curve("entropy_curve")
+                .iter()
+                .map(|r| (r[0] as u64, r[1]))
+                .collect(),
+            is_weight_curve: curve("is_weight_curve")
+                .iter()
+                .map(|r| (r[0] as u64, r[1], r[2]))
+                .collect(),
+            clip_curve: curve("clip_curve").iter().map(|r| (r[0] as u64, r[1])).collect(),
+            eval_curve: curve("eval_curve")
+                .iter()
+                .map(|r| (r[0] as u64, r[1], r[2]))
+                .collect(),
+            ckpt: j.get("ckpt").as_str().unwrap_or("").to_string(),
+        })
+    }
+}
+
+/// CLI shared by the training-based benches.
+pub struct BenchConfig {
+    pub preset: String,
+    pub steps: u64,
+    pub pretrain_steps: u64,
+    pub seed: u64,
+    pub workers: usize,
+    pub force: bool,
+    pub out_dir: String,
+}
+
+impl BenchConfig {
+    pub fn from_env_args(name: &str, about: &str) -> BenchConfig {
+        let parsed = crate::util::cli::Args::new(name, about)
+            .opt("preset", "tiny", "artifact preset")
+            .opt("steps", "40", "RL steps per method")
+            .opt("pretrain-steps", "300", "warm-start steps")
+            .opt("seed", "0", "seed")
+            .opt("workers", "2", "rollout workers (async methods)")
+            .opt("out", "runs/bench", "bench cache/output directory")
+            .flag("force", "ignore the cache and re-run")
+            // `cargo bench` passes --bench to the target binary.
+            .flag("bench", "(ignored; passed by cargo bench)")
+            .parse();
+        BenchConfig {
+            preset: parsed.string("preset"),
+            steps: parsed.u64("steps"),
+            pretrain_steps: parsed.u64("pretrain-steps"),
+            seed: parsed.u64("seed"),
+            workers: parsed.usize("workers"),
+            force: parsed.flag("force"),
+            out_dir: parsed.string("out"),
+        }
+    }
+
+    fn cache_path(&self) -> PathBuf {
+        PathBuf::from(&self.out_dir).join(format!(
+            "cmp_{}_s{}_p{}_seed{}.json",
+            self.preset, self.steps, self.pretrain_steps, self.seed
+        ))
+    }
+}
+
+/// Run (or load from cache) the three-method comparison on one preset.
+pub fn comparison_runs(cfg: &BenchConfig) -> Result<Vec<MethodRun>> {
+    let cache = cfg.cache_path();
+    if !cfg.force {
+        if let Ok(text) = std::fs::read_to_string(&cache) {
+            if let Ok(j) = Json::parse(&text) {
+                let runs: Result<Vec<MethodRun>> = j
+                    .get("runs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(MethodRun::from_json)
+                    .collect();
+                if let Ok(runs) = runs {
+                    if runs.len() == 3 {
+                        eprintln!("[bench] using cached runs from {}", cache.display());
+                        return Ok(runs);
+                    }
+                }
+            }
+        }
+    }
+
+    std::env::set_var("A3PO_QUIET", "1");
+
+    // Warm-start ONCE and share the checkpoint across the three methods —
+    // the paper's runs all begin from the same instruct model, and this
+    // keeps the method comparison apples-to-apples (identical theta_0).
+    let warm_base = PathBuf::from(&cfg.out_dir)
+        .join(format!("warmstart_{}_p{}_seed{}", cfg.preset, cfg.pretrain_steps, cfg.seed));
+    if cfg.pretrain_steps > 0 && !warm_base.with_extension("bin").exists() {
+        eprintln!("[bench] warm-starting {} ({} supervised steps)…", cfg.preset, cfg.pretrain_steps);
+        let opts = RunOptions {
+            preset: cfg.preset.clone(),
+            out_dir: cfg.out_dir.clone(),
+            method: Method::Sync,
+            steps: 0,
+            pretrain_steps: cfg.pretrain_steps,
+            eval_every: 0,
+            eval_prompts: 64,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let out = coordinator::run(&opts)?;
+        crate::runtime::checkpoint::save(&warm_base, &out.runtime.manifest, &out.final_snapshot)?;
+    }
+    let init_ckpt = if cfg.pretrain_steps > 0 {
+        Some(warm_base.to_str().unwrap().to_string())
+    } else {
+        None
+    };
+
+    let mut runs = Vec::new();
+    for method in Method::ALL {
+        eprintln!(
+            "[bench] training {} / {} for {} steps…",
+            cfg.preset,
+            method.label(),
+            cfg.steps
+        );
+        let opts = RunOptions {
+            preset: cfg.preset.clone(),
+            out_dir: cfg.out_dir.clone(),
+            method,
+            steps: cfg.steps,
+            pretrain_steps: 0,
+            init_ckpt: init_ckpt.clone(),
+            workers: cfg.workers,
+            eval_every: (cfg.steps / 8).max(1),
+            eval_prompts: 64,
+            seed: cfg.seed,
+            staleness: StalenessPolicy { max_staleness: 8, max_buffered: 256 },
+            ..Default::default()
+        };
+        let out = coordinator::run(&opts)?;
+        let ckpt = coordinator::save_checkpoint(&opts, &out)?;
+        runs.push(MethodRun {
+            method,
+            final_eval: out.final_eval,
+            total_secs: out.total_secs,
+            prox_mean_secs: out.phases.mean("prox"),
+            reward_curve: out
+                .logger
+                .steps
+                .iter()
+                .map(|s| (s.step, s.wallclock, s.reward, s.reward_exact))
+                .collect(),
+            entropy_curve: out
+                .logger
+                .steps
+                .iter()
+                .map(|s| (s.step, s.train.entropy))
+                .collect(),
+            is_weight_curve: out
+                .logger
+                .steps
+                .iter()
+                .map(|s| (s.step, s.train.max_is_weight, s.train.min_is_weight))
+                .collect(),
+            clip_curve: out
+                .logger
+                .steps
+                .iter()
+                .map(|s| (s.step, s.train.clipped_tokens))
+                .collect(),
+            eval_curve: out
+                .logger
+                .evals
+                .iter()
+                .map(|e| (e.step, e.wallclock, e.eval_reward))
+                .collect(),
+            ckpt: ckpt.to_str().unwrap_or("").to_string(),
+        });
+    }
+
+    if let Some(parent) = cache.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let j = Json::obj(vec![(
+        "runs",
+        Json::Arr(runs.iter().map(|r| r.to_json()).collect()),
+    )]);
+    std::fs::write(&cache, j.dump()).with_context(|| format!("writing {}", cache.display()))?;
+    eprintln!("[bench] cached runs at {}", cache.display());
+    Ok(runs)
+}
+
+/// Downsample a series to at most `n` points (keeps first/last).
+pub fn downsample<T: Clone>(v: &[T], n: usize) -> Vec<T> {
+    if v.len() <= n || n < 2 {
+        return v.to_vec();
+    }
+    let stride = (v.len() - 1) as f64 / (n - 1) as f64;
+    (0..n).map(|i| v[(i as f64 * stride).round() as usize].clone()).collect()
+}
+
+/// Load the artifact directory used by a bench config.
+pub fn artifact_dir(cfg: &BenchConfig) -> PathBuf {
+    Path::new("artifacts").join(&cfg.preset)
+}

@@ -1,0 +1,267 @@
+//! Staleness-tagged episode buffer — the decoupling point between the
+//! rollout engine and the trainer (the asynchronous-RL heart of the paper's
+//! setup, AReaL-style).
+//!
+//! * Episodes arrive in complete GRPO *groups* (all `G` responses to one
+//!   prompt), each tagged with the behaviour-policy version that generated
+//!   it.
+//! * `pop_groups` serves the oldest admissible groups, dropping any whose
+//!   staleness `d = v_now - v_behav` exceeds `max_staleness` (the paper's
+//!   staleness control).
+//! * `push_group` applies backpressure: rollout workers block while the
+//!   buffer holds `max_buffered` or more episodes, so generation can never
+//!   run unboundedly ahead of training.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::config::StalenessPolicy;
+use crate::env::Problem;
+
+/// One generated response with everything the trainer needs.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    /// Full padded token window `[seq_len]` (prompt + generation).
+    pub tokens: Vec<i32>,
+    /// Behaviour-policy log-prob per next-token position `[seq_len - 1]`;
+    /// zero outside the generated region.
+    pub behav_logp: Vec<f32>,
+    /// Loss mask per next-token position `[seq_len - 1]` (1.0 on generated
+    /// tokens including EOS).
+    pub mask: Vec<f32>,
+    /// Shaped training reward (see env::verifier).
+    pub reward: f64,
+    /// Strict exact-match reward (reported in figures/tables).
+    pub reward_exact: f64,
+    /// Behaviour-policy version `v(pi_behav)`.
+    pub version: u64,
+    /// GRPO group id (all responses to one prompt share it).
+    pub group: u64,
+    /// Decoded generation (diagnostics).
+    pub text: String,
+    pub problem: Problem,
+}
+
+impl Episode {
+    pub fn staleness(&self, v_now: u64) -> u64 {
+        v_now.saturating_sub(self.version)
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct BufferStats {
+    pub pushed_groups: AtomicU64,
+    pub popped_groups: AtomicU64,
+    pub dropped_stale_groups: AtomicU64,
+}
+
+#[derive(Debug)]
+pub struct EpisodeBuffer {
+    inner: Mutex<VecDeque<Vec<Episode>>>,
+    /// Signalled when groups are added or space frees up or shutdown.
+    cond: Condvar,
+    policy: StalenessPolicy,
+    shutdown: AtomicBool,
+    pub stats: BufferStats,
+}
+
+impl EpisodeBuffer {
+    pub fn new(policy: StalenessPolicy) -> Self {
+        EpisodeBuffer {
+            inner: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+            policy,
+            shutdown: AtomicBool::new(false),
+            stats: BufferStats::default(),
+        }
+    }
+
+    pub fn len_episodes(&self) -> usize {
+        self.inner.lock().unwrap().iter().map(|g| g.len()).sum()
+    }
+
+    pub fn len_groups(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Blocks while the buffer is at capacity (backpressure). Returns false
+    /// if the buffer is shut down (caller should exit).
+    pub fn push_group(&self, group: Vec<Episode>) -> bool {
+        assert!(!group.is_empty());
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if self.shutdown.load(Ordering::Acquire) {
+                return false;
+            }
+            let buffered: usize = q.iter().map(|g| g.len()).sum();
+            if buffered < self.policy.max_buffered {
+                break;
+            }
+            q = self.cond.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+        q.push_back(group);
+        self.stats.pushed_groups.fetch_add(1, Ordering::Relaxed);
+        self.cond.notify_all();
+        true
+    }
+
+    /// Pop `n` admissible groups, blocking until available. Groups staler
+    /// than the policy allows (relative to `v_now`) are discarded and
+    /// counted. Returns None on shutdown.
+    pub fn pop_groups(&self, n: usize, v_now: u64) -> Option<Vec<Vec<Episode>>> {
+        let mut out = Vec::with_capacity(n);
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            // Drain admissible groups from the front.
+            while out.len() < n {
+                match q.pop_front() {
+                    None => break,
+                    Some(g) => {
+                        let d = g[0].staleness(v_now);
+                        if d > self.policy.max_staleness {
+                            self.stats.dropped_stale_groups.fetch_add(1, Ordering::Relaxed);
+                            // freed capacity: wake pushers
+                            self.cond.notify_all();
+                        } else {
+                            out.push(g);
+                        }
+                    }
+                }
+            }
+            if out.len() == n {
+                self.stats.popped_groups.fetch_add(n as u64, Ordering::Relaxed);
+                self.cond.notify_all();
+                return Some(out);
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                return None;
+            }
+            q = self.cond.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-blocking variant used by tests and the sync path.
+    pub fn try_pop_groups(&self, n: usize, v_now: u64) -> Option<Vec<Vec<Episode>>> {
+        let mut out = Vec::with_capacity(n);
+        let mut q = self.inner.lock().unwrap();
+        while out.len() < n {
+            match q.pop_front() {
+                None => break,
+                Some(g) => {
+                    let d = g[0].staleness(v_now);
+                    if d > self.policy.max_staleness {
+                        self.stats.dropped_stale_groups.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        out.push(g);
+                    }
+                }
+            }
+        }
+        if out.len() == n {
+            self.stats.popped_groups.fetch_add(n as u64, Ordering::Relaxed);
+            self.cond.notify_all();
+            Some(out)
+        } else {
+            // Put partial results back (front, preserving order).
+            for g in out.into_iter().rev() {
+                q.push_front(g);
+            }
+            None
+        }
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.cond.notify_all();
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ep(version: u64, group: u64) -> Episode {
+        Episode {
+            tokens: vec![0; 4],
+            behav_logp: vec![0.0; 3],
+            mask: vec![1.0; 3],
+            reward: 0.0,
+            reward_exact: 0.0,
+            version,
+            group,
+            text: String::new(),
+            problem: Problem { prompt: "1+1=".into(), answer: "2".into() },
+        }
+    }
+
+    fn buffer(max_staleness: u64, max_buffered: usize) -> EpisodeBuffer {
+        EpisodeBuffer::new(StalenessPolicy { max_staleness, max_buffered })
+    }
+
+    #[test]
+    fn fifo_order() {
+        let b = buffer(10, 100);
+        b.push_group(vec![ep(0, 1)]);
+        b.push_group(vec![ep(0, 2)]);
+        let got = b.try_pop_groups(2, 0).unwrap();
+        assert_eq!(got[0][0].group, 1);
+        assert_eq!(got[1][0].group, 2);
+    }
+
+    #[test]
+    fn drops_stale_groups() {
+        let b = buffer(2, 100);
+        b.push_group(vec![ep(0, 1)]); // staleness 5 at v=5 -> dropped
+        b.push_group(vec![ep(4, 2)]); // staleness 1 -> kept
+        let got = b.try_pop_groups(1, 5).unwrap();
+        assert_eq!(got[0][0].group, 2);
+        assert_eq!(b.stats.dropped_stale_groups.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn try_pop_insufficient_restores() {
+        let b = buffer(10, 100);
+        b.push_group(vec![ep(0, 1)]);
+        assert!(b.try_pop_groups(2, 0).is_none());
+        assert_eq!(b.len_groups(), 1, "partial pop must restore");
+        assert!(b.try_pop_groups(1, 0).is_some());
+    }
+
+    #[test]
+    fn backpressure_blocks_then_releases() {
+        let b = Arc::new(buffer(10, 2));
+        b.push_group(vec![ep(0, 1), ep(0, 1)]); // buffer full (2 episodes)
+        let b2 = b.clone();
+        let pusher = std::thread::spawn(move || b2.push_group(vec![ep(0, 2)]));
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!pusher.is_finished(), "push should block at capacity");
+        b.pop_groups(1, 0).unwrap();
+        assert!(pusher.join().unwrap());
+        assert_eq!(b.len_groups(), 1);
+    }
+
+    #[test]
+    fn shutdown_unblocks_everyone() {
+        let b = Arc::new(buffer(10, 1));
+        let b2 = b.clone();
+        let popper = std::thread::spawn(move || b2.pop_groups(1, 0));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        b.shutdown();
+        assert!(popper.join().unwrap().is_none());
+        assert!(!b.push_group(vec![ep(0, 1)]));
+    }
+
+    #[test]
+    fn staleness_computation_saturates() {
+        let e = ep(7, 0);
+        assert_eq!(e.staleness(7), 0);
+        assert_eq!(e.staleness(9), 2);
+        assert_eq!(e.staleness(3), 0, "future versions clamp to 0");
+    }
+}

@@ -1,0 +1,258 @@
+//! Run-level configuration for the Rust coordinator.
+//!
+//! Model geometry (shapes, batch sizes, vocab) is *not* configured here — it
+//! is read from the artifact manifest so the coordinator can never disagree
+//! with what was AOT-compiled. This module holds the knobs that live purely
+//! on the Rust side: method selection, staleness control, worker counts,
+//! schedules, and paths.
+
+use crate::util::cli::Parsed;
+
+/// The three policy-optimisation methods evaluated in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Synchronous GRPO — coupled loss, rollout/train alternate (baseline).
+    Sync,
+    /// Decoupled PPO with explicit proximal recomputation (Hilton et al.).
+    Recompute,
+    /// A-3PO: staleness-aware log-linear proximal approximation (ours).
+    Loglinear,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method, String> {
+        match s {
+            "sync" => Ok(Method::Sync),
+            "recompute" => Ok(Method::Recompute),
+            "loglinear" | "a3po" => Ok(Method::Loglinear),
+            other => Err(format!(
+                "unknown method {other:?} (expected sync|recompute|loglinear)"
+            )),
+        }
+    }
+
+    /// Name of the train executable in the artifact manifest.
+    pub fn executable(&self) -> &'static str {
+        match self {
+            Method::Sync => "train_sync",
+            Method::Recompute => "train_recompute",
+            Method::Loglinear => "train_loglinear",
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Sync => "sync",
+            Method::Recompute => "recompute",
+            Method::Loglinear => "loglinear",
+        }
+    }
+
+    /// Asynchronous methods decouple rollout from training; sync barriers.
+    pub fn is_async(&self) -> bool {
+        !matches!(self, Method::Sync)
+    }
+
+    pub const ALL: [Method; 3] = [Method::Sync, Method::Recompute, Method::Loglinear];
+}
+
+/// Staleness-control policy for the episode buffer (AReaL-style).
+#[derive(Debug, Clone, Copy)]
+pub struct StalenessPolicy {
+    /// Episodes with version lag `d > max_staleness` are dropped.
+    pub max_staleness: u64,
+    /// Cap on buffered-but-unconsumed episodes (backpressure): rollout
+    /// workers stall when the buffer holds this many sequences.
+    pub max_buffered: usize,
+}
+
+impl Default for StalenessPolicy {
+    fn default() -> Self {
+        StalenessPolicy { max_staleness: 8, max_buffered: 512 }
+    }
+}
+
+/// α schedule variants (the paper uses `InverseD`; the others power the
+/// ablation bench `staleness_sweep`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AlphaSchedule {
+    /// Paper Eq. 4: α = 0 if d = 0 else 1/d.
+    InverseD,
+    /// α = 0 if d = 0 else 1/d².  (decays faster toward the target policy)
+    InverseD2,
+    /// Constant α for d ≥ 1 (ignores how stale the data actually is).
+    Constant(f64),
+    /// α = 1 for d ≥ 1 — anchor at the behaviour policy (coupled-like).
+    Behaviour,
+}
+
+impl AlphaSchedule {
+    pub fn parse(s: &str) -> Result<AlphaSchedule, String> {
+        match s {
+            "inverse_d" | "1/d" => Ok(AlphaSchedule::InverseD),
+            "inverse_d2" | "1/d2" => Ok(AlphaSchedule::InverseD2),
+            "behaviour" | "behavior" => Ok(AlphaSchedule::Behaviour),
+            other => other
+                .strip_prefix("const:")
+                .and_then(|v| v.parse::<f64>().ok())
+                .map(AlphaSchedule::Constant)
+                .ok_or_else(|| format!("unknown alpha schedule {other:?}")),
+        }
+    }
+
+    /// Eq. 4 (and ablation variants): α as a function of staleness d.
+    pub fn alpha(&self, d: u64) -> f32 {
+        if d == 0 {
+            return 0.0;
+        }
+        match self {
+            AlphaSchedule::InverseD => 1.0 / d as f32,
+            AlphaSchedule::InverseD2 => 1.0 / (d * d) as f32,
+            AlphaSchedule::Constant(c) => *c as f32,
+            AlphaSchedule::Behaviour => 1.0,
+        }
+    }
+}
+
+/// Everything needed to drive one training run.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    pub preset: String,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    pub method: Method,
+    pub alpha_schedule: AlphaSchedule,
+    pub staleness: StalenessPolicy,
+    /// RL training steps (each = n_minibatch gradient updates).
+    pub steps: u64,
+    /// Supervised warm-start steps before RL (stands in for the pretrained
+    /// instruct model of the paper's setups).
+    pub pretrain_steps: u64,
+    /// Rollout worker threads (async methods only; sync uses 1 inline).
+    pub workers: usize,
+    /// Evaluate on the held-out prompt set every this many steps.
+    pub eval_every: u64,
+    /// Number of held-out prompts per evaluation pass.
+    pub eval_prompts: usize,
+    pub seed: u64,
+    /// Extra version lag injected on top of natural asynchrony — used by
+    /// controlled staleness experiments and tests.
+    pub inject_staleness: u64,
+    /// Start from this checkpoint (path base without .json/.bin) instead of
+    /// fresh init — lets one warm start be shared across method runs.
+    pub init_ckpt: Option<String>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            preset: "tiny".into(),
+            artifacts_dir: "artifacts".into(),
+            out_dir: "runs".into(),
+            method: Method::Loglinear,
+            alpha_schedule: AlphaSchedule::InverseD,
+            staleness: StalenessPolicy::default(),
+            steps: 50,
+            pretrain_steps: 0,
+            workers: 2,
+            eval_every: 10,
+            eval_prompts: 64,
+            seed: 0,
+            inject_staleness: 0,
+            init_ckpt: None,
+        }
+    }
+}
+
+impl RunOptions {
+    /// Shared CLI schema (used by the binary, examples, and benches).
+    pub fn cli(program: &str, about: &str) -> crate::util::cli::Args {
+        crate::util::cli::Args::new(program, about)
+            .opt("preset", "tiny", "artifact preset (tiny|setup1|setup2|big)")
+            .opt("artifacts", "artifacts", "artifacts directory")
+            .opt("out", "runs", "output directory for metrics/checkpoints")
+            .opt("method", "loglinear", "sync|recompute|loglinear")
+            .opt("alpha", "inverse_d", "alpha schedule (inverse_d|inverse_d2|const:<v>|behaviour)")
+            .opt("steps", "50", "RL training steps")
+            .opt("pretrain-steps", "0", "supervised warm-start steps")
+            .opt("workers", "2", "rollout worker threads")
+            .opt("max-staleness", "8", "drop episodes older than this many versions")
+            .opt("max-buffered", "512", "episode buffer backpressure bound")
+            .opt("eval-every", "10", "eval cadence in steps (0 = never)")
+            .opt("eval-prompts", "64", "held-out prompts per eval")
+            .opt("seed", "0", "run seed")
+            .opt("inject-staleness", "0", "extra artificial version lag")
+            .opt_optional("init-ckpt", "checkpoint base to warm-start from")
+    }
+
+    pub fn from_parsed(p: &Parsed) -> Result<RunOptions, String> {
+        Ok(RunOptions {
+            preset: p.string("preset"),
+            artifacts_dir: p.string("artifacts"),
+            out_dir: p.string("out"),
+            method: Method::parse(p.str("method"))?,
+            alpha_schedule: AlphaSchedule::parse(p.str("alpha"))?,
+            staleness: StalenessPolicy {
+                max_staleness: p.u64("max-staleness"),
+                max_buffered: p.usize("max-buffered"),
+            },
+            steps: p.u64("steps"),
+            pretrain_steps: p.u64("pretrain-steps"),
+            workers: p.usize("workers").max(1),
+            eval_every: p.u64("eval-every"),
+            eval_prompts: p.usize("eval-prompts"),
+            seed: p.u64("seed"),
+            inject_staleness: p.u64("inject-staleness"),
+            init_ckpt: p.get("init-ckpt").map(String::from),
+        })
+    }
+
+    pub fn artifact_dir(&self) -> String {
+        format!("{}/{}", self.artifacts_dir, self.preset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.label()).unwrap(), m);
+        }
+        assert_eq!(Method::parse("a3po").unwrap(), Method::Loglinear);
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn alpha_matches_eq4() {
+        let s = AlphaSchedule::InverseD;
+        assert_eq!(s.alpha(0), 0.0);
+        assert_eq!(s.alpha(1), 1.0);
+        assert_eq!(s.alpha(4), 0.25);
+    }
+
+    #[test]
+    fn alpha_variants() {
+        assert_eq!(AlphaSchedule::InverseD2.alpha(2), 0.25);
+        assert_eq!(AlphaSchedule::Constant(0.3).alpha(5), 0.3);
+        assert_eq!(AlphaSchedule::Behaviour.alpha(9), 1.0);
+        assert_eq!(AlphaSchedule::parse("const:0.5").unwrap(), AlphaSchedule::Constant(0.5));
+    }
+
+    #[test]
+    fn cli_to_options() {
+        let p = RunOptions::cli("t", "")
+            .parse_from(
+                ["--method", "recompute", "--steps", "7", "--max-staleness", "3"]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )
+            .unwrap();
+        let o = RunOptions::from_parsed(&p).unwrap();
+        assert_eq!(o.method, Method::Recompute);
+        assert_eq!(o.steps, 7);
+        assert_eq!(o.staleness.max_staleness, 3);
+    }
+}

@@ -1,0 +1,69 @@
+//! GRPO advantage estimation: group reward normalisation.
+//!
+//! The paper estimates advantages "using group reward normalization"
+//! (Shao et al. 2024): for the G responses sampled from one prompt,
+//! `A_i = (r_i - mean(r)) / (std(r) + eps)`, broadcast over every response
+//! token. Zero-variance groups (all responses equally rewarded) produce
+//! zero advantage — those groups contribute no policy gradient, exactly as
+//! in GRPO.
+
+const EPS: f64 = 1e-4;
+
+/// Normalise one group's rewards into per-sequence advantages.
+pub fn grpo_group_advantages(rewards: &[f64]) -> Vec<f64> {
+    let n = rewards.len();
+    assert!(n > 0);
+    if n == 1 {
+        return vec![0.0];
+    }
+    let mean = rewards.iter().sum::<f64>() / n as f64;
+    let var = rewards.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / n as f64;
+    let std = var.sqrt();
+    rewards.iter().map(|r| (r - mean) / (std + EPS)).collect()
+}
+
+/// Expand per-sequence advantages over the masked token positions:
+/// `adv_tokens[t] = adv_seq * mask[t]`.
+pub fn broadcast_over_mask(adv: f64, mask: &[f32]) -> Vec<f32> {
+    mask.iter().map(|&m| (adv as f32) * m).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalised_group_has_zero_mean_unit_scale() {
+        let adv = grpo_group_advantages(&[1.0, 0.0, 0.0, 1.0]);
+        let mean: f64 = adv.iter().sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-9);
+        // std(r) = 0.5 -> adv = ±0.5/(0.5+eps) ≈ ±1
+        assert!((adv[0] - 1.0).abs() < 1e-3);
+        assert!((adv[1] + 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn zero_variance_group_is_all_zero() {
+        for r in [0.0, 1.0] {
+            let adv = grpo_group_advantages(&[r; 4]);
+            assert!(adv.iter().all(|a| a.abs() < 1e-9), "{adv:?}");
+        }
+    }
+
+    #[test]
+    fn singleton_group_is_zero() {
+        assert_eq!(grpo_group_advantages(&[0.7]), vec![0.0]);
+    }
+
+    #[test]
+    fn ordering_preserved() {
+        let adv = grpo_group_advantages(&[0.2, 0.9, 0.5, 0.0]);
+        assert!(adv[1] > adv[2] && adv[2] > adv[0] && adv[0] > adv[3]);
+    }
+
+    #[test]
+    fn broadcast_respects_mask() {
+        let out = broadcast_over_mask(2.0, &[0.0, 1.0, 1.0, 0.0]);
+        assert_eq!(out, vec![0.0, 2.0, 2.0, 0.0]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Training-batch assembly: GRPO groups -> flat tensors for the train
+//! executables, including the staleness-aware α of paper Eq. 4.
+
+use crate::buffer::Episode;
+use crate::config::AlphaSchedule;
+use crate::runtime::PresetConfig;
+
+use super::advantage::{broadcast_over_mask, grpo_group_advantages};
+
+/// Flat host-side tensors matching the train executables' batch inputs.
+#[derive(Debug, Clone)]
+pub struct TrainBatch {
+    pub tokens: Vec<i32>,     // [B * S]
+    pub mask: Vec<f32>,       // [B * T]
+    pub behav_logp: Vec<f32>, // [B * T]
+    pub adv: Vec<f32>,        // [B * T]
+    pub alpha: Vec<f32>,      // [B]
+    pub staleness: Vec<u64>,  // [B] (diagnostics)
+    pub mean_staleness: f64,
+    pub mean_alpha: f64,
+    pub mean_reward: f64,
+    pub mean_reward_exact: f64,
+}
+
+/// Assemble a train batch from complete GRPO groups.
+///
+/// * advantages: group reward normalisation over each group's shaped
+///   rewards, broadcast over masked token positions;
+/// * staleness: `d = v_now - v(episode) + inject` (inject > 0 only in
+///   controlled-staleness experiments);
+/// * alpha: schedule(d) per sequence (Eq. 4 when schedule = InverseD).
+pub fn assemble(
+    groups: &[Vec<Episode>],
+    geo: &PresetConfig,
+    v_now: u64,
+    schedule: AlphaSchedule,
+    inject_staleness: u64,
+) -> TrainBatch {
+    let b = geo.train_batch;
+    let (s, t) = (geo.seq_len, geo.seq_len - 1);
+    let total: usize = groups.iter().map(|g| g.len()).sum();
+    assert_eq!(total, b, "assemble needs exactly train_batch episodes");
+
+    let mut out = TrainBatch {
+        tokens: Vec::with_capacity(b * s),
+        mask: Vec::with_capacity(b * t),
+        behav_logp: Vec::with_capacity(b * t),
+        adv: Vec::with_capacity(b * t),
+        alpha: Vec::with_capacity(b),
+        staleness: Vec::with_capacity(b),
+        mean_staleness: 0.0,
+        mean_alpha: 0.0,
+        mean_reward: 0.0,
+        mean_reward_exact: 0.0,
+    };
+
+    for group in groups {
+        let rewards: Vec<f64> = group.iter().map(|e| e.reward).collect();
+        let advs = grpo_group_advantages(&rewards);
+        for (e, adv) in group.iter().zip(advs) {
+            assert_eq!(e.tokens.len(), s, "episode seq_len mismatch");
+            assert_eq!(e.mask.len(), t);
+            let d = e.staleness(v_now) + inject_staleness;
+            let a = schedule.alpha(d);
+            out.tokens.extend_from_slice(&e.tokens);
+            out.mask.extend_from_slice(&e.mask);
+            out.behav_logp.extend_from_slice(&e.behav_logp);
+            out.adv.extend(broadcast_over_mask(adv, &e.mask));
+            out.alpha.push(a);
+            out.staleness.push(d);
+            out.mean_staleness += d as f64 / b as f64;
+            out.mean_alpha += a as f64 / b as f64;
+            out.mean_reward += e.reward / b as f64;
+            out.mean_reward_exact += e.reward_exact / b as f64;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::Problem;
+
+    fn geo() -> PresetConfig {
+        PresetConfig {
+            name: "test".into(),
+            vocab: 64,
+            seq_len: 6,
+            prompt_len: 3,
+            gen_len: 3,
+            group_size: 2,
+            rollout_batch: 4,
+            train_batch: 4,
+            n_minibatch: 2,
+            param_count: 0,
+            lr: 1e-3,
+            temperature: 1.0,
+        }
+    }
+
+    fn ep(version: u64, reward: f64) -> Episode {
+        Episode {
+            tokens: vec![1; 6],
+            behav_logp: vec![-0.5; 5],
+            mask: vec![0.0, 0.0, 1.0, 1.0, 0.0],
+            reward,
+            reward_exact: reward.floor(),
+            version,
+            group: 0,
+            text: String::new(),
+            problem: Problem { prompt: "1+1=".into(), answer: "2".into() },
+        }
+    }
+
+    #[test]
+    fn shapes_and_means() {
+        let groups = vec![vec![ep(2, 1.0), ep(2, 0.0)], vec![ep(4, 1.0), ep(4, 1.0)]];
+        let b = assemble(&groups, &geo(), 4, AlphaSchedule::InverseD, 0);
+        assert_eq!(b.tokens.len(), 4 * 6);
+        assert_eq!(b.mask.len(), 4 * 5);
+        assert_eq!(b.alpha.len(), 4);
+        // staleness: 2,2,0,0 -> alpha 0.5,0.5,0,0
+        assert_eq!(b.staleness, vec![2, 2, 0, 0]);
+        assert_eq!(b.alpha, vec![0.5, 0.5, 0.0, 0.0]);
+        assert!((b.mean_staleness - 1.0).abs() < 1e-9);
+        assert!((b.mean_alpha - 0.25).abs() < 1e-9);
+        assert!((b.mean_reward - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advantages_masked_and_group_normalised() {
+        let groups = vec![vec![ep(0, 1.0), ep(0, 0.0)], vec![ep(0, 0.5), ep(0, 0.5)]];
+        let b = assemble(&groups, &geo(), 0, AlphaSchedule::InverseD, 0);
+        let t = 5;
+        // First group: adv ±1 on masked positions (2,3), zero elsewhere.
+        assert!(b.adv[0 * t] == 0.0 && b.adv[0 * t + 2] > 0.99);
+        assert!(b.adv[1 * t + 2] < -0.99);
+        // Zero-variance second group: all-zero advantages.
+        assert!(b.adv[2 * t..4 * t].iter().all(|&a| a == 0.0));
+    }
+
+    #[test]
+    fn inject_staleness_shifts_d() {
+        let groups = vec![vec![ep(5, 1.0), ep(5, 0.0)], vec![ep(5, 1.0), ep(5, 0.0)]];
+        let b = assemble(&groups, &geo(), 5, AlphaSchedule::InverseD, 3);
+        assert!(b.staleness.iter().all(|&d| d == 3));
+        assert!(b.alpha.iter().all(|&a| (a - 1.0 / 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly train_batch")]
+    fn wrong_count_panics() {
+        let groups = vec![vec![ep(0, 1.0), ep(0, 0.0)]];
+        assemble(&groups, &geo(), 0, AlphaSchedule::InverseD, 0);
+    }
+}

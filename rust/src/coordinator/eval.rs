@@ -1,0 +1,73 @@
+//! Held-out evaluation: greedy decoding on frozen prompt sets, strict
+//! exact-match scoring (Fig. 3, Table 1's "final eval reward", Table 2).
+
+use anyhow::Result;
+
+use crate::env::Problem;
+use crate::rollout::generate_for_problems;
+use crate::runtime::{Executable, ParamSnapshot, PresetConfig};
+use crate::sampler::SamplerConfig;
+use crate::util::rng::Pcg64;
+use crate::util::stats::pass_at_1;
+
+/// Evaluate `problems` with greedy decoding; returns mean exact-match
+/// reward. Problem lists that don't divide the rollout batch are padded
+/// with repeats (padding rows are not scored).
+pub fn evaluate_exact(
+    decode: &Executable,
+    snapshot: &ParamSnapshot,
+    problems: &[Problem],
+    geo: &PresetConfig,
+) -> Result<f64> {
+    let (correct, total) = evaluate_counts(decode, snapshot, problems, geo, true)?;
+    Ok(if total == 0 { 0.0 } else { correct as f64 / total as f64 })
+}
+
+/// pass@1 with a binomial standard error — Table 2's reporting format.
+/// `greedy=false` samples at the training temperature (closer to the
+/// paper's pass@1-with-sampling protocol).
+pub fn evaluate_pass_at_1(
+    decode: &Executable,
+    snapshot: &ParamSnapshot,
+    problems: &[Problem],
+    geo: &PresetConfig,
+    greedy: bool,
+) -> Result<(f64, f64)> {
+    let (correct, total) = evaluate_counts(decode, snapshot, problems, geo, greedy)?;
+    Ok(pass_at_1(correct, total))
+}
+
+fn evaluate_counts(
+    decode: &Executable,
+    snapshot: &ParamSnapshot,
+    problems: &[Problem],
+    geo: &PresetConfig,
+    greedy: bool,
+) -> Result<(usize, usize)> {
+    if problems.is_empty() {
+        return Ok((0, 0));
+    }
+    let br = geo.rollout_batch;
+    let cfg = if greedy {
+        SamplerConfig::greedy()
+    } else {
+        SamplerConfig { temperature: geo.temperature, ..Default::default() }
+    };
+    // Eval sampling RNG is fixed: evaluation must not perturb or depend on
+    // the training RNG streams.
+    let mut rng = Pcg64::new(0xe5a1, 0xe5a1);
+    let mut correct = 0usize;
+    for chunk in problems.chunks(br) {
+        let mut padded: Vec<Problem> = chunk.to_vec();
+        while padded.len() < br {
+            padded.push(chunk[0].clone());
+        }
+        let eps = generate_for_problems(decode, snapshot, &padded, geo, &cfg, &mut rng)?;
+        correct += eps
+            .iter()
+            .take(chunk.len())
+            .filter(|e| e.reward_exact >= 1.0)
+            .count();
+    }
+    Ok((correct, problems.len()))
+}

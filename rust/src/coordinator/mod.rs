@@ -1,0 +1,286 @@
+//! The coordinator: the paper's training-system loop.
+//!
+//! * **sync**: rollout and training alternate with a barrier (standard
+//!   GRPO); data is always on-policy (d = 0).
+//! * **recompute / loglinear**: rollout workers and the trainer run
+//!   concurrently, decoupled by the staleness-tagged `EpisodeBuffer`;
+//!   the trainer consumes the oldest admissible groups and publishes a new
+//!   weight version after every step — behaviour-policy staleness arises
+//!   naturally from this asynchrony (plus optional injection for controlled
+//!   experiments).
+
+pub mod advantage;
+pub mod batch;
+pub mod eval;
+pub mod trainer;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::buffer::EpisodeBuffer;
+use crate::config::{Method, RunOptions};
+use crate::env::{self, tokenizer};
+use crate::metrics::{EvalRecord, MetricsLogger, StepRecord};
+use crate::rollout::{generate_batch, GroupIds, RolloutPool};
+use crate::runtime::{checkpoint, ParamSnapshot, Runtime, WeightStore};
+use crate::sampler::SamplerConfig;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::timer::{PhaseTimer, Stopwatch};
+
+use trainer::Trainer;
+
+/// Everything a finished run hands back to examples/benches.
+pub struct RunOutput {
+    pub logger: MetricsLogger,
+    pub final_snapshot: Arc<ParamSnapshot>,
+    pub final_eval: f64,
+    pub total_secs: f64,
+    pub phases: PhaseTimer,
+    pub dropped_stale_groups: u64,
+    pub runtime: Runtime,
+}
+
+impl RunOutput {
+    pub fn summary_json(&self, opts: &RunOptions) -> Json {
+        Json::obj(vec![
+            ("preset", Json::Str(opts.preset.clone())),
+            ("method", Json::Str(opts.method.label().into())),
+            ("steps", Json::Num(self.logger.steps.len() as f64)),
+            ("final_eval_reward", Json::Num(self.final_eval)),
+            ("total_seconds", Json::Num(self.total_secs)),
+            (
+                "prox_mean_ms",
+                Json::Num(
+                    1e3 * self.phases.total("prox") / self.phases.count("prox").max(1) as f64,
+                ),
+            ),
+            ("dropped_stale_groups", Json::Num(self.dropped_stale_groups as f64)),
+        ])
+    }
+}
+
+/// Executables a run needs (loading fewer saves compile time).
+fn needed_execs(opts: &RunOptions) -> Vec<&'static str> {
+    let mut v = vec!["init", "decode"];
+    v.push(opts.method.executable());
+    if opts.method == Method::Recompute {
+        v.push("prox_forward");
+    }
+    if opts.pretrain_steps > 0 {
+        v.push("pretrain");
+    }
+    v
+}
+
+/// Run one full training job (pretrain warm-start + RL + evals).
+pub fn run(opts: &RunOptions) -> Result<RunOutput> {
+    let dir = PathBuf::from(opts.artifact_dir());
+    let runtime = Runtime::load(&dir, Some(&needed_execs(opts)))
+        .with_context(|| format!("loading artifacts from {}", dir.display()))?;
+    run_with_runtime(opts, runtime)
+}
+
+/// Same as [`run`] but with a pre-loaded runtime (benches reuse one runtime
+/// across methods to avoid recompiling shared executables).
+pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput> {
+    let geo = runtime.manifest.preset.clone();
+    let env: Arc<dyn env::TaskEnv> =
+        env::env_for_preset(&opts.preset, geo.prompt_len, geo.gen_len).into();
+    let decode = runtime.exec("decode")?.clone();
+
+    let mut rng = Pcg64::from_seed(opts.seed);
+    let snapshot = match &opts.init_ckpt {
+        Some(base) => {
+            let loaded = checkpoint::load(&PathBuf::from(base), &runtime.manifest)?;
+            eprintln!("[run] warm-starting from {base} (version reset to 0)");
+            // RL versions count from 0 in every run regardless of source.
+            ParamSnapshot::new(0, loaded.params.iter().map(|l| l.lit().clone()).collect())
+        }
+        None => runtime.init_params(opts.seed as i32)?,
+    };
+    let store = WeightStore::new(snapshot.clone());
+    let mut trainer = Trainer::new(&runtime, opts.method, snapshot, store.clone())?;
+
+    let metrics_path =
+        PathBuf::from(&opts.out_dir).join(format!("{}_{}.jsonl", opts.preset, opts.method.label()));
+    let mut logger = MetricsLogger::to_file(&metrics_path, true)?;
+    let mut phases = PhaseTimer::new();
+
+    let heldout = env::heldout_problems(env.as_ref(), opts.seed, opts.eval_prompts);
+    let sampler_cfg = SamplerConfig { temperature: geo.temperature, ..Default::default() };
+
+    // ---- supervised warm start (pretrained-model surrogate) -------------
+    if opts.pretrain_steps > 0 {
+        let sw = Stopwatch::start();
+        let mut pre_rng = rng.split(0x9e);
+        for i in 0..opts.pretrain_steps {
+            let (tokens, mask) = supervised_batch(env.as_ref(), &geo, &mut pre_rng);
+            let m = trainer.pretrain_step(&tokens, &mask)?;
+            if i % 20 == 0 || i + 1 == opts.pretrain_steps {
+                eprintln!("[pretrain {:>4}] ce-loss={:.4}", i, m.loss);
+            }
+        }
+        phases.add("pretrain", sw.secs());
+    }
+
+    // ---- RL ---------------------------------------------------------------
+    let run_sw = Stopwatch::start();
+    let groups_per_step = geo.train_batch / geo.group_size;
+    let group_ids = Arc::new(GroupIds::default());
+
+    let buffer = Arc::new(EpisodeBuffer::new(opts.staleness));
+    let pool = if opts.method.is_async() {
+        Some(RolloutPool::spawn(
+            opts.workers,
+            decode.clone(),
+            store.clone(),
+            buffer.clone(),
+            env.clone(),
+            geo.clone(),
+            sampler_cfg,
+            group_ids.clone(),
+            opts.seed,
+        ))
+    } else {
+        None
+    };
+
+    let mut result: Result<()> = Ok(());
+    for step in 0..opts.steps {
+        // -- acquire a batch of groups --------------------------------
+        let rollout_sw = Stopwatch::start();
+        let groups = if opts.method.is_async() {
+            match buffer.pop_groups(groups_per_step, trainer.version()) {
+                Some(g) => g,
+                None => break, // shutdown (can't happen unless errored)
+            }
+        } else {
+            // Synchronous: generate exactly what this step consumes.
+            let mut got = Vec::with_capacity(groups_per_step);
+            while got.len() < groups_per_step {
+                let gs = generate_batch(
+                    &decode,
+                    &trainer.snapshot(),
+                    env.as_ref(),
+                    &geo,
+                    &sampler_cfg,
+                    &mut rng,
+                    &group_ids,
+                )?;
+                got.extend(gs);
+            }
+            got.truncate(groups_per_step);
+            got
+        };
+        let rollout_secs = rollout_sw.secs();
+        phases.add("rollout", rollout_secs);
+
+        // -- assemble + train ------------------------------------------
+        let tb = batch::assemble(
+            &groups,
+            &geo,
+            trainer.version(),
+            opts.alpha_schedule,
+            opts.inject_staleness,
+        );
+        let step_result = trainer.step(&tb);
+        let (m, timing) = match step_result {
+            Ok(x) => x,
+            Err(e) => {
+                result = Err(e);
+                break;
+            }
+        };
+        phases.add("prox", timing.prox_secs);
+        phases.add("train", timing.train_secs);
+
+        logger.log_step(StepRecord {
+            step,
+            wallclock: run_sw.secs(),
+            version: trainer.version(),
+            mean_staleness: tb.mean_staleness,
+            mean_alpha: tb.mean_alpha,
+            reward: tb.mean_reward,
+            reward_exact: tb.mean_reward_exact,
+            prox_secs: timing.prox_secs,
+            train_secs: timing.train_secs,
+            rollout_secs,
+            train: m,
+        });
+
+        // -- periodic held-out eval -------------------------------------
+        if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
+            let sw = Stopwatch::start();
+            let r = eval::evaluate_exact(&decode, &trainer.snapshot(), &heldout, &geo)?;
+            phases.add("eval", sw.secs());
+            logger.log_eval(EvalRecord {
+                step,
+                wallclock: run_sw.secs(),
+                eval_reward: r,
+                n_prompts: heldout.len(),
+            });
+        }
+    }
+
+    // ---- shutdown ---------------------------------------------------------
+    buffer.shutdown();
+    if let Some(pool) = pool {
+        pool.join()?;
+    }
+    result?;
+    let total_secs = run_sw.secs();
+
+    // Final held-out eval (Table 1's "Final Eval Reward").
+    let final_eval = eval::evaluate_exact(&decode, &trainer.snapshot(), &heldout, &geo)?;
+    logger.log_eval(EvalRecord {
+        step: opts.steps,
+        wallclock: total_secs,
+        eval_reward: final_eval,
+        n_prompts: heldout.len(),
+    });
+
+    let dropped = buffer
+        .stats
+        .dropped_stale_groups
+        .load(std::sync::atomic::Ordering::Relaxed);
+
+    Ok(RunOutput {
+        logger,
+        final_snapshot: trainer.snapshot(),
+        final_eval,
+        total_secs,
+        phases,
+        dropped_stale_groups: dropped,
+        runtime,
+    })
+}
+
+/// Save a run's final parameters as `<out>/<preset>_<method>` checkpoint.
+pub fn save_checkpoint(opts: &RunOptions, out: &RunOutput) -> Result<PathBuf> {
+    let base =
+        PathBuf::from(&opts.out_dir).join(format!("{}_{}", opts.preset, opts.method.label()));
+    checkpoint::save(&base, &out.runtime.manifest, &out.final_snapshot)?;
+    Ok(base)
+}
+
+/// Build a supervised warm-start batch (correct solutions as targets).
+fn supervised_batch(
+    env: &dyn env::TaskEnv,
+    geo: &crate::runtime::PresetConfig,
+    rng: &mut Pcg64,
+) -> (Vec<i32>, Vec<f32>) {
+    let (b, s) = (geo.train_batch, geo.seq_len);
+    let mut tokens = Vec::with_capacity(b * s);
+    let mut mask = Vec::with_capacity(b * (s - 1));
+    for _ in 0..b {
+        let p = env.sample(rng);
+        let (t, m) =
+            tokenizer::encode_supervised(&p.prompt, &p.answer, geo.prompt_len, s);
+        tokens.extend(t);
+        mask.extend(m);
+    }
+    (tokens, mask)
+}

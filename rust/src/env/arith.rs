@@ -1,0 +1,159 @@
+//! GSM8K surrogate (paper Setup 1): short multi-step arithmetic problems.
+//!
+//! GSM8K problems need 2–8 elementary arithmetic steps; this generator
+//! produces 1–2-step expressions over small operands with standard
+//! precedence, e.g. `17+4*23=`. The verifiable-answer structure (one exact
+//! numeric answer per prompt) is what the RL loop actually exercises.
+
+use super::{Problem, TaskEnv};
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct ArithEnv {
+    /// Operand upper bound (exclusive).
+    max_operand: i64,
+    /// Probability of a 2-step expression (vs a single operation).
+    two_step_prob: f64,
+    name: &'static str,
+}
+
+impl ArithEnv {
+    /// Single-digit-friendly variant for the `tiny` preset (prompt_len 12).
+    pub fn easy() -> ArithEnv {
+        ArithEnv { max_operand: 10, two_step_prob: 0.0, name: "arith-easy" }
+    }
+
+    /// Setup-1 distribution: up-to-two-digit operands, ~30% two-step
+    /// problems. Tuned so a warm-started surrogate model lands in the
+    /// paper's initial-accuracy regime (GSM8K is "2-8 easy steps"; the
+    /// learnability knob here is operand size, not step count).
+    pub fn standard() -> ArithEnv {
+        ArithEnv { max_operand: 50, two_step_prob: 0.3, name: "arith" }
+    }
+
+    fn op_char(op: usize) -> char {
+        ['+', '-', '*'][op]
+    }
+
+    fn apply(a: i64, op: usize, b: i64) -> i64 {
+        match op {
+            0 => a + b,
+            1 => a - b,
+            _ => a * b,
+        }
+    }
+}
+
+impl TaskEnv for ArithEnv {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> Problem {
+        let m = self.max_operand;
+        let a = rng.range_i64(0, m);
+        let b = rng.range_i64(0, m);
+        // Keep products bounded: multiplication draws from a smaller range.
+        let small = |rng: &mut Pcg64| rng.range_i64(0, m.min(12));
+        if rng.next_f64() < self.two_step_prob {
+            // a op1 b op2 c with standard precedence ('*' binds tighter).
+            let op1 = rng.below(3) as usize;
+            let op2 = rng.below(3) as usize;
+            let (a, b, c) = match (op1, op2) {
+                (2, 2) => (small(rng), small(rng) % 10, small(rng) % 10),
+                (2, _) => (small(rng), small(rng), rng.range_i64(0, m)),
+                (_, 2) => (a, small(rng), small(rng)),
+                _ => (a, b, rng.range_i64(0, m)),
+            };
+            let value = match (op1, op2) {
+                // '*' second binds tighter: a op1 (b*c)
+                (o1, 2) => Self::apply(a, o1, b * c),
+                // otherwise left-to-right: (a op1 b) op2 c
+                (o1, o2) => Self::apply(Self::apply(a, o1, b), o2, c),
+            };
+            Problem {
+                prompt: format!(
+                    "{a}{}{b}{}{c}=",
+                    Self::op_char(op1),
+                    Self::op_char(op2)
+                ),
+                answer: value.to_string(),
+            }
+        } else {
+            let op = rng.below(3) as usize;
+            let (a, b) = if op == 2 { (small(rng), small(rng)) } else { (a, b) };
+            Problem {
+                prompt: format!("{a}{}{b}=", Self::op_char(op)),
+                answer: Self::apply(a, op, b).to_string(),
+            }
+        }
+    }
+
+    fn max_prompt_chars(&self) -> usize {
+        // "99-99*99=" style: 3 operands (<=2 digits at max_operand 100) + 2
+        // ops + '=' -> 9 chars. For easy: "9+9=" -> 4 chars.
+        if self.max_operand <= 10 {
+            4
+        } else {
+            9
+        }
+    }
+
+    fn max_answer_chars(&self) -> usize {
+        if self.max_operand <= 10 {
+            2 // up to 81 / -9
+        } else {
+            5 // e.g. -29*29-99 ~ -940, 99+29*29 = 940, bound generously
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::verifier::eval_expression;
+
+    #[test]
+    fn answers_verify_against_evaluator() {
+        let env = ArithEnv::standard();
+        let mut rng = Pcg64::from_seed(1);
+        for _ in 0..500 {
+            let p = env.sample(&mut rng);
+            let expr = p.prompt.trim_end_matches('=');
+            let v = eval_expression(expr).unwrap_or_else(|| panic!("bad expr {expr}"));
+            assert_eq!(v.to_string(), p.answer, "expr={expr}");
+        }
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        for env in [ArithEnv::easy(), ArithEnv::standard()] {
+            let mut rng = Pcg64::from_seed(2);
+            for _ in 0..1000 {
+                let p = env.sample(&mut rng);
+                assert!(
+                    p.prompt.len() <= env.max_prompt_chars(),
+                    "prompt too long: {}",
+                    p.prompt
+                );
+                assert!(
+                    p.answer.len() <= env.max_answer_chars(),
+                    "answer too long: {} for {}",
+                    p.answer,
+                    p.prompt
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn easy_is_single_step() {
+        let env = ArithEnv::easy();
+        let mut rng = Pcg64::from_seed(3);
+        for _ in 0..100 {
+            let p = env.sample(&mut rng);
+            let ops = p.prompt.matches(|c| "+-*".contains(c)).count();
+            assert_eq!(ops, 1, "{}", p.prompt);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! DAPO-Math surrogate (paper Setup 2): longer modular-arithmetic chains.
+//!
+//! Harder and longer than the Setup-1 arithmetic: nested parenthesised
+//! expressions with a modulus, e.g. `((417+88)%53*9)%41=`. The final `%m`
+//! keeps answers small and non-negative, which keeps the task verifiable
+//! with short generations while demanding genuinely multi-step computation.
+
+use super::{Problem, TaskEnv};
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct ChainEnv {
+    max_operand: i64,
+    max_modulus: i64,
+    /// Number of (op, operand) steps in the chain, inclusive range.
+    steps: (usize, usize),
+    name: &'static str,
+}
+
+impl ChainEnv {
+    /// Setup-2 distribution. Small moduli keep the answer space learnable
+    /// for surrogate-scale models while the chain still requires genuinely
+    /// multi-step modular reasoning (the DAPO-Math difficulty knob).
+    pub fn standard() -> ChainEnv {
+        ChainEnv { max_operand: 100, max_modulus: 20, steps: (2, 2), name: "modchain" }
+    }
+
+    /// Harder distribution for the AIME-like held-out suite.
+    pub fn hard() -> ChainEnv {
+        ChainEnv { max_operand: 1000, max_modulus: 97, steps: (3, 3), name: "modchain-hard" }
+    }
+}
+
+impl TaskEnv for ChainEnv {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> Problem {
+        let n_steps = self.steps.0 + rng.below((self.steps.1 - self.steps.0 + 1) as u64) as usize;
+        let m = rng.range_i64(5, self.max_modulus + 1);
+        let mut expr = format!("{}", rng.range_i64(0, self.max_operand));
+        let mut value: i64 = expr.parse().unwrap();
+        for step in 0..n_steps {
+            let op = rng.below(3) as usize;
+            // After the first step values are already reduced mod m, so
+            // multiplication stays bounded.
+            let operand = if op == 2 {
+                rng.range_i64(2, 10)
+            } else {
+                rng.range_i64(0, self.max_operand)
+            };
+            let opc = ['+', '-', '*'][op];
+            expr = format!("({expr}{opc}{operand})%{m}");
+            value = match op {
+                0 => value + operand,
+                1 => value - operand,
+                _ => value * operand,
+            }
+            .rem_euclid(m);
+            // The intermediate result is reduced each step; keep going.
+            let _ = step;
+        }
+        Problem { prompt: format!("{expr}="), answer: value.to_string() }
+    }
+
+    fn max_prompt_chars(&self) -> usize {
+        // Initial operand (<=3 chars) + per step "(...op NNN)%MM" adds at
+        // most 1+1+3+2+2 = 9 chars, + trailing '='. Verified empirically in
+        // `prompt_lengths_bounded`.
+        3 + self.steps.1 * 9 + 1
+    }
+
+    fn max_answer_chars(&self) -> usize {
+        2 // result < max_modulus <= 97
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::verifier::eval_expression;
+
+    #[test]
+    fn answers_verify_against_evaluator() {
+        let env = ChainEnv::standard();
+        let mut rng = Pcg64::from_seed(7);
+        for _ in 0..500 {
+            let p = env.sample(&mut rng);
+            let expr = p.prompt.trim_end_matches('=');
+            let v = eval_expression(expr).unwrap_or_else(|| panic!("bad expr {expr}"));
+            assert_eq!(v.to_string(), p.answer, "expr={expr}");
+        }
+    }
+
+    #[test]
+    fn answers_always_reduced() {
+        let env = ChainEnv::standard();
+        let mut rng = Pcg64::from_seed(8);
+        for _ in 0..500 {
+            let p = env.sample(&mut rng);
+            let v: i64 = p.answer.parse().unwrap();
+            assert!((0..20).contains(&v), "answer {v} out of range");
+        }
+    }
+
+    #[test]
+    fn prompt_lengths_bounded() {
+        for env in [ChainEnv::standard(), ChainEnv::hard()] {
+            let mut rng = Pcg64::from_seed(9);
+            let mut max_seen = 0;
+            for _ in 0..2000 {
+                let p = env.sample(&mut rng);
+                max_seen = max_seen.max(p.prompt.len());
+            }
+            assert!(
+                max_seen <= env.max_prompt_chars(),
+                "{}: saw {max_seen} > bound {}",
+                env.name(),
+                env.max_prompt_chars()
+            );
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Synthetic verifiable-math task environments.
+//!
+//! These stand in for the paper's datasets (GSM8K / DAPO-Math-17k) and
+//! benchmarks (AIME24 / MATH500) — see DESIGN.md's substitution table. The
+//! essential structure is preserved: prompts with a single verifiable
+//! numeric answer, group sampling (GRPO), exact-match evaluation, and
+//! held-out suites that are never trained on.
+
+pub mod arith;
+pub mod chain;
+pub mod suites;
+pub mod tokenizer;
+pub mod verifier;
+
+use crate::util::rng::Pcg64;
+
+/// One problem instance: the prompt shown to the model and the verifier's
+/// expected answer (both in tokenizer surface syntax).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Problem {
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// A task distribution. Generators must be deterministic functions of the
+/// RNG so that seeded runs reproduce exactly.
+pub trait TaskEnv: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Sample a training problem.
+    fn sample(&self, rng: &mut Pcg64) -> Problem;
+    /// Longest prompt string this env can emit (chars, including the
+    /// trailing '=', excluding BOS).
+    fn max_prompt_chars(&self) -> usize;
+    /// Longest answer this env can emit (chars, excluding EOS).
+    fn max_answer_chars(&self) -> usize;
+}
+
+/// Select the env that corresponds to an artifact preset, checking that its
+/// prompts/answers fit the preset's compiled geometry.
+pub fn env_for_preset(
+    preset: &str,
+    prompt_len: usize,
+    gen_len: usize,
+) -> Box<dyn TaskEnv> {
+    let env: Box<dyn TaskEnv> = match preset {
+        // setup1 surrogate: GSM8K-like short multi-step arithmetic.
+        "tiny" => Box::new(arith::ArithEnv::easy()),
+        "setup1" => Box::new(arith::ArithEnv::standard()),
+        // setup2 surrogate: DAPO-Math-like longer modular chains.
+        "setup2" | "big" => Box::new(chain::ChainEnv::standard()),
+        other => panic!("no environment mapped for preset {other:?}"),
+    };
+    assert!(
+        env.max_prompt_chars() + 1 <= prompt_len,
+        "{}: prompts (<= {} chars + BOS) don't fit prompt_len {}",
+        env.name(),
+        env.max_prompt_chars(),
+        prompt_len
+    );
+    assert!(
+        env.max_answer_chars() + 1 <= gen_len,
+        "{}: answers (<= {} chars + EOS) don't fit gen_len {}",
+        env.name(),
+        env.max_answer_chars(),
+        gen_len
+    );
+    env
+}
+
+/// Deterministic held-out problem list (disjoint RNG stream from training).
+pub fn heldout_problems(env: &dyn TaskEnv, seed: u64, n: usize) -> Vec<Problem> {
+    // Stream tag 0xE7A1 separates eval sampling from all training streams.
+    let mut rng = Pcg64::new(seed ^ 0x5eed_0f_e7a1, 0xe7a1);
+    (0..n).map(|_| env.sample(&mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heldout_is_deterministic() {
+        let env = arith::ArithEnv::standard();
+        let a = heldout_problems(&env, 42, 16);
+        let b = heldout_problems(&env, 42, 16);
+        assert_eq!(a, b);
+        let c = heldout_problems(&env, 43, 16);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn preset_envs_fit_geometry() {
+        // Mirrors the python presets; panics here mean config drift.
+        env_for_preset("tiny", 12, 8);
+        env_for_preset("setup1", 16, 10);
+        env_for_preset("setup2", 36, 12);
+    }
+}

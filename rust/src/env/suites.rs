@@ -1,0 +1,111 @@
+//! Frozen held-out benchmark suites — the AIME24 / MATH500 surrogates of
+//! paper Table 2.
+//!
+//! Each suite is a deterministic, seed-frozen problem list that no training
+//! run ever samples from (the generator streams are tagged differently from
+//! both training and periodic-eval streams). `aime_like` is small and hard
+//! (30 problems, matching AIME24's 30); `math_like` is larger and mixed
+//! (500 problems, matching MATH500).
+
+use super::arith::ArithEnv;
+use super::chain::ChainEnv;
+use super::{Problem, TaskEnv};
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub name: &'static str,
+    pub problems: Vec<Problem>,
+}
+
+const AIME_STREAM: u64 = 0xa13e_2024;
+const MATH_STREAM: u64 = 0x3a74_0500;
+
+/// AIME24 surrogate: 30 hard modular-chain problems.
+pub fn aime_like() -> Suite {
+    let env = ChainEnv::hard();
+    let mut rng = Pcg64::new(0xa3b0beac, AIME_STREAM);
+    Suite { name: "AIME24-like", problems: (0..30).map(|_| env.sample(&mut rng)).collect() }
+}
+
+/// MATH500 surrogate: 500 problems mixing chain and arithmetic styles.
+pub fn math_like() -> Suite {
+    let chain = ChainEnv::standard();
+    let arith = ArithEnv::standard();
+    let mut rng = Pcg64::new(0xa3b0beac, MATH_STREAM);
+    let problems = (0..500)
+        .map(|i| {
+            if i % 2 == 0 {
+                chain.sample(&mut rng)
+            } else {
+                arith.sample(&mut rng)
+            }
+        })
+        .collect();
+    Suite { name: "MATH500-like", problems }
+}
+
+/// Both Table-2 suites.
+pub fn table2_suites() -> Vec<Suite> {
+    vec![aime_like(), math_like()]
+}
+
+/// A suite restricted to problems that fit a preset's geometry (arith
+/// prompts fit everywhere; chain prompts need the setup2 window).
+pub fn fitting(suite: &Suite, max_prompt_chars: usize, max_answer_chars: usize) -> Suite {
+    Suite {
+        name: suite.name,
+        problems: suite
+            .problems
+            .iter()
+            .filter(|p| {
+                p.prompt.len() <= max_prompt_chars && p.answer.len() <= max_answer_chars
+            })
+            .cloned()
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::verifier::eval_expression;
+
+    #[test]
+    fn suites_are_frozen() {
+        let a = aime_like();
+        let b = aime_like();
+        assert_eq!(a.problems, b.problems);
+        assert_eq!(a.problems.len(), 30);
+        assert_eq!(math_like().problems.len(), 500);
+    }
+
+    #[test]
+    fn suite_answers_verify() {
+        for suite in table2_suites() {
+            for p in &suite.problems {
+                let v = eval_expression(p.prompt.trim_end_matches('='))
+                    .unwrap_or_else(|| panic!("bad {}", p.prompt));
+                assert_eq!(v.to_string(), p.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn suites_disjoint_from_heldout_eval() {
+        // Different stream tags must produce different problem lists.
+        let env = ChainEnv::standard();
+        let eval = crate::env::heldout_problems(&env, 0xa3b0beac, 30);
+        let aime = aime_like();
+        assert_ne!(eval, aime.problems);
+    }
+
+    #[test]
+    fn fitting_filters() {
+        let s = math_like();
+        let f = fitting(&s, 10, 5);
+        assert!(f.problems.len() < s.problems.len());
+        assert!(!f.problems.is_empty());
+        assert!(f.problems.iter().all(|p| p.prompt.len() <= 10));
+    }
+}

@@ -1,0 +1,171 @@
+//! Character-level tokenizer for the synthetic math tasks.
+//!
+//! The vocabulary layout is a fixed contract with `python/compile/config.py`
+//! (VOCAB_SIZE / PAD / BOS / EOS / SEP): the embedding table is sized and
+//! indexed identically on both sides of the AOT boundary.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3; // '='
+pub const DIGIT0: i32 = 4; // '0'..'9' -> 4..13
+
+pub const VOCAB_SIZE: usize = 64;
+
+/// Map a character to its token id, if representable.
+pub fn encode_char(c: char) -> Option<i32> {
+    Some(match c {
+        '=' => SEP,
+        '0'..='9' => DIGIT0 + (c as i32 - '0' as i32),
+        '+' => 14,
+        '-' => 15,
+        '*' => 16,
+        '%' => 17,
+        '(' => 18,
+        ')' => 19,
+        ' ' => 20,
+        _ => return None,
+    })
+}
+
+pub fn decode_token(t: i32) -> Option<char> {
+    Some(match t {
+        SEP => '=',
+        t if (DIGIT0..DIGIT0 + 10).contains(&t) => {
+            char::from(b'0' + (t - DIGIT0) as u8)
+        }
+        14 => '+',
+        15 => '-',
+        16 => '*',
+        17 => '%',
+        18 => '(',
+        19 => ')',
+        20 => ' ',
+        _ => return None,
+    })
+}
+
+/// Encode a string; panics on unrepresentable characters (task generators
+/// only emit the symbols above — anything else is a programming error).
+pub fn encode(s: &str) -> Vec<i32> {
+    s.chars()
+        .map(|c| encode_char(c).unwrap_or_else(|| panic!("untokenizable char {c:?}")))
+        .collect()
+}
+
+/// Decode a token slice, stopping at EOS/PAD; specials are skipped.
+pub fn decode(tokens: &[i32]) -> String {
+    let mut out = String::new();
+    for &t in tokens {
+        if t == EOS || t == PAD {
+            break;
+        }
+        if let Some(c) = decode_token(t) {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Left-pad a prompt into a fixed window: `[PAD.., BOS, prompt..]`.
+/// Generation then starts at exactly `prompt_len` for every sequence in a
+/// batch, which is what the fixed-shape decode executable requires.
+pub fn encode_prompt_padded(prompt: &str, prompt_len: usize) -> Vec<i32> {
+    let body = encode(prompt);
+    let used = body.len() + 1; // + BOS
+    assert!(
+        used <= prompt_len,
+        "prompt {prompt:?} ({used} tokens) exceeds prompt_len {prompt_len}"
+    );
+    let mut out = vec![PAD; prompt_len - used];
+    out.push(BOS);
+    out.extend(body);
+    out
+}
+
+/// Build a full supervised sequence `[prompt window][answer, EOS, PAD..]`
+/// and the loss mask over the answer region. The mask is aligned with the
+/// next-token targets (length `seq_len - 1`): position t scores the token
+/// at t+1, so mask[t] = 1 iff token t+1 is part of `answer + EOS`.
+pub fn encode_supervised(
+    prompt: &str,
+    answer: &str,
+    prompt_len: usize,
+    seq_len: usize,
+) -> (Vec<i32>, Vec<f32>) {
+    let mut tokens = encode_prompt_padded(prompt, prompt_len);
+    let ans = encode(answer);
+    assert!(
+        prompt_len + ans.len() + 1 <= seq_len,
+        "answer {answer:?} does not fit in seq_len {seq_len}"
+    );
+    tokens.extend(&ans);
+    tokens.push(EOS);
+    tokens.resize(seq_len, PAD);
+
+    let mut mask = vec![0.0f32; seq_len - 1];
+    for (t, m) in mask.iter_mut().enumerate() {
+        let next = t + 1;
+        if next >= prompt_len && next < prompt_len + ans.len() + 1 {
+            *m = 1.0;
+        }
+    }
+    (tokens, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_roundtrip() {
+        for c in "0123456789+-*%()= ".chars() {
+            let t = encode_char(c).unwrap();
+            assert_eq!(decode_token(t), Some(c));
+            assert!((t as usize) < VOCAB_SIZE);
+        }
+        assert_eq!(encode_char('x'), None);
+    }
+
+    #[test]
+    fn string_roundtrip() {
+        let s = "12+34*5=";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let mut toks = encode("42");
+        toks.push(EOS);
+        toks.extend(encode("99"));
+        assert_eq!(decode(&toks), "42");
+    }
+
+    #[test]
+    fn prompt_left_padded() {
+        let p = encode_prompt_padded("1+2=", 8);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[..3], &[PAD, PAD, PAD]);
+        assert_eq!(p[3], BOS);
+        assert_eq!(decode_token(p[7]), Some('='));
+    }
+
+    #[test]
+    fn supervised_mask_covers_answer_and_eos() {
+        let (toks, mask) = encode_supervised("1+2=", "3", 8, 12);
+        assert_eq!(toks.len(), 12);
+        assert_eq!(mask.len(), 11);
+        // answer token at pos 8, EOS at pos 9 -> mask[7] and mask[8] set.
+        assert_eq!(toks[8], DIGIT0 + 3);
+        assert_eq!(toks[9], EOS);
+        let on: Vec<usize> =
+            mask.iter().enumerate().filter(|(_, &m)| m > 0.0).map(|(i, _)| i).collect();
+        assert_eq!(on, vec![7, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds prompt_len")]
+    fn oversized_prompt_panics() {
+        encode_prompt_padded("123456789+1=", 4);
+    }
+}

@@ -1,0 +1,189 @@
+//! Answer verification and reward computation.
+//!
+//! The training reward follows the paper's verifiable-reward recipe: exact
+//! answer match. Because our surrogate models train from a brief warm start
+//! rather than a full pretrained LLM, the *training* reward adds a small
+//! partial credit for matching answer prefixes — this shapes early learning
+//! without changing what "solved" means. All *reported* eval numbers
+//! (Fig. 3, Tables 1–2) use strict exact match only.
+//!
+//! This module also contains a tiny expression evaluator used to
+//! cross-check the generators and to support arbitrary user-supplied
+//! problems in the examples.
+
+/// Evaluate `a op b [op c ...]` with standard precedence ('*' and '%' bind
+/// tighter than '+'/'-'). Supports parentheses. Returns None on malformed
+/// input or division-by-zero style errors.
+pub fn eval_expression(expr: &str) -> Option<i64> {
+    let tokens = lex(expr)?;
+    let mut pos = 0;
+    let v = parse_sum(&tokens, &mut pos)?;
+    if pos == tokens.len() {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Tok {
+    Num(i64),
+    Op(char),
+    LParen,
+    RParen,
+}
+
+fn lex(s: &str) -> Option<Vec<Tok>> {
+    let mut out = Vec::new();
+    let b = s.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b' ' => i += 1,
+            b'(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            b'+' | b'-' | b'*' | b'%' => {
+                out.push(Tok::Op(b[i] as char));
+                i += 1;
+            }
+            b'0'..=b'9' => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                out.push(Tok::Num(s[start..i].parse().ok()?));
+            }
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+fn parse_sum(t: &[Tok], pos: &mut usize) -> Option<i64> {
+    // Unary minus on the first term.
+    let mut acc = if t.get(*pos) == Some(&Tok::Op('-')) {
+        *pos += 1;
+        -parse_product(t, pos)?
+    } else {
+        parse_product(t, pos)?
+    };
+    while let Some(Tok::Op(op @ ('+' | '-'))) = t.get(*pos) {
+        let op = *op;
+        *pos += 1;
+        let rhs = parse_product(t, pos)?;
+        acc = if op == '+' { acc.checked_add(rhs)? } else { acc.checked_sub(rhs)? };
+    }
+    Some(acc)
+}
+
+fn parse_product(t: &[Tok], pos: &mut usize) -> Option<i64> {
+    let mut acc = parse_atom(t, pos)?;
+    while let Some(Tok::Op(op @ ('*' | '%'))) = t.get(*pos) {
+        let op = *op;
+        *pos += 1;
+        let rhs = parse_atom(t, pos)?;
+        acc = if op == '*' {
+            acc.checked_mul(rhs)?
+        } else {
+            // Euclidean-style non-negative modulus (what the chain env uses).
+            if rhs == 0 {
+                return None;
+            }
+            acc.rem_euclid(rhs)
+        };
+    }
+    Some(acc)
+}
+
+fn parse_atom(t: &[Tok], pos: &mut usize) -> Option<i64> {
+    match t.get(*pos)? {
+        Tok::Num(n) => {
+            *pos += 1;
+            Some(*n)
+        }
+        Tok::LParen => {
+            *pos += 1;
+            let v = parse_sum(t, pos)?;
+            if t.get(*pos) == Some(&Tok::RParen) {
+                *pos += 1;
+                Some(v)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Strict exact-match reward (used for all reported evaluation numbers).
+pub fn exact_reward(generated: &str, expected: &str) -> f64 {
+    if generated == expected {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Shaped training reward: 1.0 for exact match, otherwise up to 0.2 of
+/// partial credit for a matching prefix (per-character, position-wise).
+/// Bounded strictly below the exact-match reward so the optimum is
+/// unchanged.
+pub fn shaped_reward(generated: &str, expected: &str) -> f64 {
+    if generated == expected {
+        return 1.0;
+    }
+    if expected.is_empty() {
+        return 0.0;
+    }
+    let matching = generated
+        .chars()
+        .zip(expected.chars())
+        .take_while(|(a, b)| a == b)
+        .count();
+    0.2 * matching as f64 / expected.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precedence_and_parens() {
+        assert_eq!(eval_expression("2+3*4"), Some(14));
+        assert_eq!(eval_expression("(2+3)*4"), Some(20));
+        assert_eq!(eval_expression("10-2-3"), Some(5));
+        assert_eq!(eval_expression("((7+5)%5*3)%7"), Some(6));
+        assert_eq!(eval_expression("-3+10"), Some(7));
+    }
+
+    #[test]
+    fn mod_is_non_negative() {
+        assert_eq!(eval_expression("0-7%3"), Some(-1)); // -(7%3)? no: 0 - (7%3) = -1
+        assert_eq!(eval_expression("(0-7)%3"), Some(2)); // rem_euclid
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert_eq!(eval_expression("2+"), None);
+        assert_eq!(eval_expression("(2+3"), None);
+        assert_eq!(eval_expression("2++3"), None);
+        assert_eq!(eval_expression("abc"), None);
+        assert_eq!(eval_expression("7%0"), None);
+    }
+
+    #[test]
+    fn rewards() {
+        assert_eq!(exact_reward("42", "42"), 1.0);
+        assert_eq!(exact_reward("4", "42"), 0.0);
+        assert_eq!(shaped_reward("42", "42"), 1.0);
+        assert!((shaped_reward("41", "42") - 0.1).abs() < 1e-12);
+        assert_eq!(shaped_reward("9", "42"), 0.0);
+        assert!(shaped_reward("4", "42") < 1.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! # a3po — A-3PO: Approximated Proximal Policy Optimization
+//!
+//! A from-scratch reproduction of *"A-3PO: Accelerating Asynchronous LLM
+//! Training with Staleness-aware Proximal Policy Approximation"* as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the asynchronous RL coordinator: rollout
+//!   engine, staleness-tagged episode buffer, GRPO trainer, weight
+//!   versioning, synthetic verifiable-math environments, metrics, and the
+//!   PJRT runtime that executes AOT-compiled model artifacts.
+//! * **L2 (python/compile/model.py)** — the policy transformer and the
+//!   three training objectives (sync / recompute / loglinear), lowered once
+//!   to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   token-logprob/entropy computation and the fused decoupled-PPO loss
+//!   with A-3PO's staleness-aware interpolation (paper Eqs. 3–4).
+//!
+//! Python never runs at training time: `make artifacts` AOT-compiles
+//! everything; the `a3po` binary (and the examples/benches) only load
+//! `artifacts/<preset>/*.hlo.txt`.
+//!
+//! Quick start (after `make artifacts`):
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! cargo run --release --bin a3po -- train --preset setup1 --method loglinear
+//! ```
+
+pub mod bench;
+pub mod buffer;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod metrics;
+pub mod rollout;
+pub mod runtime;
+pub mod sampler;
+pub mod util;

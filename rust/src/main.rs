@@ -1,0 +1,142 @@
+//! `a3po` — leader binary.
+//!
+//! Subcommands:
+//!   train      run one training job (any method/preset)
+//!   eval       evaluate a checkpoint on the Table-2 benchmark suites
+//!   inspect    print a preset's artifact manifest summary
+//!
+//! Examples:
+//!   a3po train --preset setup1 --method loglinear --steps 100 --pretrain-steps 60
+//!   a3po eval  --preset setup2 --ckpt runs/setup2_loglinear
+//!   a3po inspect --preset tiny
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use a3po::config::RunOptions;
+use a3po::coordinator::{self, eval::evaluate_pass_at_1};
+use a3po::env::suites;
+use a3po::runtime::{checkpoint, Runtime};
+use a3po::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, rest)) if !c.starts_with("--") => (c.clone(), rest.to_vec()),
+        _ => {
+            eprintln!(
+                "usage: a3po <train|eval|inspect> [options]   (try `a3po train --help`)"
+            );
+            std::process::exit(2);
+        }
+    };
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "inspect" => cmd_inspect(rest),
+        other => bail!("unknown subcommand {other:?} (train|eval|inspect)"),
+    }
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let parsed = RunOptions::cli("a3po train", "run one A-3PO training job")
+        .flag("save-ckpt", "save the final parameters under --out")
+        .parse_from(argv)
+        .unwrap_or_else(|msg| {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        });
+    let opts = RunOptions::from_parsed(&parsed).map_err(anyhow::Error::msg)?;
+    let out = coordinator::run(&opts)?;
+    if parsed.flag("save-ckpt") {
+        let p = coordinator::save_checkpoint(&opts, &out)?;
+        eprintln!("checkpoint saved to {}.{{json,bin}}", p.display());
+    }
+    println!("{}", out.summary_json(&opts).dump());
+    Ok(())
+}
+
+fn cmd_eval(argv: Vec<String>) -> Result<()> {
+    let parsed = Args::new("a3po eval", "evaluate a checkpoint on the benchmark suites")
+        .opt("preset", "setup2", "artifact preset the checkpoint was trained with")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("ckpt", "", "checkpoint path base (without .json/.bin)")
+        .flag("greedy", "greedy decoding instead of temperature sampling")
+        .parse_from(argv)
+        .unwrap_or_else(|msg| {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        });
+    let preset = parsed.string("preset");
+    let dir = PathBuf::from(parsed.str("artifacts")).join(&preset);
+    let runtime = Runtime::load(&dir, Some(&["decode", "init"]))?;
+    let geo = &runtime.manifest.preset;
+
+    let snapshot = if parsed.str("ckpt").is_empty() {
+        eprintln!("no --ckpt given: evaluating freshly initialised parameters");
+        runtime.init_params(0)?
+    } else {
+        checkpoint::load(&PathBuf::from(parsed.str("ckpt")), &runtime.manifest)?
+    };
+
+    let decode = runtime.exec("decode")?;
+    println!("{:<16} {:>8} {:>16}", "suite", "n", "pass@1 ± stderr");
+    for suite in suites::table2_suites() {
+        let usable = suites::fitting(
+            &suite,
+            geo.prompt_len.saturating_sub(1),
+            geo.gen_len.saturating_sub(1),
+        );
+        let (p, se) = evaluate_pass_at_1(
+            decode,
+            &snapshot,
+            &usable.problems,
+            geo,
+            parsed.flag("greedy"),
+        )?;
+        println!(
+            "{:<16} {:>8} {:>9.2}% ± {:.2}%",
+            suite.name,
+            usable.problems.len(),
+            100.0 * p,
+            100.0 * se
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(argv: Vec<String>) -> Result<()> {
+    let parsed = Args::new("a3po inspect", "print a preset's manifest summary")
+        .opt("preset", "tiny", "artifact preset")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse_from(argv)
+        .unwrap_or_else(|msg| {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        });
+    let dir = PathBuf::from(parsed.str("artifacts")).join(parsed.str("preset"));
+    let m = a3po::runtime::Manifest::load(&dir)?;
+    let p = &m.preset;
+    println!("preset        {}", p.name);
+    println!("params        {} tensors, {} scalars", m.params.len(), p.param_count);
+    println!(
+        "geometry      seq={} (prompt {} + gen {}), vocab={}",
+        p.seq_len, p.prompt_len, p.gen_len, p.vocab
+    );
+    println!(
+        "batching      rollout={} (groups of {}), train={} x {} minibatches",
+        p.rollout_batch, p.group_size, p.train_batch, p.n_minibatch
+    );
+    println!("executables:");
+    for (name, e) in &m.executables {
+        println!(
+            "  {:<16} {:>8.2} MB HLO   {:>3} inputs, {:>3} outputs",
+            name,
+            e.hlo_bytes as f64 / 1e6,
+            e.inputs.len(),
+            e.outputs.len()
+        );
+    }
+    Ok(())
+}

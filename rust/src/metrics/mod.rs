@@ -1,0 +1,272 @@
+//! Metrics: per-step training records, evaluation records, and JSONL
+//! persistence. Every figure/table reproduction reads these records.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Layout of the metric vector emitted by the train executables — must
+/// match `python/compile/config.py::METRIC_NAMES`.
+pub const TRAIN_METRIC_NAMES: [&str; 8] = [
+    "loss",
+    "entropy",
+    "max_is_weight",
+    "min_is_weight",
+    "clipped_tokens",
+    "mean_ratio",
+    "grad_norm",
+    "approx_kl",
+];
+
+/// Typed view over the train-executable metric vector.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainMetrics {
+    pub loss: f64,
+    pub entropy: f64,
+    pub max_is_weight: f64,
+    pub min_is_weight: f64,
+    pub clipped_tokens: f64,
+    pub mean_ratio: f64,
+    pub grad_norm: f64,
+    pub approx_kl: f64,
+}
+
+impl TrainMetrics {
+    pub fn from_vector(v: &[f32]) -> TrainMetrics {
+        assert_eq!(v.len(), TRAIN_METRIC_NAMES.len(), "metric vector layout drift");
+        TrainMetrics {
+            loss: v[0] as f64,
+            entropy: v[1] as f64,
+            max_is_weight: v[2] as f64,
+            min_is_weight: v[3] as f64,
+            clipped_tokens: v[4] as f64,
+            mean_ratio: v[5] as f64,
+            grad_norm: v[6] as f64,
+            approx_kl: v[7] as f64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("loss", Json::Num(self.loss)),
+            ("entropy", Json::Num(self.entropy)),
+            ("max_is_weight", Json::Num(self.max_is_weight)),
+            ("min_is_weight", Json::Num(self.min_is_weight)),
+            ("clipped_tokens", Json::Num(self.clipped_tokens)),
+            ("mean_ratio", Json::Num(self.mean_ratio)),
+            ("grad_norm", Json::Num(self.grad_norm)),
+            ("approx_kl", Json::Num(self.approx_kl)),
+        ])
+    }
+}
+
+/// One training step's full record.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: u64,
+    /// Seconds since run start when the step completed.
+    pub wallclock: f64,
+    pub version: u64,
+    /// Mean staleness d over the batch.
+    pub mean_staleness: f64,
+    /// Mean alpha over the batch (Eq. 4).
+    pub mean_alpha: f64,
+    /// Mean shaped training reward of the consumed batch.
+    pub reward: f64,
+    /// Mean exact-match reward of the consumed batch.
+    pub reward_exact: f64,
+    /// Wall-clock seconds of the proximal-policy phase (Fig. 1).
+    pub prox_secs: f64,
+    /// Wall-clock seconds of the train-executable call.
+    pub train_secs: f64,
+    /// Wall-clock seconds spent generating (sync method only; async = 0).
+    pub rollout_secs: f64,
+    pub train: TrainMetrics,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("step".into())),
+            ("step", Json::Num(self.step as f64)),
+            ("wallclock", Json::Num(self.wallclock)),
+            ("version", Json::Num(self.version as f64)),
+            ("mean_staleness", Json::Num(self.mean_staleness)),
+            ("mean_alpha", Json::Num(self.mean_alpha)),
+            ("reward", Json::Num(self.reward)),
+            ("reward_exact", Json::Num(self.reward_exact)),
+            ("prox_secs", Json::Num(self.prox_secs)),
+            ("train_secs", Json::Num(self.train_secs)),
+            ("rollout_secs", Json::Num(self.rollout_secs)),
+            ("train", self.train.to_json()),
+        ])
+    }
+}
+
+/// One held-out evaluation pass.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub wallclock: f64,
+    /// Strict exact-match mean reward over the held-out prompts.
+    pub eval_reward: f64,
+    pub n_prompts: usize,
+}
+
+impl EvalRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("eval".into())),
+            ("step", Json::Num(self.step as f64)),
+            ("wallclock", Json::Num(self.wallclock)),
+            ("eval_reward", Json::Num(self.eval_reward)),
+            ("n_prompts", Json::Num(self.n_prompts as f64)),
+        ])
+    }
+}
+
+/// Collects records in memory and (optionally) streams them to a JSONL
+/// file as the run progresses.
+#[derive(Debug)]
+pub struct MetricsLogger {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    writer: Option<BufWriter<File>>,
+    echo: bool,
+}
+
+impl MetricsLogger {
+    pub fn in_memory() -> MetricsLogger {
+        MetricsLogger { steps: vec![], evals: vec![], writer: None, echo: false }
+    }
+
+    pub fn to_file(path: &Path, echo: bool) -> Result<MetricsLogger> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        Ok(MetricsLogger {
+            steps: vec![],
+            evals: vec![],
+            writer: Some(BufWriter::new(f)),
+            echo,
+        })
+    }
+
+    fn emit(&mut self, j: &Json) {
+        if let Some(w) = &mut self.writer {
+            let _ = writeln!(w, "{}", j.dump());
+            let _ = w.flush();
+        }
+    }
+
+    pub fn log_step(&mut self, rec: StepRecord) {
+        if self.echo {
+            eprintln!(
+                "[step {:>4}] loss={:+.4} reward={:.3} exact={:.3} ent={:.3} \
+                 clip={:>4.0} d̄={:.2} ᾱ={:.2} prox={:.1}ms train={:.2}s",
+                rec.step,
+                rec.train.loss,
+                rec.reward,
+                rec.reward_exact,
+                rec.train.entropy,
+                rec.train.clipped_tokens,
+                rec.mean_staleness,
+                rec.mean_alpha,
+                rec.prox_secs * 1e3,
+                rec.train_secs,
+            );
+        }
+        self.emit(&rec.to_json());
+        self.steps.push(rec);
+    }
+
+    pub fn log_eval(&mut self, rec: EvalRecord) {
+        if self.echo {
+            eprintln!(
+                "[eval @ step {:>4}] exact-match reward = {:.3} ({} prompts)",
+                rec.step, rec.eval_reward, rec.n_prompts
+            );
+        }
+        self.emit(&rec.to_json());
+        self.evals.push(rec);
+    }
+
+    /// Final-run summary used by Table 1 and the examples.
+    pub fn summary(&self) -> Json {
+        let final_eval = self.evals.last().map(|e| e.eval_reward).unwrap_or(f64::NAN);
+        let total = self.steps.last().map(|s| s.wallclock).unwrap_or(0.0);
+        let prox_total: f64 = self.steps.iter().map(|s| s.prox_secs).sum();
+        Json::obj(vec![
+            ("steps", Json::Num(self.steps.len() as f64)),
+            ("final_eval_reward", Json::Num(final_eval)),
+            ("total_seconds", Json::Num(total)),
+            ("prox_seconds_total", Json::Num(prox_total)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64) -> StepRecord {
+        StepRecord {
+            step,
+            wallclock: step as f64,
+            version: step,
+            mean_staleness: 1.0,
+            mean_alpha: 0.5,
+            reward: 0.4,
+            reward_exact: 0.3,
+            prox_secs: 0.001,
+            train_secs: 0.2,
+            rollout_secs: 0.0,
+            train: TrainMetrics::from_vector(&[0.1, 2.0, 1.5, 0.5, 10.0, 1.0, 0.9, 0.01]),
+        }
+    }
+
+    #[test]
+    fn metric_vector_layout() {
+        let m = TrainMetrics::from_vector(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(m.loss, 1.0);
+        assert_eq!(m.approx_kl, 8.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "layout drift")]
+    fn wrong_length_panics() {
+        TrainMetrics::from_vector(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("a3po-metrics-{}", std::process::id()));
+        let path = dir.join("m.jsonl");
+        let mut log = MetricsLogger::to_file(&path, false).unwrap();
+        log.log_step(rec(1));
+        log.log_eval(EvalRecord { step: 1, wallclock: 1.0, eval_reward: 0.5, n_prompts: 8 });
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("kind").as_str(), Some("step"));
+        assert_eq!(j.get("train").get("entropy").as_f64(), Some(2.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_reports_final_eval() {
+        let mut log = MetricsLogger::in_memory();
+        log.log_step(rec(1));
+        log.log_eval(EvalRecord { step: 1, wallclock: 1.0, eval_reward: 0.25, n_prompts: 4 });
+        log.log_eval(EvalRecord { step: 2, wallclock: 2.0, eval_reward: 0.75, n_prompts: 4 });
+        let s = log.summary();
+        assert_eq!(s.get("final_eval_reward").as_f64(), Some(0.75));
+    }
+}

@@ -1,0 +1,221 @@
+//! The rollout engine: batched token-by-token generation through the AOT
+//! `decode` executable, playing the role of the paper's inference engine
+//! (SGLang/vLLM): it produces responses *and* their behaviour-policy
+//! log-probs, tagged with the weight version that generated them.
+//!
+//! Async methods run `RolloutWorker`s on dedicated threads, continuously
+//! pulling the latest published weights and pushing complete GRPO groups
+//! into the `EpisodeBuffer`; the sync baseline calls `generate_batch`
+//! inline between training steps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::buffer::{Episode, EpisodeBuffer};
+use crate::env::{tokenizer, verifier, Problem, TaskEnv};
+use crate::runtime::{Executable, HostTensor, ParamSnapshot, PresetConfig, WeightStore};
+use crate::sampler::{sample, SamplerConfig};
+use crate::util::rng::Pcg64;
+
+/// Monotonic GRPO group-id allocator shared by all rollout sources.
+#[derive(Debug, Default)]
+pub struct GroupIds(AtomicU64);
+
+impl GroupIds {
+    pub fn next_block(&self, n: u64) -> u64 {
+        self.0.fetch_add(n, Ordering::Relaxed)
+    }
+}
+
+/// Generate one rollout batch: `rollout_batch / group_size` prompts, each
+/// with `group_size` sampled responses. Returns complete groups.
+pub fn generate_batch(
+    decode: &Executable,
+    snapshot: &ParamSnapshot,
+    env: &dyn TaskEnv,
+    geo: &PresetConfig,
+    sampler_cfg: &SamplerConfig,
+    rng: &mut Pcg64,
+    group_ids: &GroupIds,
+) -> Result<Vec<Vec<Episode>>> {
+    let problems: Vec<Problem> =
+        (0..geo.rollout_batch / geo.group_size).map(|_| env.sample(rng)).collect();
+    let episodes = generate_for_problems(
+        decode,
+        snapshot,
+        &repeat_problems(&problems, geo.group_size),
+        geo,
+        sampler_cfg,
+        rng,
+    )?;
+    // Slice the flat episode list back into groups of G.
+    let base = group_ids.next_block(problems.len() as u64);
+    let g = geo.group_size;
+    let mut groups = Vec::with_capacity(problems.len());
+    let mut it = episodes.into_iter();
+    for pi in 0..problems.len() {
+        let mut group = Vec::with_capacity(g);
+        for _ in 0..g {
+            let mut e = it.next().expect("episode count mismatch");
+            e.group = base + pi as u64;
+            group.push(e);
+        }
+        groups.push(group);
+    }
+    Ok(groups)
+}
+
+fn repeat_problems(problems: &[Problem], g: usize) -> Vec<Problem> {
+    let mut out = Vec::with_capacity(problems.len() * g);
+    for p in problems {
+        for _ in 0..g {
+            out.push(p.clone());
+        }
+    }
+    out
+}
+
+/// Core generation loop over a fixed problem list (len == rollout_batch).
+/// Used by both training rollouts and held-out evaluation.
+pub fn generate_for_problems(
+    decode: &Executable,
+    snapshot: &ParamSnapshot,
+    problems: &[Problem],
+    geo: &PresetConfig,
+    sampler_cfg: &SamplerConfig,
+    rng: &mut Pcg64,
+) -> Result<Vec<Episode>> {
+    let br = geo.rollout_batch;
+    assert_eq!(problems.len(), br, "generate_for_problems needs a full batch");
+    let (s, t, v) = (geo.seq_len, geo.seq_len - 1, geo.vocab);
+    let pl = geo.prompt_len;
+
+    // Token window, row-major [br, s].
+    let mut tokens = vec![tokenizer::PAD; br * s];
+    for (row, p) in problems.iter().enumerate() {
+        let prompt = tokenizer::encode_prompt_padded(&p.prompt, pl);
+        tokens[row * s..row * s + pl].copy_from_slice(&prompt);
+    }
+    let mut behav_logp = vec![0.0f32; br * t];
+    let mut mask = vec![0.0f32; br * t];
+    let mut finished = vec![false; br];
+
+    for pos in pl..s {
+        if finished.iter().all(|&f| f) {
+            break;
+        }
+        let tokens_lit =
+            HostTensor::i32(vec![br, s], tokens.clone()).to_literal()?;
+        let pos_lit = HostTensor::scalar_i32(pos as i32).to_literal()?;
+        let mut refs = snapshot.literal_refs();
+        refs.push(&tokens_lit);
+        refs.push(&pos_lit);
+        let outs = decode.run_literals(&refs)?;
+        let logits = outs[0].to_vec::<f32>()?; // [br, v]
+
+        for row in 0..br {
+            if finished[row] {
+                continue;
+            }
+            let (tok, logp) = sample(&logits[row * v..(row + 1) * v], sampler_cfg, rng);
+            tokens[row * s + pos] = tok;
+            behav_logp[row * t + pos - 1] = logp;
+            mask[row * t + pos - 1] = 1.0;
+            if tok == tokenizer::EOS {
+                finished[row] = true;
+            }
+        }
+    }
+
+    let version = snapshot.version;
+    Ok((0..br)
+        .map(|row| {
+            let row_tokens = tokens[row * s..(row + 1) * s].to_vec();
+            let text = tokenizer::decode(&row_tokens[pl..]);
+            let p = &problems[row];
+            Episode {
+                behav_logp: behav_logp[row * t..(row + 1) * t].to_vec(),
+                mask: mask[row * t..(row + 1) * t].to_vec(),
+                reward: verifier::shaped_reward(&text, &p.answer),
+                reward_exact: verifier::exact_reward(&text, &p.answer),
+                version,
+                group: 0, // assigned by the caller
+                text,
+                tokens: row_tokens,
+                problem: p.clone(),
+            }
+        })
+        .collect())
+}
+
+/// Handle to the async rollout worker pool.
+pub struct RolloutPool {
+    handles: Vec<JoinHandle<Result<()>>>,
+}
+
+impl RolloutPool {
+    /// Spawn `n` workers that generate until the buffer shuts down.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        n: usize,
+        decode: Arc<Executable>,
+        store: Arc<WeightStore>,
+        buffer: Arc<EpisodeBuffer>,
+        env: Arc<dyn TaskEnv>,
+        geo: PresetConfig,
+        sampler_cfg: SamplerConfig,
+        group_ids: Arc<GroupIds>,
+        seed: u64,
+    ) -> RolloutPool {
+        let handles = (0..n)
+            .map(|wid| {
+                let decode = decode.clone();
+                let store = store.clone();
+                let buffer = buffer.clone();
+                let env = env.clone();
+                let geo = geo.clone();
+                let sampler_cfg = sampler_cfg;
+                let group_ids = group_ids.clone();
+                std::thread::Builder::new()
+                    .name(format!("rollout-{wid}"))
+                    .spawn(move || -> Result<()> {
+                        let mut rng = Pcg64::new(seed ^ 0x9011_0000, wid as u64 + 1);
+                        while !buffer.is_shutdown() {
+                            let snapshot = store.latest();
+                            let groups = generate_batch(
+                                &decode,
+                                &snapshot,
+                                env.as_ref(),
+                                &geo,
+                                &sampler_cfg,
+                                &mut rng,
+                                &group_ids,
+                            )?;
+                            for g in groups {
+                                if !buffer.push_group(g) {
+                                    return Ok(()); // shutdown
+                                }
+                            }
+                        }
+                        Ok(())
+                    })
+                    .expect("spawning rollout worker")
+            })
+            .collect();
+        RolloutPool { handles }
+    }
+
+    /// Join all workers (call after `buffer.shutdown()`).
+    pub fn join(self) -> Result<()> {
+        for h in self.handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => anyhow::bail!("rollout worker panicked"),
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,109 @@
+//! Checkpointing: save/load parameter snapshots so benchmark evaluation
+//! (Table 2) can run on a previously trained policy.
+//!
+//! Format: `<path>.json` — a JSON header with the param specs and version;
+//! `<path>.bin` — the raw little-endian f32 data concatenated in manifest
+//! order.
+
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::manifest::{Dtype, Manifest, TensorSpec};
+use super::params::ParamSnapshot;
+use super::tensor::HostTensor;
+
+pub fn save(path: &Path, manifest: &Manifest, snapshot: &ParamSnapshot) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut header = vec![
+        ("format", Json::Str("a3po-ckpt-v1".into())),
+        ("preset", Json::Str(manifest.preset.name.clone())),
+        ("version", Json::Num(snapshot.version as f64)),
+        (
+            "params",
+            Json::Arr(
+                manifest
+                    .params
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::Str(s.name.clone())),
+                            (
+                                "shape",
+                                Json::Arr(
+                                    s.shape.iter().map(|&d| Json::Num(d as f64)).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    header.sort_by(|a, b| a.0.cmp(b.0));
+    std::fs::write(path.with_extension("json"), Json::obj(header).dump())?;
+
+    let mut bin = std::io::BufWriter::new(std::fs::File::create(path.with_extension("bin"))?);
+    for (lit, spec) in snapshot.params.iter().zip(&manifest.params) {
+        let t = HostTensor::from_literal(lit.lit(), spec)?;
+        let data = t.as_f32()?;
+        let bytes =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        bin.write_all(bytes)?;
+    }
+    bin.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path, manifest: &Manifest) -> Result<Arc<ParamSnapshot>> {
+    let header_path = path.with_extension("json");
+    let header = Json::parse(
+        &std::fs::read_to_string(&header_path)
+            .with_context(|| format!("reading {}", header_path.display()))?,
+    )?;
+    if header.get("format").as_str() != Some("a3po-ckpt-v1") {
+        bail!("bad checkpoint format");
+    }
+    if header.get("preset").as_str() != Some(manifest.preset.name.as_str()) {
+        bail!(
+            "checkpoint is for preset {:?}, manifest is {:?}",
+            header.get("preset"),
+            manifest.preset.name
+        );
+    }
+    let version = header.get("version").as_i64().unwrap_or(0) as u64;
+
+    let mut f = std::io::BufReader::new(std::fs::File::open(path.with_extension("bin"))?);
+    let mut literals = Vec::with_capacity(manifest.params.len());
+    for spec in &manifest.params {
+        if spec.dtype != Dtype::F32 {
+            bail!("checkpoint only supports f32 params");
+        }
+        let n = spec.elements();
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)
+            .with_context(|| format!("reading param {}", spec.name))?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        literals.push(HostTensor::f32(spec.shape.clone(), data).to_literal()?);
+    }
+    // Trailing data means spec drift.
+    let mut extra = [0u8; 1];
+    if f.read(&mut extra)? != 0 {
+        bail!("checkpoint has trailing data (param spec drift?)");
+    }
+    Ok(ParamSnapshot::new(version, literals))
+}
+
+/// Sanity helper for tests: total f32 elements a checkpoint should hold.
+pub fn expected_elements(specs: &[TensorSpec]) -> usize {
+    specs.iter().map(|s| s.elements()).sum()
+}

@@ -1,0 +1,58 @@
+//! PJRT client wrapper: one CPU client shared by every thread in the
+//! process, plus executable loading from HLO text.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (jax >= 0.5 protos are rejected by xla_extension 0.5.1; the text
+//! parser reassigns instruction ids).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Process-wide PJRT client.
+///
+/// SAFETY of `Send + Sync`: the underlying `TfrtCpuClient` (and PJRT client
+/// API generally) is thread-safe — compilation and execution may be invoked
+/// concurrently from multiple threads. The Rust wrapper types only lack the
+/// auto-traits because they hold raw pointers.
+pub struct Client {
+    inner: PjRtClient,
+}
+
+unsafe impl Send for Client {}
+unsafe impl Sync for Client {}
+
+impl Client {
+    pub fn cpu() -> Result<Arc<Client>> {
+        let inner = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(Client { inner }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn raw(&self) -> &PjRtClient {
+        &self.inner
+    }
+
+    /// Load + compile an HLO-text file into a PJRT executable.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+impl std::fmt::Debug for Client {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Client({})", self.platform())
+    }
+}

@@ -1,0 +1,130 @@
+//! A loaded executable bound to its manifest signature.
+//!
+//! `Executable::run` validates input count (and optionally shapes), invokes
+//! PJRT, fetches the result tuple to the host, and splits it into literals
+//! following the manifest's output signature.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtLoadedExecutable};
+
+use super::client::Client;
+use super::manifest::ExecSpec;
+use super::tensor::HostTensor;
+
+/// SAFETY: PJRT loaded executables are thread-safe for concurrent Execute
+/// calls (the PJRT contract); the wrapper only lacks auto-traits because of
+/// raw pointers. Rollout workers share one decode executable.
+struct SendExec(PjRtLoadedExecutable);
+unsafe impl Send for SendExec {}
+unsafe impl Sync for SendExec {}
+
+pub struct Executable {
+    exe: SendExec,
+    pub spec: ExecSpec,
+    /// Cumulative execute statistics (used by §Perf reporting).
+    stats: std::sync::Mutex<ExecStats>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+impl Executable {
+    pub fn load(client: &Arc<Client>, spec: &ExecSpec) -> Result<Arc<Executable>> {
+        let t0 = Instant::now();
+        let exe = client
+            .compile_hlo_file(&spec.file)
+            .with_context(|| format!("loading executable {:?}", spec.name))?;
+        let dt = t0.elapsed().as_secs_f64();
+        if std::env::var_os("A3PO_QUIET").is_none() {
+            eprintln!(
+                "[runtime] compiled {:<18} ({:>7.2} MB HLO) in {:.2}s",
+                spec.name,
+                spec.hlo_bytes as f64 / 1e6,
+                dt
+            );
+        }
+        Ok(Arc::new(Executable {
+            exe: SendExec(exe),
+            spec: spec.clone(),
+            stats: std::sync::Mutex::new(ExecStats::default()),
+        }))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Execute with pre-packed literals (fast path: callers that keep
+    /// literals resident, e.g. the trainer's parameter state).
+    pub fn run_literals(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest says {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .0
+            .execute::<&Literal>(inputs)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.spec.name))?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut s = self.stats.lock().unwrap();
+        s.calls += 1;
+        s.total_secs += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    /// Execute from host tensors (validates shapes against the manifest).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest says {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            t.check(spec).with_context(|| format!("in {}", self.spec.name))?;
+            lits.push(t.to_literal()?);
+        }
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let outs = self.run_literals(&refs)?;
+        outs.iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, spec)| HostTensor::from_literal(l, spec))
+            .collect()
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Executable({})", self.spec.name)
+    }
+}

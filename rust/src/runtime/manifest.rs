@@ -1,0 +1,214 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust coordinator.
+//!
+//! The manifest records, for every AOT-compiled executable, the exact flat
+//! positional input/output signature (names, shapes, dtypes) plus the model
+//! parameter order, so the Rust side can pack and unpack literals without
+//! ever re-deriving shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+}
+
+/// Shape + dtype + name of one tensor in an executable signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.get("name").as_str().ok_or_else(|| anyhow!("sig missing name"))?;
+        let dtype = Dtype::parse(j.get("dtype").as_str().unwrap_or("f32"))?;
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("sig {name} missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name: name.to_string(), shape, dtype })
+    }
+}
+
+/// One AOT-compiled executable's file + flat positional signature.
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub hlo_bytes: u64,
+}
+
+/// Geometry the coordinator needs, echoed from the python preset.
+#[derive(Debug, Clone)]
+pub struct PresetConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub group_size: usize,
+    pub rollout_batch: usize,
+    pub train_batch: usize,
+    pub n_minibatch: usize,
+    pub param_count: u64,
+    pub lr: f64,
+    pub temperature: f64,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: PresetConfig,
+    pub params: Vec<TensorSpec>,
+    pub metric_names: Vec<String>,
+    pub executables: BTreeMap<String, ExecSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first?)", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        if j.get("format").as_str() != Some("hlo-text-v1") {
+            bail!("unsupported manifest format {:?}", j.get("format"));
+        }
+        let cfg = j.get("config");
+        let model = cfg.get("model");
+        let need = |v: &Json, what: &str| -> Result<usize> {
+            v.as_usize().ok_or_else(|| anyhow!("manifest missing {what}"))
+        };
+        let preset = PresetConfig {
+            name: cfg.get("name").as_str().unwrap_or("?").to_string(),
+            vocab: need(model.get("vocab"), "model.vocab")?,
+            seq_len: need(cfg.get("seq_len"), "seq_len")?,
+            prompt_len: need(cfg.get("prompt_len"), "prompt_len")?,
+            gen_len: need(cfg.get("gen_len"), "gen_len")?,
+            group_size: need(cfg.get("group_size"), "group_size")?,
+            rollout_batch: need(cfg.get("rollout_batch"), "rollout_batch")?,
+            train_batch: need(cfg.get("train_batch"), "train_batch")?,
+            n_minibatch: need(cfg.get("n_minibatch"), "n_minibatch")?,
+            param_count: model.get("param_count").as_i64().unwrap_or(0) as u64,
+            lr: cfg.get("lr").as_f64().unwrap_or(0.0),
+            temperature: cfg.get("temperature").as_f64().unwrap_or(1.0),
+        };
+
+        let params = j
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+
+        let metric_names = j
+            .get("metric_names")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+
+        let mut executables = BTreeMap::new();
+        let execs = j
+            .get("executables")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing executables"))?;
+        for (name, e) in execs {
+            let file = e.get("file").as_str().ok_or_else(|| anyhow!("{name}: no file"))?;
+            let parse_sigs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{name}: no {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            executables.insert(
+                name.clone(),
+                ExecSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: parse_sigs("inputs")?,
+                    outputs: parse_sigs("outputs")?,
+                    hlo_bytes: e.get("hlo_bytes").as_i64().unwrap_or(0) as u64,
+                },
+            );
+        }
+
+        let m = Manifest { dir: dir.to_path_buf(), preset, params, metric_names, executables };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Internal consistency checks (shapes agree across executables).
+    fn validate(&self) -> Result<()> {
+        let p = &self.preset;
+        if p.train_batch % p.n_minibatch != 0 {
+            bail!("train_batch not divisible by n_minibatch");
+        }
+        if p.rollout_batch % p.group_size != 0 {
+            bail!("rollout_batch not divisible by group_size");
+        }
+        if p.seq_len != p.prompt_len + p.gen_len {
+            bail!("seq_len != prompt_len + gen_len");
+        }
+        for required in ["init", "decode", "prox_forward", "train_sync",
+                         "train_recompute", "train_loglinear", "pretrain"] {
+            if !self.executables.contains_key(required) {
+                bail!("manifest missing executable {required:?}");
+            }
+        }
+        // Train executables must lead with the parameter list.
+        for name in ["train_sync", "train_recompute", "train_loglinear"] {
+            let e = &self.executables[name];
+            let np = self.params.len();
+            if e.inputs.len() < 3 * np {
+                bail!("{name}: too few inputs for params+adam state");
+            }
+            for (i, spec) in self.params.iter().enumerate() {
+                if e.inputs[i].shape != spec.shape {
+                    bail!("{name}: param {i} shape mismatch vs manifest params");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("executable {name:?} not in manifest"))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+}

@@ -1,0 +1,100 @@
+//! L3 runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them via the PJRT C API (`xla` crate). Python never runs on
+//! this path.
+//!
+//! ```text
+//! artifacts/<preset>/manifest.json   -> Manifest (signatures, param order)
+//! artifacts/<preset>/<name>.hlo.txt  -> Executable (compiled once, shared)
+//! ```
+
+pub mod checkpoint;
+pub mod client;
+pub mod executable;
+pub mod manifest;
+pub mod params;
+pub mod tensor;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+pub use client::Client;
+pub use executable::Executable;
+pub use manifest::{Dtype, ExecSpec, Manifest, PresetConfig, TensorSpec};
+pub use params::{ParamSnapshot, WeightStore};
+pub use tensor::{HostTensor, SharedLiteral};
+
+/// Everything loaded for one preset: client + manifest + all executables.
+pub struct Runtime {
+    pub client: Arc<Client>,
+    pub manifest: Manifest,
+    executables: BTreeMap<String, Arc<Executable>>,
+}
+
+impl Runtime {
+    /// Load a preset's artifacts, compiling every executable in the
+    /// manifest. `only` restricts which executables get compiled (tests and
+    /// single-method runs avoid paying for all six).
+    pub fn load(dir: &Path, only: Option<&[&str]>) -> Result<Runtime> {
+        let client = Client::cpu()?;
+        let manifest = Manifest::load(dir)?;
+        let mut executables = BTreeMap::new();
+        for (name, spec) in &manifest.executables {
+            if let Some(filter) = only {
+                if !filter.contains(&name.as_str()) {
+                    continue;
+                }
+            }
+            executables.insert(name.clone(), Executable::load(&client, spec)?);
+        }
+        Ok(Runtime { client, manifest, executables })
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&Arc<Executable>> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("executable {name:?} not loaded (filtered at load?)"))
+    }
+
+    pub fn has_exec(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Run `init(seed)` and wrap the resulting parameters at version 0.
+    pub fn init_params(&self, seed: i32) -> Result<Arc<ParamSnapshot>> {
+        let init = self.exec("init")?;
+        let seed_lit = HostTensor::scalar_i32(seed).to_literal()?;
+        let outs = init.run_literals(&[&seed_lit])?;
+        Ok(ParamSnapshot::new(0, outs))
+    }
+
+    /// Zero-initialised Adam moment literals (one per parameter).
+    pub fn zero_adam_state(&self) -> Result<Vec<xla::Literal>> {
+        self.manifest
+            .params
+            .iter()
+            .map(|spec| HostTensor::zeros(spec).to_literal())
+            .collect()
+    }
+
+    /// Per-executable cumulative timing (for §Perf reports).
+    pub fn exec_stats(&self) -> Vec<(String, executable::ExecStats)> {
+        self.executables
+            .iter()
+            .map(|(name, e)| (name.clone(), e.stats()))
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Runtime(preset={}, {} executables)",
+            self.manifest.preset.name,
+            self.executables.len()
+        )
+    }
+}

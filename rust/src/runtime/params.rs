@@ -1,0 +1,120 @@
+//! Versioned model parameters.
+//!
+//! The trainer owns the full optimiser state (params + Adam moments) as
+//! literals; after each training step it *publishes* the new parameters to
+//! the `WeightStore`, bumping the version counter `v(pi)`. Rollout workers
+//! grab the latest published snapshot at episode start — the difference
+//! between the trainer's version and the snapshot's version is exactly the
+//! staleness `d` of paper Eq. 4.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use xla::Literal;
+
+use super::tensor::SharedLiteral;
+
+/// An immutable snapshot of model parameters at some version.
+pub struct ParamSnapshot {
+    pub version: u64,
+    /// Parameter literals in manifest order.
+    pub params: Vec<SharedLiteral>,
+}
+
+impl ParamSnapshot {
+    pub fn new(version: u64, params: Vec<Literal>) -> Arc<ParamSnapshot> {
+        Arc::new(ParamSnapshot {
+            version,
+            params: params.into_iter().map(SharedLiteral).collect(),
+        })
+    }
+
+    pub fn literal_refs(&self) -> Vec<&Literal> {
+        self.params.iter().map(|p| p.lit()).collect()
+    }
+}
+
+impl std::fmt::Debug for ParamSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ParamSnapshot(v{}, {} tensors)", self.version, self.params.len())
+    }
+}
+
+/// Shared latest-weights cell: trainer publishes, rollout workers read.
+#[derive(Debug)]
+pub struct WeightStore {
+    latest: Mutex<Arc<ParamSnapshot>>,
+    version: AtomicU64,
+    publishes: AtomicU64,
+}
+
+impl WeightStore {
+    pub fn new(initial: Arc<ParamSnapshot>) -> Arc<WeightStore> {
+        let version = initial.version;
+        Arc::new(WeightStore {
+            latest: Mutex::new(initial),
+            version: AtomicU64::new(version),
+            publishes: AtomicU64::new(0),
+        })
+    }
+
+    /// Publish new weights at `version`. Versions must be monotonic.
+    pub fn publish(&self, snapshot: Arc<ParamSnapshot>) {
+        debug_assert!(snapshot.version >= self.version.load(Ordering::Relaxed));
+        self.version.store(snapshot.version, Ordering::Release);
+        *self.latest.lock().unwrap() = snapshot;
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Latest published snapshot (cheap: Arc clone under a short lock).
+    pub fn latest(&self) -> Arc<ParamSnapshot> {
+        self.latest.lock().unwrap().clone()
+    }
+
+    /// Latest published version = `v(pi_theta)` as rollouts see it.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    pub fn publish_count(&self) -> u64 {
+        self.publishes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(version: u64) -> Arc<ParamSnapshot> {
+        ParamSnapshot::new(version, vec![Literal::scalar(version as f32)])
+    }
+
+    #[test]
+    fn publish_and_read() {
+        let store = WeightStore::new(snap(0));
+        assert_eq!(store.version(), 0);
+        store.publish(snap(1));
+        store.publish(snap(2));
+        assert_eq!(store.version(), 2);
+        assert_eq!(store.latest().version, 2);
+        assert_eq!(store.publish_count(), 2);
+    }
+
+    #[test]
+    fn concurrent_readers_see_monotonic_versions() {
+        let store = WeightStore::new(snap(0));
+        let s2 = store.clone();
+        let reader = std::thread::spawn(move || {
+            let mut last = 0u64;
+            for _ in 0..1000 {
+                let v = s2.latest().version;
+                assert!(v >= last, "version went backwards: {v} < {last}");
+                last = v;
+            }
+        });
+        for v in 1..=50 {
+            store.publish(snap(v));
+        }
+        reader.join().unwrap();
+    }
+}

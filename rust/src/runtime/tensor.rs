@@ -1,0 +1,204 @@
+//! Host-side tensors and conversion to/from `xla::Literal`.
+//!
+//! The coordinator assembles batches as plain `Vec<f32>`/`Vec<i32>` host
+//! tensors; this module packs them into literals following the manifest's
+//! positional signatures and unpacks executable outputs back.
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal};
+
+use super::manifest::{Dtype, TensorSpec};
+
+/// A host tensor: shape + typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> HostTensor {
+        match spec.dtype {
+            Dtype::F32 => HostTensor::F32 {
+                shape: spec.shape.clone(),
+                data: vec![0.0; spec.elements()],
+            },
+            Dtype::I32 => HostTensor::I32 {
+                shape: spec.shape.clone(),
+                data: vec![0; spec.elements()],
+            },
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Validate against a manifest signature entry.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "tensor {:?}: shape {:?} != manifest {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!("tensor {:?}: dtype mismatch", spec.name);
+        }
+        Ok(())
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let (ty, bytes): (ElementType, &[u8]) = match self {
+            HostTensor::F32 { data, .. } => (ElementType::F32, bytemuck_f32(data)),
+            HostTensor::I32 { data, .. } => (ElementType::S32, bytemuck_i32(data)),
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(ty, self.shape(), bytes)?)
+    }
+
+    pub fn from_literal(lit: &Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        match spec.dtype {
+            Dtype::F32 => Ok(HostTensor::F32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<f32>()?,
+            }),
+            Dtype::I32 => Ok(HostTensor::I32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<i32>()?,
+            }),
+        }
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// `xla::Literal` wrapped for cross-thread sharing.
+///
+/// SAFETY: a literal is plain host memory owned by the XLA runtime; all uses
+/// in this crate after construction are read-only (executables *borrow*
+/// literals as inputs and never mutate them), and the underlying
+/// xla::Literal operations used (`to_vec`, `shape`, execute-as-argument) are
+/// const on the C++ side. Mutation APIs (`copy_from`, `decompose_tuple`) are
+/// never called through a `SharedLiteral`.
+pub struct SharedLiteral(pub Literal);
+
+unsafe impl Send for SharedLiteral {}
+unsafe impl Sync for SharedLiteral {}
+
+impl SharedLiteral {
+    pub fn lit(&self) -> &Literal {
+        &self.0
+    }
+}
+
+impl std::fmt::Debug for SharedLiteral {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SharedLiteral")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: Dtype) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &spec("x", &[2, 3], Dtype::F32)).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn i32_roundtrip_scalar() {
+        let t = HostTensor::scalar_i32(-7);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &spec("s", &[], Dtype::I32)).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[-7]);
+    }
+
+    #[test]
+    fn zeros_matches_spec() {
+        let s = spec("z", &[4, 5], Dtype::F32);
+        let z = HostTensor::zeros(&s);
+        assert_eq!(z.len(), 20);
+        assert!(z.check(&s).is_ok());
+    }
+
+    #[test]
+    fn check_rejects_mismatch() {
+        let t = HostTensor::f32(vec![2], vec![0.0; 2]);
+        assert!(t.check(&spec("x", &[3], Dtype::F32)).is_err());
+        assert!(t.check(&spec("x", &[2], Dtype::I32)).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn constructor_validates() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+}

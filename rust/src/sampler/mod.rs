@@ -1,0 +1,169 @@
+//! Token sampling from decode logits.
+//!
+//! This is the inference-engine half of the behaviour policy contract: like
+//! SGLang/vLLM in the paper's stack, the sampler returns both the sampled
+//! token and its log-probability under the behaviour policy — the
+//! `behav_logp` consumed by the decoupled loss. Paper settings: temperature
+//! 1.0, top-p 1.0, top-k = full vocabulary (all supported here, plus greedy
+//! for deterministic eval).
+
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerConfig {
+    pub temperature: f64,
+    pub top_p: f64,
+    /// 0 = full vocabulary.
+    pub top_k: usize,
+    pub greedy: bool,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig { temperature: 1.0, top_p: 1.0, top_k: 0, greedy: false }
+    }
+}
+
+impl SamplerConfig {
+    pub fn greedy() -> Self {
+        SamplerConfig { greedy: true, ..Default::default() }
+    }
+}
+
+/// Sample one token from a logit row. Returns `(token, logp)` where `logp`
+/// is the log-probability of the sampled token under the *unmodified*
+/// temperature-scaled distribution (what the training loss needs — top-p/k
+/// truncation affects which token is drawn, not the reported logp, matching
+/// how inference engines report `logprobs`).
+pub fn sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Pcg64) -> (i32, f32) {
+    assert!(!logits.is_empty());
+    let logp = log_softmax(logits, cfg.temperature);
+
+    let token = if cfg.greedy {
+        argmax(&logp)
+    } else {
+        let mut idx: Vec<usize> = (0..logp.len()).collect();
+        // Restrict to top-k / top-p nucleus if configured.
+        if cfg.top_k > 0 || cfg.top_p < 1.0 {
+            idx.sort_by(|&a, &b| logp[b].partial_cmp(&logp[a]).unwrap());
+            if cfg.top_k > 0 && cfg.top_k < idx.len() {
+                idx.truncate(cfg.top_k);
+            }
+            if cfg.top_p < 1.0 {
+                let mut cum = 0.0f64;
+                let mut keep = 0;
+                for &i in &idx {
+                    cum += (logp[i] as f64).exp();
+                    keep += 1;
+                    if cum >= cfg.top_p {
+                        break;
+                    }
+                }
+                idx.truncate(keep.max(1));
+            }
+        }
+        let weights: Vec<f32> = idx.iter().map(|&i| logp[i].exp()).collect();
+        idx[rng.categorical(&weights)]
+    };
+    (token as i32, logp[token])
+}
+
+/// Numerically-stable log-softmax with temperature.
+pub fn log_softmax(logits: &[f32], temperature: f64) -> Vec<f32> {
+    let t = temperature.max(1e-6) as f32;
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b / t));
+    let mut out: Vec<f32> = logits.iter().map(|&z| z / t - m).collect();
+    let lse = out.iter().map(|&x| x.exp()).sum::<f32>().ln();
+    for x in &mut out {
+        *x -= lse;
+    }
+    out
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalises() {
+        let lp = log_softmax(&[1.0, 2.0, 3.0], 1.0);
+        let total: f32 = lp.iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(lp[2] > lp[1] && lp[1] > lp[0]);
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Pcg64::from_seed(1);
+        let (tok, lp) = sample(&[0.1, 5.0, -1.0], &SamplerConfig::greedy(), &mut rng);
+        assert_eq!(tok, 1);
+        assert!(lp < 0.0);
+    }
+
+    #[test]
+    fn sampling_frequencies_track_probs() {
+        let mut rng = Pcg64::from_seed(2);
+        let logits = [0.0f32, (4.0f32).ln(), f32::NEG_INFINITY];
+        let cfg = SamplerConfig::default();
+        let mut counts = [0usize; 3];
+        for _ in 0..5000 {
+            counts[sample(&logits, &cfg, &mut rng).0 as usize] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        let ratio = counts[1] as f64 / counts[0] as f64;
+        assert!((ratio - 4.0).abs() < 0.8, "ratio={ratio}");
+    }
+
+    #[test]
+    fn top_k_truncates() {
+        let mut rng = Pcg64::from_seed(3);
+        let logits = [3.0f32, 2.0, -10.0, -10.0];
+        let cfg = SamplerConfig { top_k: 2, ..Default::default() };
+        for _ in 0..200 {
+            let (tok, _) = sample(&logits, &cfg, &mut rng);
+            assert!(tok == 0 || tok == 1, "tok={tok}");
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_nucleus() {
+        let mut rng = Pcg64::from_seed(4);
+        // p(0) ~ 0.84; top_p=0.5 nucleus = {0} only.
+        let logits = [2.0f32, 0.0, 0.0, 0.0];
+        let cfg = SamplerConfig { top_p: 0.5, ..Default::default() };
+        for _ in 0..100 {
+            assert_eq!(sample(&logits, &cfg, &mut rng).0, 0);
+        }
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        let lp_hot = log_softmax(&[1.0, 2.0], 2.0);
+        let lp_cold = log_softmax(&[1.0, 2.0], 0.5);
+        // Colder temperature concentrates mass on the max.
+        assert!(lp_cold[1].exp() > lp_hot[1].exp());
+    }
+
+    #[test]
+    fn reported_logp_matches_full_distribution() {
+        // Even with top-k truncation the reported logp is from the full
+        // distribution (inference-engine contract).
+        let mut rng = Pcg64::from_seed(5);
+        let logits = [1.0f32, 0.5, 0.0];
+        let full = log_softmax(&logits, 1.0);
+        let cfg = SamplerConfig { top_k: 1, ..Default::default() };
+        let (tok, lp) = sample(&logits, &cfg, &mut rng);
+        assert_eq!(tok, 0);
+        assert!((lp - full[0]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,249 @@
+//! Tiny declarative CLI argument parser (the offline crate set has no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generated `--help` text. Used by the `a3po` binary, the examples, and the
+//! bench harnesses.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument set: declare options, then `parse()`.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args { program: program.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// `--key <value>` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// `--key <value>` option that may be absent.
+    pub fn opt_optional(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--flag`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.program, self.about);
+        let _ = writeln!(s, "USAGE: {} [OPTIONS] [ARGS...]\n\nOPTIONS:", self.program);
+        for spec in &self.specs {
+            let mut line = format!("  --{}", spec.name);
+            if !spec.is_flag {
+                line.push_str(" <v>");
+            }
+            let pad = 26usize.saturating_sub(line.len());
+            line.push_str(&" ".repeat(pad.max(1)));
+            line.push_str(&spec.help);
+            if let Some(d) = &spec.default {
+                let _ = write!(line, " [default: {d}]");
+            }
+            let _ = writeln!(s, "{line}");
+        }
+        s
+    }
+
+    /// Parse from an explicit token list (testable); exits on `--help`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        mut self,
+        argv: I,
+    ) -> Result<Parsed, String> {
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                self.values.insert(spec.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    self.values.insert(name, "true".into());
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} needs a value"))?,
+                    };
+                    self.values.insert(name, v);
+                }
+            } else {
+                self.positional.push(tok);
+            }
+        }
+        Ok(Parsed { values: self.values, positional: self.positional })
+    }
+
+    /// Parse `std::env::args()`, printing usage and exiting on error/help.
+    pub fn parse(self) -> Parsed {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(argv) {
+            Ok(p) => p,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Parsed argument values with typed accessors.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name).unwrap_or_else(|| panic!("missing option --{name}"))
+    }
+
+    pub fn string(&self, name: &str) -> String {
+        self.str(name).to_string()
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_num(name)
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_num(name)
+    }
+
+    pub fn i64(&self, name: &str) -> i64 {
+        self.parse_num(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_num(name)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name);
+        raw.parse().unwrap_or_else(|e| panic!("--{name}={raw}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = Args::new("t", "")
+            .opt("steps", "100", "")
+            .opt("preset", "tiny", "")
+            .flag("verbose", "")
+            .parse_from(argv(&["--steps", "5", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.usize("steps"), 5);
+        assert_eq!(p.str("preset"), "tiny");
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let p = Args::new("t", "")
+            .opt("k", "a", "")
+            .parse_from(argv(&["--k=b", "pos1", "pos2"]))
+            .unwrap();
+        assert_eq!(p.str("k"), "b");
+        assert_eq!(p.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Args::new("t", "").parse_from(argv(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::new("t", "").opt("k", "a", "").parse_from(argv(&["--k"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn optional_absent() {
+        let p = Args::new("t", "")
+            .opt_optional("ckpt", "")
+            .parse_from(argv(&[]))
+            .unwrap();
+        assert_eq!(p.get("ckpt"), None);
+    }
+}

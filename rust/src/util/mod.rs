@@ -1,0 +1,11 @@
+//! In-house substrates: JSON, RNG, CLI parsing, stats, timing, and a mini
+//! property-testing harness. These replace crates (serde/rand/clap/
+//! proptest/criterion) that are unavailable in this build's offline crate
+//! universe — see DESIGN.md "Environment constraints".
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,207 @@
+//! Mini property-testing harness (the offline crate set has no proptest).
+//!
+//! Provides seeded random case generation with bounded shrinking: when a
+//! property fails, the harness re-runs the property on progressively
+//! "smaller" inputs derived by the `Shrink` implementation and reports the
+//! smallest failure found. Used by `rust/tests/prop_*.rs` for coordinator
+//! and substrate invariants.
+
+use super::rng::Pcg64;
+
+/// Number of random cases per property (override with A3PO_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("A3PO_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// A generator of random values of `T`.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg64) -> T;
+}
+
+impl<T, F: Fn(&mut Pcg64) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Pcg64) -> T {
+        self(rng)
+    }
+}
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - self.signum());
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|x| x as usize).collect()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            vec![]
+        } else {
+            vec![0.0, self / 2.0, self.trunc()]
+        }
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[..self.len() - 1].to_vec());
+            // shrink one element
+            for (i, x) in self.iter().enumerate().take(4) {
+                for sx in x.shrink() {
+                    let mut v = self.clone();
+                    v[i] = sx;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` on `cases` random inputs; on failure, shrink (up to 200
+/// candidates) and panic with the smallest counterexample found.
+pub fn check<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check_n(name, default_cases(), gen, prop)
+}
+
+pub fn check_n<T, G, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let seed = std::env::var("A3PO_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xa3b0);
+    let mut rng = Pcg64::from_seed(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink.
+            let mut best = (input.clone(), msg.clone());
+            let mut frontier = input.shrink();
+            let mut budget = 200usize;
+            while let Some(cand) = frontier.pop() {
+                if budget == 0 {
+                    break;
+                }
+                budget -= 1;
+                if let Err(m) = prop(&cand) {
+                    frontier = cand.shrink();
+                    best = (cand, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  \
+                 counterexample: {:?}\n  error: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Convenience generators.
+pub mod gens {
+    use super::super::rng::Pcg64;
+
+    pub fn vec_f64(len_max: usize, lo: f64, hi: f64) -> impl Fn(&mut Pcg64) -> Vec<f64> {
+        move |rng| {
+            let n = 1 + rng.below(len_max.max(1) as u64) as usize;
+            (0..n).map(|_| lo + rng.next_f64() * (hi - lo)).collect()
+        }
+    }
+
+    pub fn u64_below(n: u64) -> impl Fn(&mut Pcg64) -> u64 {
+        move |rng| rng.below(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", gens::vec_f64(8, -10.0, 10.0), |v| {
+            let a: f64 = v.iter().sum();
+            let b: f64 = v.iter().rev().sum();
+            if (a - b).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("{a} != {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_counterexample() {
+        check("always fails", gens::u64_below(100), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Property fails for any value >= 10; shrinker should find exactly 10
+        // often, but at minimum a value < the original failing one.
+        let result = std::panic::catch_unwind(|| {
+            check("ge10", gens::u64_below(1000), |x| {
+                if *x < 10 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 10"))
+                }
+            });
+        });
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Wall-clock timing helpers shared by the trainer (Fig. 1/Table 1 timing),
+//! the metrics logger, and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Scoped stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Accumulates named phase durations (e.g. rollout / prox / train / publish)
+/// across a run; powers the Fig. 1 and §Perf breakdowns.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64, u64)>, // (name, total seconds, count)
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.phases.iter_mut().find(|(n, _, _)| n == name) {
+            e.1 += secs;
+            e.2 += 1;
+        } else {
+            self.phases.push((name.to_string(), secs, 1));
+        }
+    }
+
+    /// Time a closure under a phase name, returning its output.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.add(name, sw.secs());
+        out
+    }
+
+    pub fn total(&self, name: &str) -> f64 {
+        self.phases.iter().find(|(n, _, _)| n == name).map(|e| e.1).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.phases.iter().find(|(n, _, _)| n == name).map(|e| e.2).unwrap_or(0)
+    }
+
+    pub fn mean(&self, name: &str) -> f64 {
+        let c = self.count(name);
+        if c == 0 {
+            0.0
+        } else {
+            self.total(name) / c as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::from("phase                 total(s)   count   mean(ms)\n");
+        for (name, total, count) in &self.phases {
+            s.push_str(&format!(
+                "{:<20} {:>9.3} {:>7} {:>10.3}\n",
+                name,
+                total,
+                count,
+                1e3 * total / *count as f64
+            ));
+        }
+        s
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64, u64)> {
+        self.phases.iter().map(|(n, t, c)| (n.as_str(), *t, *c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.add("a", 1.0);
+        pt.add("a", 2.0);
+        pt.add("b", 0.5);
+        assert_eq!(pt.total("a"), 3.0);
+        assert_eq!(pt.count("a"), 2);
+        assert_eq!(pt.mean("a"), 1.5);
+        assert_eq!(pt.total("missing"), 0.0);
+        assert!(pt.report().contains("a"));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut pt = PhaseTimer::new();
+        let v = pt.time("work", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(pt.count("work"), 1);
+    }
+}

@@ -1,0 +1,191 @@
+//! Integration tests over the PJRT runtime + tiny artifacts.
+//!
+//! These tests require `make artifacts` (the `tiny` preset) and are the
+//! rust-side counterpart of the python kernel tests: they prove the AOT
+//! boundary — manifest-driven packing, executable signatures, determinism,
+//! and checkpoint round-trips — with real compiled HLO.
+
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+use a3po::runtime::{checkpoint, HostTensor, Runtime};
+
+fn runtime() -> &'static Arc<Runtime> {
+    static RT: OnceLock<Arc<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        std::env::set_var("A3PO_QUIET", "1");
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        Arc::new(
+            Runtime::load(&dir, None)
+                .expect("tiny artifacts missing — run `make artifacts` first"),
+        )
+    })
+}
+
+#[test]
+fn manifest_geometry_is_sane() {
+    let m = &runtime().manifest;
+    assert_eq!(m.preset.name, "tiny");
+    assert_eq!(m.preset.seq_len, m.preset.prompt_len + m.preset.gen_len);
+    assert!(m.n_params() > 10);
+    assert_eq!(m.metric_names.len(), 8);
+    for required in ["init", "decode", "train_loglinear"] {
+        assert!(m.executables.contains_key(required), "{required}");
+    }
+}
+
+#[test]
+fn init_is_deterministic_in_seed() {
+    let rt = runtime();
+    let a = rt.init_params(7).unwrap();
+    let b = rt.init_params(7).unwrap();
+    let c = rt.init_params(8).unwrap();
+    let spec = &rt.manifest.params[0];
+    let ha = HostTensor::from_literal(a.params[0].lit(), spec).unwrap();
+    let hb = HostTensor::from_literal(b.params[0].lit(), spec).unwrap();
+    let hc = HostTensor::from_literal(c.params[0].lit(), spec).unwrap();
+    assert_eq!(ha, hb, "same seed must give identical params");
+    assert_ne!(ha, hc, "different seeds must differ");
+}
+
+#[test]
+fn decode_runs_and_is_deterministic() {
+    let rt = runtime();
+    let geo = &rt.manifest.preset;
+    let snapshot = rt.init_params(0).unwrap();
+    let decode = rt.exec("decode").unwrap();
+
+    let tokens = HostTensor::i32(
+        vec![geo.rollout_batch, geo.seq_len],
+        vec![1; geo.rollout_batch * geo.seq_len],
+    )
+    .to_literal()
+    .unwrap();
+    let pos = HostTensor::scalar_i32(geo.prompt_len as i32).to_literal().unwrap();
+
+    let mut run = || {
+        let mut refs = snapshot.literal_refs();
+        refs.push(&tokens);
+        refs.push(&pos);
+        let outs = decode.run_literals(&refs).unwrap();
+        outs[0].to_vec::<f32>().unwrap()
+    };
+    let l1 = run();
+    let l2 = run();
+    assert_eq!(l1.len(), geo.rollout_batch * geo.vocab);
+    assert_eq!(l1, l2, "decode must be deterministic");
+    assert!(l1.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn executable_rejects_wrong_arity() {
+    let rt = runtime();
+    let decode = rt.exec("decode").unwrap();
+    let snapshot = rt.init_params(0).unwrap();
+    let refs = snapshot.literal_refs(); // missing tokens+pos
+    assert!(decode.run_literals(&refs).is_err());
+}
+
+#[test]
+fn prox_forward_returns_valid_logprobs() {
+    let rt = runtime();
+    let geo = &rt.manifest.preset;
+    let snapshot = rt.init_params(3).unwrap();
+    let prox = rt.exec("prox_forward").unwrap();
+    let tokens = HostTensor::i32(
+        vec![geo.train_batch, geo.seq_len],
+        (0..geo.train_batch * geo.seq_len)
+            .map(|i| (i % geo.vocab) as i32)
+            .collect(),
+    )
+    .to_literal()
+    .unwrap();
+    let mut refs = snapshot.literal_refs();
+    refs.push(&tokens);
+    let outs = prox.run_literals(&refs).unwrap();
+    let logp = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(logp.len(), geo.train_batch * (geo.seq_len - 1));
+    // log-probabilities of a real distribution: <= 0 and > -inf.
+    assert!(logp.iter().all(|&x| x <= 1e-5 && x > -50.0));
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_params() {
+    let rt = runtime();
+    let snapshot = rt.init_params(11).unwrap();
+    let dir = std::env::temp_dir().join(format!("a3po-ckpt-{}", std::process::id()));
+    let base = dir.join("test");
+    checkpoint::save(&base, &rt.manifest, &snapshot).unwrap();
+    let loaded = checkpoint::load(&base, &rt.manifest).unwrap();
+    assert_eq!(loaded.version, snapshot.version);
+    for (a, b, spec) in itertools_zip(&snapshot.params, &loaded.params, &rt.manifest.params) {
+        let ta = HostTensor::from_literal(a.lit(), spec).unwrap();
+        let tb = HostTensor::from_literal(b.lit(), spec).unwrap();
+        assert_eq!(ta, tb, "param {} drifted through checkpoint", spec.name);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn itertools_zip<'a>(
+    a: &'a [a3po::runtime::SharedLiteral],
+    b: &'a [a3po::runtime::SharedLiteral],
+    s: &'a [a3po::runtime::TensorSpec],
+) -> impl Iterator<
+    Item = (&'a a3po::runtime::SharedLiteral, &'a a3po::runtime::SharedLiteral, &'a a3po::runtime::TensorSpec),
+> {
+    a.iter().zip(b.iter()).zip(s.iter()).map(|((x, y), z)| (x, y, z))
+}
+
+#[test]
+fn concurrent_decode_from_multiple_threads() {
+    // The rollout pool shares one decode executable across threads; PJRT
+    // must serve concurrent executions without corruption.
+    let rt = runtime();
+    let geo = rt.manifest.preset.clone();
+    let snapshot = rt.init_params(0).unwrap();
+    let decode = rt.exec("decode").unwrap().clone();
+
+    let reference = {
+        let tokens = HostTensor::i32(
+            vec![geo.rollout_batch, geo.seq_len],
+            vec![2; geo.rollout_batch * geo.seq_len],
+        )
+        .to_literal()
+        .unwrap();
+        let pos = HostTensor::scalar_i32(geo.prompt_len as i32).to_literal().unwrap();
+        let mut refs = snapshot.literal_refs();
+        refs.push(&tokens);
+        refs.push(&pos);
+        decode.run_literals(&refs).unwrap()[0].to_vec::<f32>().unwrap()
+    };
+
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            let decode = decode.clone();
+            let snapshot = snapshot.clone();
+            let geo = geo.clone();
+            let reference = reference.clone();
+            std::thread::spawn(move || {
+                for _ in 0..5 {
+                    let tokens = HostTensor::i32(
+                        vec![geo.rollout_batch, geo.seq_len],
+                        vec![2; geo.rollout_batch * geo.seq_len],
+                    )
+                    .to_literal()
+                    .unwrap();
+                    let pos =
+                        HostTensor::scalar_i32(geo.prompt_len as i32).to_literal().unwrap();
+                    let mut refs = snapshot.literal_refs();
+                    refs.push(&tokens);
+                    refs.push(&pos);
+                    let out =
+                        decode.run_literals(&refs).unwrap()[0].to_vec::<f32>().unwrap();
+                    assert_eq!(out, reference, "concurrent decode corrupted output");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,147 @@
+//! End-to-end integration: full training runs (tiny preset) through the
+//! public coordinator API, one per method, checking the paper's structural
+//! invariants — sync stays on-policy, async accumulates staleness, A-3PO's
+//! alpha follows Eq. 4, rewards/metrics stay finite, and the loglinear prox
+//! phase is orders of magnitude cheaper than recompute's.
+
+use std::path::Path;
+
+use a3po::config::{Method, RunOptions, StalenessPolicy};
+use a3po::coordinator::{self, RunOutput};
+
+fn opts(method: Method, steps: u64) -> RunOptions {
+    std::env::set_var("A3PO_QUIET", "1");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    RunOptions {
+        preset: "tiny".into(),
+        artifacts_dir: dir.to_str().unwrap().into(),
+        out_dir: std::env::temp_dir()
+            .join(format!("a3po-itest-{}", std::process::id()))
+            .to_str()
+            .unwrap()
+            .into(),
+        method,
+        steps,
+        pretrain_steps: 8,
+        workers: 2,
+        eval_every: 0,
+        eval_prompts: 16,
+        seed: 42,
+        staleness: StalenessPolicy { max_staleness: 16, max_buffered: 128 },
+        ..Default::default()
+    }
+}
+
+fn run(method: Method, steps: u64) -> RunOutput {
+    coordinator::run(&opts(method, steps)).expect("run failed")
+}
+
+#[test]
+fn sync_run_is_on_policy() {
+    let out = run(Method::Sync, 4);
+    assert_eq!(out.logger.steps.len(), 4);
+    for s in &out.logger.steps {
+        assert_eq!(s.mean_staleness, 0.0, "sync data must be fresh");
+        assert_eq!(s.mean_alpha, 0.0);
+        assert!(s.rollout_secs > 0.0, "sync generates inline");
+        assert!(s.train.loss.is_finite());
+        // On-policy + coupled loss: importance weights are exactly 1 on the
+        // first minibatch and the metric maxes over the step stay near 1.
+        assert!(s.train.max_is_weight < 3.0, "iw {}", s.train.max_is_weight);
+    }
+}
+
+#[test]
+fn loglinear_run_accumulates_staleness_and_alpha_follows_eq4() {
+    let out = run(Method::Loglinear, 6);
+    assert_eq!(out.logger.steps.len(), 6);
+    let late = &out.logger.steps[3..];
+    assert!(
+        late.iter().any(|s| s.mean_staleness > 0.0),
+        "async training should see stale data"
+    );
+    for s in &out.logger.steps {
+        // per-batch mean alpha is within the Eq. 4 envelope
+        assert!((0.0..=1.0).contains(&s.mean_alpha), "alpha {}", s.mean_alpha);
+        if s.mean_staleness == 0.0 {
+            assert_eq!(s.mean_alpha, 0.0);
+        }
+        // A-3PO's prox phase is an elementwise op: sub-millisecond.
+        assert!(s.prox_secs < 0.01, "loglinear prox {}s", s.prox_secs);
+    }
+}
+
+#[test]
+fn recompute_pays_for_prox_forward_and_loglinear_does_not() {
+    let rec = run(Method::Recompute, 3);
+    let log = run(Method::Loglinear, 3);
+    let rec_prox = rec.phases.mean("prox");
+    let log_prox = log.phases.mean("prox");
+    assert!(
+        rec_prox > 10.0 * log_prox,
+        "recompute prox {rec_prox}s should dwarf loglinear {log_prox}s"
+    );
+    // Both produce finite, comparable training metrics.
+    for out in [&rec, &log] {
+        for s in &out.logger.steps {
+            assert!(s.train.loss.is_finite());
+            assert!(s.train.entropy > 0.0);
+            assert!(s.train.min_is_weight <= s.train.max_is_weight);
+        }
+    }
+}
+
+#[test]
+fn final_eval_and_summary_are_reported() {
+    let o = opts(Method::Loglinear, 2);
+    let out = coordinator::run(&o).unwrap();
+    assert!((0.0..=1.0).contains(&out.final_eval));
+    let j = out.summary_json(&o);
+    assert_eq!(j.get("method").as_str(), Some("loglinear"));
+    assert_eq!(j.get("steps").as_f64(), Some(2.0));
+    assert!(j.get("total_seconds").as_f64().unwrap() > 0.0);
+    // Metrics JSONL landed on disk.
+    let path = Path::new(&o.out_dir).join("tiny_loglinear.jsonl");
+    let text = std::fs::read_to_string(path).unwrap();
+    assert!(text.lines().count() >= 3); // 2 steps + final eval
+}
+
+#[test]
+fn checkpoint_save_then_benchmark_eval() {
+    let o = opts(Method::Loglinear, 2);
+    let out = coordinator::run(&o).unwrap();
+    let base = coordinator::save_checkpoint(&o, &out).unwrap();
+    let loaded =
+        a3po::runtime::checkpoint::load(&base, &out.runtime.manifest).unwrap();
+    assert_eq!(loaded.version, out.final_snapshot.version);
+
+    // Evaluate the loaded checkpoint on a fitting slice of the MATH-like
+    // suite (tiny's window only fits short prompts).
+    let geo = &out.runtime.manifest.preset;
+    let suite = a3po::env::suites::math_like();
+    let fit = a3po::env::suites::fitting(&suite, geo.prompt_len - 1, geo.gen_len - 1);
+    assert!(!fit.problems.is_empty());
+    let take: Vec<_> = fit.problems.into_iter().take(geo.rollout_batch).collect();
+    let (p, se) = coordinator::eval::evaluate_pass_at_1(
+        out.runtime.exec("decode").unwrap(),
+        &loaded,
+        &take,
+        geo,
+        true,
+    )
+    .unwrap();
+    assert!((0.0..=1.0).contains(&p));
+    assert!(se >= 0.0);
+}
+
+#[test]
+fn injected_staleness_drives_alpha() {
+    let mut o = opts(Method::Loglinear, 2);
+    o.inject_staleness = 4;
+    let out = coordinator::run(&o).unwrap();
+    for s in &out.logger.steps {
+        assert!(s.mean_staleness >= 4.0);
+        // alpha = 1/d <= 1/4 for every sequence.
+        assert!(s.mean_alpha <= 0.25 + 1e-6, "alpha {}", s.mean_alpha);
+    }
+}

@@ -1,0 +1,216 @@
+//! Property tests on coordinator invariants: the staleness-aware alpha
+//! (paper Eq. 4), GRPO advantage normalisation, batch assembly, buffer
+//! routing/state, and the weight-store versioning contract.
+//!
+//! Uses the in-house mini-proptest harness (`a3po::util::proptest`).
+
+use a3po::buffer::{Episode, EpisodeBuffer};
+use a3po::config::{AlphaSchedule, StalenessPolicy};
+use a3po::coordinator::advantage::{broadcast_over_mask, grpo_group_advantages};
+use a3po::env::Problem;
+use a3po::util::proptest::{check, check_n, gens};
+use a3po::util::rng::Pcg64;
+
+fn ep(version: u64, reward: f64, t: usize) -> Episode {
+    Episode {
+        tokens: vec![1; t + 1],
+        behav_logp: vec![-1.0; t],
+        mask: vec![1.0; t],
+        reward,
+        reward_exact: reward.floor(),
+        version,
+        group: 0,
+        text: String::new(),
+        problem: Problem { prompt: "p=".into(), answer: "0".into() },
+    }
+}
+
+#[test]
+fn prop_alpha_eq4_bounds_and_monotonicity() {
+    // Eq. 4: alpha(0) = 0; alpha(d) = 1/d monotone non-increasing in d,
+    // always within [0, 1].
+    check("alpha eq4", gens::u64_below(10_000), |&d| {
+        let s = AlphaSchedule::InverseD;
+        let a = s.alpha(d);
+        if d == 0 && a != 0.0 {
+            return Err(format!("alpha(0) = {a}"));
+        }
+        if !(0.0..=1.0).contains(&a) {
+            return Err(format!("alpha({d}) = {a} out of [0,1]"));
+        }
+        if d >= 1 {
+            let a_next = s.alpha(d + 1);
+            if a_next > a {
+                return Err(format!("alpha not monotone at {d}"));
+            }
+            if (a - 1.0 / d as f32).abs() > 1e-7 {
+                return Err(format!("alpha({d}) != 1/d"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grpo_advantages_zero_mean_and_bounded() {
+    check("grpo zero-mean", gens::vec_f64(16, 0.0, 1.0), |rewards| {
+        let adv = grpo_group_advantages(rewards);
+        let mean: f64 = adv.iter().sum::<f64>() / adv.len() as f64;
+        if mean.abs() > 1e-9 {
+            return Err(format!("mean {mean}"));
+        }
+        // Normalised by (std + eps): a loose but real bound is sqrt(n).
+        let bound = (rewards.len() as f64).sqrt() + 1e-6;
+        if adv.iter().any(|a| a.abs() > bound) {
+            return Err(format!("advantage exceeds sqrt(n): {adv:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grpo_shift_invariant() {
+    // Adding a constant to every reward must not change advantages.
+    check("grpo shift-invariance", gens::vec_f64(12, 0.0, 1.0), |rewards| {
+        let a1 = grpo_group_advantages(rewards);
+        let shifted: Vec<f64> = rewards.iter().map(|r| r + 5.0).collect();
+        let a2 = grpo_group_advantages(&shifted);
+        for (x, y) in a1.iter().zip(&a2) {
+            if (x - y).abs() > 1e-6 {
+                return Err(format!("{x} != {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_broadcast_zero_outside_mask() {
+    check("broadcast masks", gens::vec_f64(32, 0.0, 1.0), |m| {
+        let mask: Vec<f32> = m.iter().map(|&x| if x > 0.5 { 1.0 } else { 0.0 }).collect();
+        let out = broadcast_over_mask(3.5, &mask);
+        for (o, mk) in out.iter().zip(&mask) {
+            if *mk == 0.0 && *o != 0.0 {
+                return Err("nonzero advantage outside mask".into());
+            }
+            if *mk == 1.0 && (*o - 3.5).abs() > 1e-6 {
+                return Err("masked token lost its advantage".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_buffer_never_serves_overstale_groups() {
+    // For random interleavings of pushes (at random lagging versions) and
+    // pops (at increasing trainer versions), every served group respects
+    // d <= max_staleness, and conservation holds:
+    // pushed == served + dropped + left.
+    check_n(
+        "buffer staleness admission",
+        64,
+        |rng: &mut Pcg64| {
+            let n_ops = 1 + rng.below(40) as usize;
+            (0..n_ops)
+                .map(|_| (rng.below(3), rng.below(6)))
+                .collect::<Vec<(u64, u64)>>()
+        },
+        |ops| {
+            let max_staleness = 2u64;
+            let buf = EpisodeBuffer::new(StalenessPolicy {
+                max_staleness,
+                max_buffered: 10_000,
+            });
+            let mut v_now = 0u64;
+            let mut pushed = 0u64;
+            let mut served = 0u64;
+            for (kind, arg) in ops {
+                match kind {
+                    0 | 1 => {
+                        let v = v_now.saturating_sub(*arg);
+                        buf.push_group(vec![ep(v, 1.0, 4)]);
+                        pushed += 1;
+                    }
+                    _ => {
+                        v_now += arg;
+                        if let Some(groups) = buf.try_pop_groups(1, v_now) {
+                            served += 1;
+                            for g in &groups {
+                                let d = g[0].staleness(v_now);
+                                if d > max_staleness {
+                                    return Err(format!(
+                                        "served staleness {d} > {max_staleness}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            let dropped = buf
+                .stats
+                .dropped_stale_groups
+                .load(std::sync::atomic::Ordering::Relaxed);
+            let left = buf.len_groups() as u64;
+            if pushed != served + dropped + left {
+                return Err(format!(
+                    "conservation: pushed {pushed} != served {served} + \
+                     dropped {dropped} + left {left}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_alpha_schedules_boundary_conditions() {
+    // Every schedule must satisfy the paper's boundary condition
+    // alpha(0) = 0 (on-policy -> standard PPO); the 1/d family anchors
+    // fully at the behaviour policy at d = 1.
+    let schedules = [
+        AlphaSchedule::InverseD,
+        AlphaSchedule::InverseD2,
+        AlphaSchedule::Behaviour,
+        AlphaSchedule::Constant(0.7),
+    ];
+    for s in schedules {
+        assert_eq!(s.alpha(0), 0.0, "{s:?}");
+    }
+    assert_eq!(AlphaSchedule::InverseD.alpha(1), 1.0);
+    assert_eq!(AlphaSchedule::InverseD2.alpha(1), 1.0);
+}
+
+#[test]
+fn prop_weight_store_versions_monotone_under_interleaving() {
+    use a3po::runtime::{ParamSnapshot, WeightStore};
+    check_n(
+        "weight store monotonic",
+        32,
+        |rng: &mut Pcg64| (1 + rng.below(20)) as u64,
+        |&n| {
+            let store = WeightStore::new(ParamSnapshot::new(0, vec![]));
+            let s2 = store.clone();
+            let reader = std::thread::spawn(move || {
+                let mut last = 0;
+                for _ in 0..200 {
+                    let v = s2.latest().version;
+                    if v < last {
+                        return Err(format!("version regressed {last} -> {v}"));
+                    }
+                    last = v;
+                }
+                Ok(())
+            });
+            for v in 1..=n {
+                store.publish(ParamSnapshot::new(v, vec![]));
+            }
+            reader.join().unwrap()?;
+            if store.version() != n {
+                return Err("final version mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}

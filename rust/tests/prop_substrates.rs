@@ -1,0 +1,182 @@
+//! Property tests on the in-house substrates: JSON round-tripping, RNG
+//! distributions, sampler normalisation, tokenizer round-trips, and the
+//! expression evaluator vs the task generators.
+
+use a3po::env::tokenizer;
+use a3po::env::verifier::eval_expression;
+use a3po::sampler::{log_softmax, sample, SamplerConfig};
+use a3po::util::json::Json;
+use a3po::util::proptest::{check, check_n};
+use a3po::util::rng::Pcg64;
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0 * 0.5).round() / 8.0),
+            3 => {
+                let n = rng.below(12) as usize;
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check_n(
+        "json roundtrip",
+        200,
+        |rng: &mut Pcg64| vec![rng.next_u64() % 1_000_000],
+        |seed| {
+            let mut rng = Pcg64::from_seed(seed[0]);
+            let v = random_json(&mut rng, 3);
+            let text = v.dump();
+            let back = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+            if back != v {
+                return Err(format!("{back:?} != {v:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_log_softmax_is_normalised_distribution() {
+    check_n(
+        "log_softmax normalised",
+        128,
+        |rng: &mut Pcg64| {
+            let n = 1 + rng.below(64) as usize;
+            (0..n).map(|_| rng.next_f64() * 40.0 - 20.0).collect::<Vec<f64>>()
+        },
+        |logits| {
+            let z: Vec<f32> = logits.iter().map(|&x| x as f32).collect();
+            let lp = log_softmax(&z, 1.0);
+            let total: f64 = lp.iter().map(|&x| (x as f64).exp()).sum();
+            if (total - 1.0).abs() > 1e-4 {
+                return Err(format!("sum p = {total}"));
+            }
+            if lp.iter().any(|&x| x > 1e-6) {
+                return Err("log-prob above 0".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sampled_token_always_in_support() {
+    check_n(
+        "sampler support",
+        128,
+        |rng: &mut Pcg64| {
+            let n = 2 + rng.below(30) as usize;
+            (0..n).map(|_| rng.next_f64() * 10.0 - 5.0).collect::<Vec<f64>>()
+        },
+        |logits| {
+            let z: Vec<f32> = logits.iter().map(|&x| x as f32).collect();
+            let mut rng = Pcg64::from_seed(1);
+            for top_k in [0usize, 1, 3] {
+                let cfg = SamplerConfig { top_k, ..Default::default() };
+                let (tok, lp) = sample(&z, &cfg, &mut rng);
+                if tok < 0 || tok as usize >= z.len() {
+                    return Err(format!("token {tok} out of range"));
+                }
+                if !(lp <= 1e-6 && lp.is_finite()) {
+                    return Err(format!("bad logp {lp}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tokenizer_roundtrips_all_expressible_strings() {
+    check_n(
+        "tokenizer roundtrip",
+        256,
+        |rng: &mut Pcg64| {
+            let chars: Vec<char> = "0123456789+-*%()= ".chars().collect();
+            let n = 1 + rng.below(30) as usize;
+            (0..n)
+                .map(|_| chars[rng.below(chars.len() as u64) as usize] as u64)
+                .collect::<Vec<u64>>()
+        },
+        |codes| {
+            let s: String = codes.iter().map(|&c| c as u8 as char).collect();
+            let toks = tokenizer::encode(&s);
+            let back = tokenizer::decode(&toks);
+            if back != s {
+                return Err(format!("{back:?} != {s:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_generators_agree_with_evaluator_across_seeds() {
+    use a3po::env::{arith::ArithEnv, chain::ChainEnv, TaskEnv};
+    check(
+        "generator vs evaluator",
+        |rng: &mut Pcg64| rng.next_u64() % 100_000,
+        |&seed| {
+            let mut rng = Pcg64::from_seed(seed);
+            let envs: [Box<dyn TaskEnv>; 3] = [
+                Box::new(ArithEnv::easy()),
+                Box::new(ArithEnv::standard()),
+                Box::new(ChainEnv::standard()),
+            ];
+            for env in &envs {
+                let p = env.sample(&mut rng);
+                let v = eval_expression(p.prompt.trim_end_matches('='))
+                    .ok_or_else(|| format!("unparseable {}", p.prompt))?;
+                if v.to_string() != p.answer {
+                    return Err(format!(
+                        "{}: generator says {}, evaluator {v}",
+                        p.prompt, p.answer
+                    ));
+                }
+                // And it must fit the env's declared geometry.
+                if p.prompt.len() > env.max_prompt_chars() {
+                    return Err(format!("prompt too long: {}", p.prompt));
+                }
+                if p.answer.len() > env.max_answer_chars() {
+                    return Err(format!("answer too long: {}", p.answer));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rng_streams_are_independent() {
+    check_n(
+        "rng stream independence",
+        64,
+        |rng: &mut Pcg64| rng.next_u64() % 10_000,
+        |&seed| {
+            let mut a = Pcg64::new(seed, 1);
+            let mut b = Pcg64::new(seed, 2);
+            let collisions = (0..256).filter(|_| a.next_u64() == b.next_u64()).count();
+            if collisions > 0 {
+                return Err(format!("{collisions} collisions between streams"));
+            }
+            Ok(())
+        },
+    );
+}
