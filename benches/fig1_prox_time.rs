@@ -26,28 +26,29 @@ fn main() -> anyhow::Result<()> {
     let snapshot = rt.init_params(cfg.seed as i32)?;
     let prox_exec = rt.exec("prox_forward")?;
 
-    // A realistic training batch (token ids + behaviour logps + alphas).
+    // A realistic training batch (token ids + theta/behaviour logps + alphas).
     let mut rng = Pcg64::from_seed(cfg.seed);
     let (b, s) = (geo.train_batch, geo.seq_len);
     let t = s - 1;
     let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(geo.vocab as u64) as i32).collect();
+    let theta: Vec<f32> = (0..b * t).map(|_| -rng.next_f32() * 4.0).collect();
     let behav: Vec<f32> = (0..b * t).map(|_| -rng.next_f32() * 4.0).collect();
     let alpha: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
-    let tokens_lit = HostTensor::i32(vec![b, s], tokens).to_literal()?;
+    let tokens_t = HostTensor::i32(vec![b, s], tokens);
 
     println!("\n== Fig. 1: prox log-prob computation time per training step ==");
     println!("preset={} batch={}x{} params={}\n", geo.name, b, s, geo.param_count);
 
     let iters = 20;
     let recompute = bench("recompute: prox_forward (full fwd pass)", iters, || {
-        let mut refs = snapshot.literal_refs();
-        refs.push(&tokens_lit);
-        let _ = prox_exec.run_literals(&refs).unwrap();
+        let mut refs = snapshot.tensor_refs();
+        refs.push(&tokens_t);
+        let _ = prox_exec.run_refs(&refs).unwrap();
     });
 
     let mut sink = 0.0f32;
     let loglinear = bench("loglinear: Eq.3 interpolation (A-3PO)", 200, || {
-        let v = interp_prox_host(&behav, &alpha, t);
+        let v = interp_prox_host(&theta, &behav, &alpha, t);
         sink += v[0];
     });
     std::hint::black_box(sink);

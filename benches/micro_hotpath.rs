@@ -69,10 +69,11 @@ fn main() {
     });
 
     // Eq. 3 interpolation over a full train batch (the Fig. 1 op).
+    let theta: Vec<f32> = (0..g.train_batch * t).map(|_| -rng.next_f32()).collect();
     let behav: Vec<f32> = (0..g.train_batch * t).map(|_| -rng.next_f32()).collect();
     let alpha: Vec<f32> = (0..g.train_batch).map(|_| rng.next_f32()).collect();
     bench("trainer::interp_prox_host (64x47)", 5_000, || {
-        std::hint::black_box(interp_prox_host(&behav, &alpha, t));
+        std::hint::black_box(interp_prox_host(&theta, &behav, &alpha, t));
     });
 
     // GRPO advantages.
@@ -117,10 +118,9 @@ fn main() {
         std::hint::black_box(j.dump());
     });
 
-    // Literal packing (host tensor -> XLA literal) for a train batch.
+    // Host-tensor packing for a train batch (the per-step input build).
     let tokens: Vec<i32> = (0..g.train_batch * s).map(|_| rng.below(64) as i32).collect();
-    bench("tensor::to_literal (64x48 i32)", 5_000, || {
-        let t = HostTensor::i32(vec![g.train_batch, s], tokens.clone());
-        std::hint::black_box(t.to_literal().unwrap());
+    bench("tensor::HostTensor::i32 pack (64x48)", 5_000, || {
+        std::hint::black_box(HostTensor::i32(vec![g.train_batch, s], tokens.clone()));
     });
 }

@@ -152,6 +152,10 @@ impl EpisodeBuffer {
                     let d = g[0].staleness(v_now);
                     if d > self.policy.max_staleness {
                         self.stats.dropped_stale_groups.fetch_add(1, Ordering::Relaxed);
+                        // A discarded group frees capacity: wake any rollout
+                        // worker blocked in `push_group`, even if this pop
+                        // ends up returning None.
+                        self.cond.notify_all();
                     } else {
                         out.push(g);
                     }
@@ -244,6 +248,28 @@ mod tests {
         b.pop_groups(1, 0).unwrap();
         assert!(pusher.join().unwrap());
         assert_eq!(b.len_groups(), 1);
+    }
+
+    #[test]
+    fn dropping_stale_groups_wakes_blocked_pushers() {
+        // Regression: try_pop_groups used to notify only on the success
+        // path, so a pusher blocked on capacity could sleep forever after
+        // stale groups were discarded (freeing space) by a failed pop.
+        let b = Arc::new(buffer(1, 2));
+        b.push_group(vec![ep(0, 1)]);
+        b.push_group(vec![ep(0, 2)]); // buffer full (2 episodes)
+        let b2 = b.clone();
+        let pusher = std::thread::spawn(move || b2.push_group(vec![ep(10, 3)]));
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!pusher.is_finished(), "push should block at capacity");
+        // Both buffered groups are overstale at v=10 -> dropped; the pop
+        // itself comes up empty-handed (None) but must still wake pushers.
+        assert!(b.try_pop_groups(1, 10).is_none());
+        assert!(pusher.join().unwrap());
+        assert_eq!(b.len_groups(), 1);
+        assert_eq!(b.stats.dropped_stale_groups.load(Ordering::Relaxed), 2);
+        // The fresh group is now serveable.
+        assert_eq!(b.try_pop_groups(1, 10).unwrap()[0][0].group, 3);
     }
 
     #[test]

@@ -97,7 +97,7 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
             let loaded = checkpoint::load(&PathBuf::from(base), &runtime.manifest)?;
             eprintln!("[run] warm-starting from {base} (version reset to 0)");
             // RL versions count from 0 in every run regardless of source.
-            ParamSnapshot::new(0, loaded.params.iter().map(|l| l.lit().clone()).collect())
+            ParamSnapshot::new(0, loaded.params.clone())
         }
         None => runtime.init_params(opts.seed as i32)?,
     };

@@ -8,14 +8,15 @@
 //!   over the training batch at step start; the result is frozen across the
 //!   step's minibatch updates. This is the 4–8 s/step cost in Fig. 1.
 //! * `loglinear`  — A-3PO: α-weighted log-linear interpolation (Eq. 3). The
-//!   interpolation itself is fused into the train executable; the timed
-//!   phase here is the standalone elementwise op, matching how the paper
-//!   reports its ~1 ms "loglinear" bar.
+//!   interpolation itself is fused into the train executable (which has the
+//!   real θ log-probs in hand); the timed phase here is the standalone
+//!   elementwise op over the θ log-probs the backend returned on the
+//!   previous step, matching how the paper reports its ~1 ms "loglinear"
+//!   bar.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
-use xla::Literal;
 
 use crate::config::Method;
 use crate::metrics::TrainMetrics;
@@ -32,10 +33,13 @@ pub struct Trainer {
     store: Arc<WeightStore>,
     /// Current parameters (shared snapshot; publishing is an Arc swap).
     snapshot: Arc<ParamSnapshot>,
-    adam_m: Vec<Literal>,
-    adam_v: Vec<Literal>,
+    adam_m: Vec<HostTensor>,
+    adam_v: Vec<HostTensor>,
     /// Adam step counter fed to the executable (bias correction).
     opt_step: i32,
+    /// θ log-probs returned by the previous train step (native backend);
+    /// operand of the standalone Eq. 3 measurement.
+    last_theta_logp: Option<Vec<f32>>,
     n_params: usize,
     n_minibatch: usize,
     geo_b: usize,
@@ -75,9 +79,10 @@ impl Trainer {
             pretrain_exec,
             store,
             snapshot: initial,
-            adam_m: runtime.zero_adam_state()?,
-            adam_v: runtime.zero_adam_state()?,
+            adam_m: runtime.zero_adam_state(),
+            adam_v: runtime.zero_adam_state(),
             opt_step: 0,
+            last_theta_logp: None,
             n_params,
             n_minibatch: runtime.manifest.preset.n_minibatch,
             geo_b: runtime.manifest.preset.train_batch,
@@ -98,11 +103,11 @@ impl Trainer {
     pub fn step(&mut self, batch: &TrainBatch) -> Result<(TrainMetrics, StepTiming)> {
         let (b, s) = (self.geo_b, self.geo_s);
         let t = s - 1;
-        let tokens = HostTensor::i32(vec![b, s], batch.tokens.clone()).to_literal()?;
-        let mask = HostTensor::f32(vec![b, t], batch.mask.clone()).to_literal()?;
-        let behav = HostTensor::f32(vec![b, t], batch.behav_logp.clone()).to_literal()?;
-        let adv = HostTensor::f32(vec![b, t], batch.adv.clone()).to_literal()?;
-        let alpha = HostTensor::f32(vec![b], batch.alpha.clone()).to_literal()?;
+        let tokens = HostTensor::i32(vec![b, s], batch.tokens.clone());
+        let mask = HostTensor::f32(vec![b, t], batch.mask.clone());
+        let behav = HostTensor::f32(vec![b, t], batch.behav_logp.clone());
+        let adv = HostTensor::f32(vec![b, t], batch.adv.clone());
+        let alpha = HostTensor::f32(vec![b], batch.alpha.clone());
 
         // --- proximal-policy phase (the paper's Fig. 1 measurement) ------
         let prox_sw = Stopwatch::start();
@@ -111,30 +116,38 @@ impl Trainer {
                 // Extra forward pass over the training batch; frozen for
                 // the rest of the step.
                 let exec = self.prox_exec.as_ref().expect("recompute needs prox_forward");
-                let mut refs = self.snapshot.literal_refs();
+                let mut refs = self.snapshot.tensor_refs();
                 refs.push(&tokens);
-                let outs = exec.run_literals(&refs)?;
+                let outs = exec.run_refs(&refs)?;
                 outs.into_iter().next().unwrap()
             }
             Method::Loglinear => {
                 // Eq. 3 as a standalone elementwise op (what replaces the
-                // forward pass). The train executable re-fuses it with the
-                // loss, so this is measurement, not double work.
-                let interp = interp_prox_host(&batch.behav_logp, &batch.alpha, t);
-                HostTensor::f32(vec![b, t], interp).to_literal()?
+                // forward pass). θ log-probs come from the previous step's
+                // train output; on the very first step (no θ yet) the
+                // anchor degenerates to the behaviour policy, exactly the
+                // d = 0 on-policy case. The train executable re-fuses the
+                // interpolation with its own fresh θ, so this is
+                // measurement, not double work.
+                let theta: &[f32] = match &self.last_theta_logp {
+                    Some(v) => v,
+                    None => &batch.behav_logp,
+                };
+                let interp = interp_prox_host(theta, &batch.behav_logp, &batch.alpha, t);
+                HostTensor::f32(vec![b, t], interp)
             }
             Method::Sync => {
                 // Coupled loss: no proximal policy. Zero placeholder (the
                 // executable ignores it).
-                HostTensor::f32(vec![b, t], vec![0.0; b * t]).to_literal()?
+                HostTensor::f32(vec![b, t], vec![0.0; b * t])
             }
         };
         let prox_secs = prox_sw.secs();
 
         // --- train executable --------------------------------------------
-        let step_lit = HostTensor::scalar_i32(self.opt_step).to_literal()?;
+        let step_lit = HostTensor::scalar_i32(self.opt_step);
         let train_sw = Stopwatch::start();
-        let mut refs = self.snapshot.literal_refs();
+        let mut refs = self.snapshot.tensor_refs();
         refs.extend(self.adam_m.iter());
         refs.extend(self.adam_v.iter());
         refs.push(&step_lit);
@@ -144,16 +157,21 @@ impl Trainer {
         refs.push(&adv);
         refs.push(&alpha);
         refs.push(&prox);
-        let mut outs = self.train_exec.run_literals(&refs)?;
+        let mut outs = self.train_exec.run_refs(&refs)?;
         let train_secs = train_sw.secs();
 
-        // Unpack: params, m, v, step, metrics.
+        // Unpack: params, m, v, step, metrics[, theta_logp].
         let np = self.n_params;
-        let metrics_lit = outs.pop().expect("metrics output");
+        let theta_out = if outs.len() > 3 * np + 2 { outs.pop() } else { None };
+        let metrics_t = outs.pop().expect("metrics output");
         let _step_out = outs.pop().expect("step output");
-        let new_v: Vec<Literal> = outs.split_off(2 * np);
-        let new_m: Vec<Literal> = outs.split_off(np);
+        let new_v: Vec<HostTensor> = outs.split_off(2 * np);
+        let new_m: Vec<HostTensor> = outs.split_off(np);
         let new_params = outs;
+
+        if let Some(theta) = theta_out {
+            self.last_theta_logp = Some(theta.as_f32()?.to_vec());
+        }
 
         // The executable performed n_minibatch Adam updates; keep the host
         // step counter (bias correction) in lockstep.
@@ -164,7 +182,7 @@ impl Trainer {
         self.snapshot = ParamSnapshot::new(new_version, new_params);
         self.store.publish(self.snapshot.clone());
 
-        let metrics = TrainMetrics::from_vector(&metrics_lit.to_vec::<f32>()?);
+        let metrics = TrainMetrics::from_vector(metrics_t.as_f32()?);
         Ok((metrics, StepTiming { prox_secs, train_secs }))
     }
 
@@ -175,42 +193,49 @@ impl Trainer {
             None => bail!("pretrain executable not loaded"),
         };
         let (b, s) = (self.geo_b, self.geo_s);
-        let tokens = HostTensor::i32(vec![b, s], tokens.to_vec()).to_literal()?;
-        let mask = HostTensor::f32(vec![b, s - 1], mask.to_vec()).to_literal()?;
-        let step_lit = HostTensor::scalar_i32(self.opt_step).to_literal()?;
-        let mut refs = self.snapshot.literal_refs();
+        let tokens = HostTensor::i32(vec![b, s], tokens.to_vec());
+        let mask = HostTensor::f32(vec![b, s - 1], mask.to_vec());
+        let step_lit = HostTensor::scalar_i32(self.opt_step);
+        let mut refs = self.snapshot.tensor_refs();
         refs.extend(self.adam_m.iter());
         refs.extend(self.adam_v.iter());
         refs.push(&step_lit);
         refs.push(&tokens);
         refs.push(&mask);
-        let mut outs = exec.run_literals(&refs)?;
+        let mut outs = exec.run_refs(&refs)?;
 
         let np = self.n_params;
-        let metrics_lit = outs.pop().expect("metrics output");
+        let metrics_t = outs.pop().expect("metrics output");
         let _step_out = outs.pop();
-        let new_v: Vec<Literal> = outs.split_off(2 * np);
-        let new_m: Vec<Literal> = outs.split_off(np);
+        let new_v: Vec<HostTensor> = outs.split_off(2 * np);
+        let new_m: Vec<HostTensor> = outs.split_off(np);
         self.adam_m = new_m;
         self.adam_v = new_v;
         self.opt_step += 1;
         // Warm start does not bump the RL version: v(pi) counts RL updates.
         self.snapshot = ParamSnapshot::new(self.snapshot.version, outs);
         self.store.publish(self.snapshot.clone());
-        Ok(TrainMetrics::from_vector(&metrics_lit.to_vec::<f32>()?))
+        Ok(TrainMetrics::from_vector(metrics_t.as_f32()?))
     }
 }
 
-/// Eq. 3 on the host: log π_prox = α·log π_behav + (1-α)·log π_θ.
-/// (Standalone-phase measurement uses behaviour logps for both operands —
-/// identical FLOPs/bytes; the fused in-executable version uses the real
-/// θ logps.)
-pub fn interp_prox_host(behav_logp: &[f32], alpha: &[f32], t: usize) -> Vec<f32> {
+/// Eq. 3 on the host: `log π_prox = α·log π_behav + (1-α)·log π_θ`, with α
+/// broadcast per sequence row. This is the op A-3PO substitutes for
+/// recompute's full forward pass; the native train executables apply the
+/// same formula (with their own fresh θ) inside the fused loss.
+pub fn interp_prox_host(
+    theta_logp: &[f32],
+    behav_logp: &[f32],
+    alpha: &[f32],
+    t: usize,
+) -> Vec<f32> {
+    assert_eq!(theta_logp.len(), behav_logp.len(), "theta/behav length mismatch");
+    assert_eq!(alpha.len() * t, behav_logp.len(), "alpha rows don't cover the batch");
     let mut out = Vec::with_capacity(behav_logp.len());
     for (row, &a) in alpha.iter().enumerate() {
         let base = row * t;
-        for &lp in &behav_logp[base..base + t] {
-            out.push(a * lp + (1.0 - a) * lp);
+        for i in base..base + t {
+            out.push(a * behav_logp[i] + (1.0 - a) * theta_logp[i]);
         }
     }
     out
@@ -221,11 +246,28 @@ mod tests {
     use super::*;
 
     #[test]
-    fn interp_is_exact_for_alpha_extremes() {
+    fn interp_is_a_genuine_interpolation() {
+        let theta = vec![-2.0f32, -4.0, -6.0, -8.0];
         let behav = vec![-1.0f32, -2.0, -3.0, -4.0];
-        let out = interp_prox_host(&behav, &[0.0, 1.0], 2);
-        // alpha*x + (1-alpha)*x == x for any alpha — the placeholder uses
-        // behav twice, so output equals input; the point is the op count.
-        assert_eq!(out, behav);
+        // Row 0: alpha = 0.5 -> midpoint; row 1: alpha = 0.25.
+        let out = interp_prox_host(&theta, &behav, &[0.5, 0.25], 2);
+        assert_eq!(out, vec![-1.5, -3.0, -5.25, -7.0]);
+    }
+
+    #[test]
+    fn interp_alpha_extremes_select_an_operand() {
+        let theta = vec![-2.0f32, -4.0, -6.0, -8.0];
+        let behav = vec![-1.0f32, -2.0, -3.0, -4.0];
+        // alpha = 0: anchor at theta (on-policy). alpha = 1: anchor at the
+        // behaviour policy (fully stale).
+        let out = interp_prox_host(&theta, &behav, &[0.0, 1.0], 2);
+        assert_eq!(&out[..2], &theta[..2]);
+        assert_eq!(&out[2..], &behav[2..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha rows")]
+    fn interp_rejects_mismatched_rows() {
+        interp_prox_host(&[-1.0; 4], &[-1.0; 4], &[0.5; 3], 2);
     }
 }

@@ -6,24 +6,31 @@
 //!
 //! * **L3 (this crate)** — the asynchronous RL coordinator: rollout
 //!   engine, staleness-tagged episode buffer, GRPO trainer, weight
-//!   versioning, synthetic verifiable-math environments, metrics, and the
-//!   PJRT runtime that executes AOT-compiled model artifacts.
+//!   versioning, synthetic verifiable-math environments, metrics, and a
+//!   pluggable runtime that executes the model.
 //! * **L2 (python/compile/model.py)** — the policy transformer and the
 //!   three training objectives (sync / recompute / loglinear), lowered once
-//!   to HLO text.
+//!   to HLO text for the PJRT backend.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
 //!   token-logprob/entropy computation and the fused decoupled-PPO loss
 //!   with A-3PO's staleness-aware interpolation (paper Eqs. 3–4).
 //!
-//! Python never runs at training time: `make artifacts` AOT-compiles
-//! everything; the `a3po` binary (and the examples/benches) only load
-//! `artifacts/<preset>/*.hlo.txt`.
+//! The runtime has two interchangeable backends (see [`runtime`]):
 //!
-//! Quick start (after `make artifacts`):
+//! * **native** (default) — every executable reimplemented as pure-Rust CPU
+//!   math (same parameter layout, losses, and Adam as the JAX model, with a
+//!   hand-written backward pass). Hermetic: no XLA install, no Python, no
+//!   artifacts on disk. The built-in presets `tiny`, `setup1`, `setup2`,
+//!   and `big` mirror `python/compile/config.py`.
+//! * **pjrt** (cargo feature `pjrt`) — loads `artifacts/<preset>/*.hlo.txt`
+//!   produced by `python/compile/aot.py` and executes them through the PJRT
+//!   C API. Python never runs at training time.
+//!
+//! Quick start (no setup needed — native backend):
 //!
 //! ```bash
 //! cargo run --release --example quickstart
-//! cargo run --release --bin a3po -- train --preset setup1 --method loglinear
+//! cargo run --release --bin a3po -- train --preset tiny --method loglinear
 //! ```
 
 pub mod bench;

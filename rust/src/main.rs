@@ -116,7 +116,7 @@ fn cmd_inspect(argv: Vec<String>) -> Result<()> {
             std::process::exit(2);
         });
     let dir = PathBuf::from(parsed.str("artifacts")).join(parsed.str("preset"));
-    let m = a3po::runtime::Manifest::load(&dir)?;
+    let m = a3po::runtime::manifest_for_dir(&dir)?;
     let p = &m.preset;
     println!("preset        {}", p.name);
     println!("params        {} tensors, {} scalars", m.params.len(), p.param_count);

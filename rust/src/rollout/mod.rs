@@ -1,6 +1,6 @@
-//! The rollout engine: batched token-by-token generation through the AOT
-//! `decode` executable, playing the role of the paper's inference engine
-//! (SGLang/vLLM): it produces responses *and* their behaviour-policy
+//! The rollout engine: batched token-by-token generation through the
+//! backend's `decode` executable, playing the role of the paper's inference
+//! engine (SGLang/vLLM): it produces responses *and* their behaviour-policy
 //! log-probs, tagged with the weight version that generated them.
 //!
 //! Async methods run `RolloutWorker`s on dedicated threads, continuously
@@ -107,14 +107,13 @@ pub fn generate_for_problems(
         if finished.iter().all(|&f| f) {
             break;
         }
-        let tokens_lit =
-            HostTensor::i32(vec![br, s], tokens.clone()).to_literal()?;
-        let pos_lit = HostTensor::scalar_i32(pos as i32).to_literal()?;
-        let mut refs = snapshot.literal_refs();
-        refs.push(&tokens_lit);
-        refs.push(&pos_lit);
-        let outs = decode.run_literals(&refs)?;
-        let logits = outs[0].to_vec::<f32>()?; // [br, v]
+        let tokens_t = HostTensor::i32(vec![br, s], tokens.clone());
+        let pos_t = HostTensor::scalar_i32(pos as i32);
+        let mut refs = snapshot.tensor_refs();
+        refs.push(&tokens_t);
+        refs.push(&pos_t);
+        let outs = decode.run_refs(&refs)?;
+        let logits = outs[0].as_f32()?; // [br, v]
 
         for row in 0..br {
             if finished[row] {

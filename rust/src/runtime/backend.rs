@@ -1,0 +1,41 @@
+//! The backend abstraction: how a [`crate::runtime::Runtime`] obtains its
+//! manifest and its executables.
+//!
+//! Two implementations ship today:
+//!
+//! * [`super::native::NativeBackend`] — pure-Rust CPU math over the built-in
+//!   presets; needs nothing on disk (the hermetic default).
+//! * `super::pjrt::PjrtBackend` (feature `pjrt`) — loads AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` and executes them through
+//!   the PJRT C API.
+//!
+//! Both sides of the boundary speak [`HostTensor`]: a backend's executable
+//! receives positional inputs matching its [`ExecSpec`] signature and
+//! returns positional outputs the same way.
+
+use anyhow::Result;
+
+use super::manifest::{ExecSpec, Manifest};
+use super::tensor::HostTensor;
+
+/// One loaded/compiled executable. Implementations must be callable from
+/// multiple threads concurrently (rollout workers share `decode`).
+pub trait ExecutableImpl: Send + Sync {
+    /// Execute with positional inputs; returns positional outputs.
+    /// Input arity/shape validation happens in the [`super::Executable`]
+    /// wrapper — implementations may assume the signature was honoured.
+    fn execute(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// A source of executables for one preset.
+pub trait Backend: Send + Sync {
+    /// Short backend label ("native", "pjrt") for logs and summaries.
+    fn name(&self) -> &'static str;
+
+    /// The preset's manifest: geometry, parameter order, and the signature
+    /// of every executable this backend can instantiate.
+    fn manifest(&self) -> Result<Manifest>;
+
+    /// Instantiate (compile/load) one executable by its manifest spec.
+    fn load_executable(&self, spec: &ExecSpec) -> Result<Box<dyn ExecutableImpl>>;
+}

@@ -3,7 +3,7 @@
 //!
 //! Format: `<path>.json` — a JSON header with the param specs and version;
 //! `<path>.bin` — the raw little-endian f32 data concatenated in manifest
-//! order.
+//! order. Backend-independent: any snapshot of host tensors round-trips.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -50,12 +50,12 @@ pub fn save(path: &Path, manifest: &Manifest, snapshot: &ParamSnapshot) -> Resul
     std::fs::write(path.with_extension("json"), Json::obj(header).dump())?;
 
     let mut bin = std::io::BufWriter::new(std::fs::File::create(path.with_extension("bin"))?);
-    for (lit, spec) in snapshot.params.iter().zip(&manifest.params) {
-        let t = HostTensor::from_literal(lit.lit(), spec)?;
-        let data = t.as_f32()?;
-        let bytes =
-            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-        bin.write_all(bytes)?;
+    for (tensor, spec) in snapshot.params.iter().zip(&manifest.params) {
+        tensor.check(spec).with_context(|| format!("saving param {}", spec.name))?;
+        let data = tensor.as_f32()?;
+        for x in data {
+            bin.write_all(&x.to_le_bytes())?;
+        }
     }
     bin.flush()?;
     Ok(())
@@ -80,7 +80,7 @@ pub fn load(path: &Path, manifest: &Manifest) -> Result<Arc<ParamSnapshot>> {
     let version = header.get("version").as_i64().unwrap_or(0) as u64;
 
     let mut f = std::io::BufReader::new(std::fs::File::open(path.with_extension("bin"))?);
-    let mut literals = Vec::with_capacity(manifest.params.len());
+    let mut params = Vec::with_capacity(manifest.params.len());
     for spec in &manifest.params {
         if spec.dtype != Dtype::F32 {
             bail!("checkpoint only supports f32 params");
@@ -93,14 +93,14 @@ pub fn load(path: &Path, manifest: &Manifest) -> Result<Arc<ParamSnapshot>> {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        literals.push(HostTensor::f32(spec.shape.clone(), data).to_literal()?);
+        params.push(HostTensor::f32(spec.shape.clone(), data));
     }
     // Trailing data means spec drift.
     let mut extra = [0u8; 1];
     if f.read(&mut extra)? != 0 {
         bail!("checkpoint has trailing data (param spec drift?)");
     }
-    Ok(ParamSnapshot::new(version, literals))
+    Ok(ParamSnapshot::new(version, params))
 }
 
 /// Sanity helper for tests: total f32 elements a checkpoint should hold.

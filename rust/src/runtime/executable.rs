@@ -1,28 +1,21 @@
-//! A loaded executable bound to its manifest signature.
+//! An executable bound to its manifest signature.
 //!
-//! `Executable::run` validates input count (and optionally shapes), invokes
-//! PJRT, fetches the result tuple to the host, and splits it into literals
-//! following the manifest's output signature.
+//! `Executable` wraps a backend's [`ExecutableImpl`] with input/output
+//! arity validation, optional shape checking, and cumulative timing stats
+//! (the §Perf reports). The trainer's hot path uses [`Executable::run_refs`]
+//! to avoid cloning the parameter tensors every step.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
-use xla::{Literal, PjRtLoadedExecutable};
 
-use super::client::Client;
+use super::backend::ExecutableImpl;
 use super::manifest::ExecSpec;
 use super::tensor::HostTensor;
 
-/// SAFETY: PJRT loaded executables are thread-safe for concurrent Execute
-/// calls (the PJRT contract); the wrapper only lacks auto-traits because of
-/// raw pointers. Rollout workers share one decode executable.
-struct SendExec(PjRtLoadedExecutable);
-unsafe impl Send for SendExec {}
-unsafe impl Sync for SendExec {}
-
 pub struct Executable {
-    exe: SendExec,
+    imp: Box<dyn ExecutableImpl>,
     pub spec: ExecSpec,
     /// Cumulative execute statistics (used by §Perf reporting).
     stats: std::sync::Mutex<ExecStats>,
@@ -35,34 +28,19 @@ pub struct ExecStats {
 }
 
 impl Executable {
-    pub fn load(client: &Arc<Client>, spec: &ExecSpec) -> Result<Arc<Executable>> {
-        let t0 = Instant::now();
-        let exe = client
-            .compile_hlo_file(&spec.file)
-            .with_context(|| format!("loading executable {:?}", spec.name))?;
-        let dt = t0.elapsed().as_secs_f64();
-        if std::env::var_os("A3PO_QUIET").is_none() {
-            eprintln!(
-                "[runtime] compiled {:<18} ({:>7.2} MB HLO) in {:.2}s",
-                spec.name,
-                spec.hlo_bytes as f64 / 1e6,
-                dt
-            );
-        }
-        Ok(Arc::new(Executable {
-            exe: SendExec(exe),
-            spec: spec.clone(),
-            stats: std::sync::Mutex::new(ExecStats::default()),
-        }))
+    pub fn new(spec: ExecSpec, imp: Box<dyn ExecutableImpl>) -> Arc<Executable> {
+        Arc::new(Executable { imp, spec, stats: std::sync::Mutex::new(ExecStats::default()) })
     }
 
     pub fn name(&self) -> &str {
         &self.spec.name
     }
 
-    /// Execute with pre-packed literals (fast path: callers that keep
-    /// literals resident, e.g. the trainer's parameter state).
-    pub fn run_literals(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    /// Execute from borrowed tensors: callers that keep large resident
+    /// state (e.g. the trainer's parameters) avoid re-cloning it into each
+    /// call. Validates input and output arity against the manifest, but not
+    /// shapes. Note a backend may still pack inputs internally (PJRT does).
+    pub fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{}: got {} inputs, manifest says {}",
@@ -72,15 +50,10 @@ impl Executable {
             );
         }
         let t0 = Instant::now();
-        let result = self
-            .exe
-            .0
-            .execute::<&Literal>(inputs)
+        let outs = self
+            .imp
+            .execute(inputs)
             .with_context(|| format!("executing {}", self.spec.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching {} output", self.spec.name))?;
-        let outs = tuple.to_tuple()?;
         if outs.len() != self.spec.outputs.len() {
             bail!(
                 "{}: got {} outputs, manifest says {}",
@@ -95,7 +68,8 @@ impl Executable {
         Ok(outs)
     }
 
-    /// Execute from host tensors (validates shapes against the manifest).
+    /// Execute from owned host tensors, validating shapes against the
+    /// manifest signature first.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
@@ -105,17 +79,11 @@ impl Executable {
                 self.spec.inputs.len()
             );
         }
-        let mut lits = Vec::with_capacity(inputs.len());
         for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
             t.check(spec).with_context(|| format!("in {}", self.spec.name))?;
-            lits.push(t.to_literal()?);
         }
-        let refs: Vec<&Literal> = lits.iter().collect();
-        let outs = self.run_literals(&refs)?;
-        outs.iter()
-            .zip(&self.spec.outputs)
-            .map(|(l, spec)| HostTensor::from_literal(l, spec))
-            .collect()
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(&refs)
     }
 
     pub fn stats(&self) -> ExecStats {
@@ -126,5 +94,53 @@ impl Executable {
 impl std::fmt::Debug for Executable {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "Executable({})", self.spec.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Dtype, TensorSpec};
+
+    /// Doubles every f32 input — enough to exercise the wrapper contract.
+    struct Doubler;
+
+    impl ExecutableImpl for Doubler {
+        fn execute(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+            inputs
+                .iter()
+                .map(|t| {
+                    let d = t.as_f32()?;
+                    Ok(HostTensor::f32(t.shape().to_vec(), d.iter().map(|x| x * 2.0).collect()))
+                })
+                .collect()
+        }
+    }
+
+    fn spec() -> ExecSpec {
+        let ts = TensorSpec { name: "x".into(), shape: vec![2], dtype: Dtype::F32 };
+        ExecSpec {
+            name: "double".into(),
+            file: Default::default(),
+            inputs: vec![ts.clone()],
+            outputs: vec![ts],
+            hlo_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn runs_and_counts_stats() {
+        let e = Executable::new(spec(), Box::new(Doubler));
+        let out = e.run(&[HostTensor::f32(vec![2], vec![1.0, 2.0])]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[2.0, 4.0]);
+        assert_eq!(e.stats().calls, 1);
+    }
+
+    #[test]
+    fn rejects_wrong_arity_and_shape() {
+        let e = Executable::new(spec(), Box::new(Doubler));
+        assert!(e.run_refs(&[]).is_err());
+        assert!(e.run(&[HostTensor::f32(vec![3], vec![0.0; 3])]).is_err());
+        assert!(e.run(&[HostTensor::i32(vec![2], vec![0, 1])]).is_err());
     }
 }

@@ -1,10 +1,12 @@
-//! Artifact manifest: the contract between `python/compile/aot.py` and the
-//! Rust coordinator.
+//! Artifact manifest: the contract between a backend and the coordinator.
 //!
-//! The manifest records, for every AOT-compiled executable, the exact flat
-//! positional input/output signature (names, shapes, dtypes) plus the model
-//! parameter order, so the Rust side can pack and unpack literals without
-//! ever re-deriving shapes.
+//! The manifest records, for every executable, the exact flat positional
+//! input/output signature (names, shapes, dtypes) plus the model parameter
+//! order, so the coordinator can pack and unpack tensors without ever
+//! re-deriving shapes. Two producers exist: `python/compile/aot.py` writes
+//! `manifest.json` next to its AOT-compiled HLO (the `pjrt` backend reads it
+//! here via [`Manifest::load`]), and `runtime::native` synthesises the same
+//! structure in-process for the built-in presets — zero files on disk.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -169,7 +171,8 @@ impl Manifest {
     }
 
     /// Internal consistency checks (shapes agree across executables).
-    fn validate(&self) -> Result<()> {
+    /// Applied to JSON-loaded and built-in (native) manifests alike.
+    pub(crate) fn validate(&self) -> Result<()> {
         let p = &self.preset;
         if p.train_batch % p.n_minibatch != 0 {
             bail!("train_batch not divisible by n_minibatch");

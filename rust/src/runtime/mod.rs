@@ -1,45 +1,98 @@
-//! L3 runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! and executes them via the PJRT C API (`xla` crate). Python never runs on
-//! this path.
+//! L3 runtime: a backend-agnostic executor registry.
+//!
+//! A [`Runtime`] owns one preset's [`Manifest`] plus its compiled/loaded
+//! executables, obtained from a [`Backend`]:
+//!
+//! * **native** (default, hermetic) — pure-Rust CPU math over the built-in
+//!   presets (`tiny`, `setup1`, `setup2`, `big`). Nothing on disk; the
+//!   manifest is synthesised in-process.
+//! * **pjrt** (cargo feature `pjrt`) — AOT-compiled HLO artifacts produced
+//!   by `python/compile/aot.py`:
 //!
 //! ```text
 //! artifacts/<preset>/manifest.json   -> Manifest (signatures, param order)
 //! artifacts/<preset>/<name>.hlo.txt  -> Executable (compiled once, shared)
 //! ```
+//!
+//! [`Runtime::load`] keeps the historical artifact-directory calling
+//! convention: if `manifest.json` exists in the directory it is a PJRT
+//! artifact tree; otherwise the directory's file name selects a built-in
+//! native preset.
 
+pub mod backend;
 pub mod checkpoint;
-pub mod client;
 pub mod executable;
 pub mod manifest;
+pub mod native;
 pub mod params;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod tensor;
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
-pub use client::Client;
+pub use backend::{Backend, ExecutableImpl};
 pub use executable::Executable;
 pub use manifest::{Dtype, ExecSpec, Manifest, PresetConfig, TensorSpec};
+pub use native::NativeBackend;
 pub use params::{ParamSnapshot, WeightStore};
-pub use tensor::{HostTensor, SharedLiteral};
+pub use tensor::HostTensor;
 
-/// Everything loaded for one preset: client + manifest + all executables.
+/// Everything loaded for one preset: manifest + all executables.
 pub struct Runtime {
-    pub client: Arc<Client>,
+    /// Which backend produced the executables ("native" or "pjrt").
+    pub backend_name: &'static str,
     pub manifest: Manifest,
     executables: BTreeMap<String, Arc<Executable>>,
 }
 
 impl Runtime {
-    /// Load a preset's artifacts, compiling every executable in the
-    /// manifest. `only` restricts which executables get compiled (tests and
-    /// single-method runs avoid paying for all six).
+    /// Load a preset by artifact directory, resolving the backend:
+    /// a `manifest.json` in `dir` means PJRT artifacts; otherwise the
+    /// directory's file name names a built-in native preset (no files
+    /// needed — `artifacts/tiny` works on a fresh checkout).
+    ///
+    /// `only` restricts which executables get instantiated (tests and
+    /// single-method runs avoid paying for all of them).
     pub fn load(dir: &Path, only: Option<&[&str]>) -> Result<Runtime> {
-        let client = Client::cpu()?;
-        let manifest = Manifest::load(dir)?;
+        match resolve_dir(dir)? {
+            DirKind::PjrtArtifacts => Runtime::load_pjrt(dir, only),
+            DirKind::NativePreset(name) => {
+                let backend = NativeBackend::new(&name).with_context(|| {
+                    format!("no artifacts at {} and no built-in preset", dir.display())
+                })?;
+                Runtime::from_backend(&backend, only)
+            }
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn load_pjrt(dir: &Path, only: Option<&[&str]>) -> Result<Runtime> {
+        Runtime::from_backend(&pjrt::PjrtBackend::new(dir)?, only)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn load_pjrt(dir: &Path, _only: Option<&[&str]>) -> Result<Runtime> {
+        anyhow::bail!(
+            "{} holds AOT artifacts but this build has no `pjrt` feature; \
+             rebuild with `--features pjrt` or delete the artifacts to use \
+             the native backend",
+            dir.display()
+        )
+    }
+
+    /// Load the built-in native preset by name (bypasses path resolution).
+    pub fn native(preset: &str, only: Option<&[&str]>) -> Result<Runtime> {
+        Runtime::from_backend(&NativeBackend::new(preset)?, only)
+    }
+
+    /// Instantiate a runtime from any [`Backend`].
+    pub fn from_backend(backend: &dyn Backend, only: Option<&[&str]>) -> Result<Runtime> {
+        let manifest = backend.manifest()?;
         let mut executables = BTreeMap::new();
         for (name, spec) in &manifest.executables {
             if let Some(filter) = only {
@@ -47,9 +100,12 @@ impl Runtime {
                     continue;
                 }
             }
-            executables.insert(name.clone(), Executable::load(&client, spec)?);
+            let imp = backend
+                .load_executable(spec)
+                .with_context(|| format!("loading executable {name:?}"))?;
+            executables.insert(name.clone(), Executable::new(spec.clone(), imp));
         }
-        Ok(Runtime { client, manifest, executables })
+        Ok(Runtime { backend_name: backend.name(), manifest, executables })
     }
 
     pub fn exec(&self, name: &str) -> Result<&Arc<Executable>> {
@@ -65,18 +121,13 @@ impl Runtime {
     /// Run `init(seed)` and wrap the resulting parameters at version 0.
     pub fn init_params(&self, seed: i32) -> Result<Arc<ParamSnapshot>> {
         let init = self.exec("init")?;
-        let seed_lit = HostTensor::scalar_i32(seed).to_literal()?;
-        let outs = init.run_literals(&[&seed_lit])?;
+        let outs = init.run(&[HostTensor::scalar_i32(seed)])?;
         Ok(ParamSnapshot::new(0, outs))
     }
 
-    /// Zero-initialised Adam moment literals (one per parameter).
-    pub fn zero_adam_state(&self) -> Result<Vec<xla::Literal>> {
-        self.manifest
-            .params
-            .iter()
-            .map(|spec| HostTensor::zeros(spec).to_literal())
-            .collect()
+    /// Zero-initialised Adam moment tensors (one per parameter).
+    pub fn zero_adam_state(&self) -> Vec<HostTensor> {
+        self.manifest.params.iter().map(HostTensor::zeros).collect()
     }
 
     /// Per-executable cumulative timing (for §Perf reports).
@@ -92,9 +143,39 @@ impl std::fmt::Debug for Runtime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "Runtime(preset={}, {} executables)",
+            "Runtime({}, preset={}, {} executables)",
+            self.backend_name,
             self.manifest.preset.name,
             self.executables.len()
         )
+    }
+}
+
+/// How an artifact directory resolves: an on-disk PJRT artifact tree, or a
+/// built-in native preset named by the directory's file name. The single
+/// source of truth shared by [`Runtime::load`] and [`manifest_for_dir`].
+enum DirKind {
+    PjrtArtifacts,
+    NativePreset(String),
+}
+
+fn resolve_dir(dir: &Path) -> Result<DirKind> {
+    if dir.join("manifest.json").exists() {
+        return Ok(DirKind::PjrtArtifacts);
+    }
+    let preset = dir
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| anyhow!("cannot infer preset name from {}", dir.display()))?;
+    Ok(DirKind::NativePreset(preset.to_string()))
+}
+
+/// Resolve a manifest for an artifact directory the same way
+/// [`Runtime::load`] does, without instantiating executables (used by
+/// `a3po inspect`).
+pub fn manifest_for_dir(dir: &Path) -> Result<Manifest> {
+    match resolve_dir(dir)? {
+        DirKind::PjrtArtifacts => Manifest::load(dir),
+        DirKind::NativePreset(name) => NativeBackend::new(&name)?.manifest(),
     }
 }

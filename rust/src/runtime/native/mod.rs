@@ -1,0 +1,700 @@
+//! Native CPU backend: every executable the coordinator needs, as plain
+//! Rust math — no XLA, no artifacts, no Python.
+//!
+//! The model, losses, and optimiser mirror `python/compile/` exactly
+//! (same parameter order, same Eq. 2/3 objective and detached-anchor
+//! gradient, same Adam with bias correction and global-norm clipping, same
+//! metric vector layout), so a preset trained natively is indistinguishable
+//! in structure from a PJRT run — just smaller and hermetic. Presets
+//! `tiny`, `setup1`, `setup2`, and `big` are built in and mirror
+//! `python/compile/config.py`.
+
+pub mod model;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::backend::{Backend, ExecutableImpl};
+use super::manifest::{Dtype, ExecSpec, Manifest, PresetConfig, TensorSpec};
+use super::tensor::HostTensor;
+
+use model::{AdamHp, Dims};
+
+/// Number of entries in the train-metric vector (layout in
+/// `crate::metrics::TRAIN_METRIC_NAMES`).
+pub const N_METRICS: usize = 8;
+
+/// One built-in experimental setup (mirrors python `RunConfig`).
+#[derive(Debug, Clone)]
+pub struct NativePreset {
+    pub name: &'static str,
+    pub dims: Dims,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub group_size: usize,
+    pub rollout_batch: usize,
+    pub train_batch: usize,
+    pub n_minibatch: usize,
+    /// Supervised warm-start learning rate.
+    pub lr: f32,
+    /// RL learning rate (much lower, post-training regime).
+    pub rl_lr: f32,
+    pub adam: AdamHp,
+    pub clip_eps: f32,
+    pub temperature: f64,
+}
+
+impl NativePreset {
+    pub fn seq_len(&self) -> usize {
+        self.prompt_len + self.gen_len
+    }
+}
+
+const ADAM: AdamHp = AdamHp { b1: 0.9, b2: 0.95, eps: 1e-8, grad_clip: 1.0 };
+
+/// Look up a built-in preset (same table as `python/compile/config.py`).
+pub fn preset(name: &str) -> Option<NativePreset> {
+    let p = match name {
+        "tiny" => NativePreset {
+            name: "tiny",
+            dims: Dims { vocab: 64, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 128, max_seq: 32 },
+            prompt_len: 12,
+            gen_len: 8,
+            group_size: 4,
+            rollout_batch: 16,
+            train_batch: 16,
+            n_minibatch: 4,
+            lr: 1e-3,
+            rl_lr: 2e-4,
+            adam: ADAM,
+            clip_eps: 0.2,
+            temperature: 1.0,
+        },
+        "setup1" => NativePreset {
+            name: "setup1",
+            dims: Dims { vocab: 64, d_model: 192, n_layers: 4, n_heads: 6, d_ff: 768, max_seq: 48 },
+            prompt_len: 16,
+            gen_len: 10,
+            group_size: 4,
+            rollout_batch: 32,
+            train_batch: 64,
+            n_minibatch: 4,
+            lr: 4e-4,
+            rl_lr: 5e-5,
+            adam: ADAM,
+            clip_eps: 0.2,
+            temperature: 1.0,
+        },
+        "setup2" => NativePreset {
+            name: "setup2",
+            dims: Dims {
+                vocab: 64,
+                d_model: 256,
+                n_layers: 6,
+                n_heads: 8,
+                d_ff: 1024,
+                max_seq: 64,
+            },
+            prompt_len: 36,
+            gen_len: 12,
+            group_size: 4,
+            rollout_batch: 32,
+            train_batch: 64,
+            n_minibatch: 4,
+            lr: 3e-4,
+            rl_lr: 5e-5,
+            adam: ADAM,
+            clip_eps: 0.2,
+            temperature: 1.0,
+        },
+        "big" => NativePreset {
+            name: "big",
+            dims: Dims {
+                vocab: 64,
+                d_model: 768,
+                n_layers: 12,
+                n_heads: 12,
+                d_ff: 3072,
+                max_seq: 64,
+            },
+            prompt_len: 36,
+            gen_len: 12,
+            group_size: 4,
+            rollout_batch: 16,
+            train_batch: 32,
+            n_minibatch: 4,
+            lr: 2e-4,
+            rl_lr: 5e-5,
+            adam: ADAM,
+            clip_eps: 0.2,
+            temperature: 1.0,
+        },
+        _ => return None,
+    };
+    Some(p)
+}
+
+pub fn preset_names() -> &'static [&'static str] {
+    &["tiny", "setup1", "setup2", "big"]
+}
+
+// ---------------------------------------------------------------------------
+// Manifest synthesis
+
+fn tensor(name: &str, shape: &[usize], dtype: Dtype) -> TensorSpec {
+    TensorSpec { name: name.into(), shape: shape.to_vec(), dtype }
+}
+
+/// Build the same manifest `python/compile/aot.py` would emit for this
+/// preset — entirely in memory, no files.
+pub fn builtin_manifest(p: &NativePreset) -> Result<Manifest> {
+    let s = p.seq_len();
+    let t = s - 1;
+    let (rb, tb) = (p.rollout_batch, p.train_batch);
+    let params = p.dims.param_specs();
+
+    let opt_state = |inputs: &mut Vec<TensorSpec>| {
+        for prefix in ["m", "v"] {
+            for spec in &params {
+                inputs.push(tensor(&format!("{prefix}.{}", spec.name), &spec.shape, Dtype::F32));
+            }
+        }
+        inputs.push(tensor("step", &[], Dtype::I32));
+    };
+    let opt_outputs = |outputs: &mut Vec<TensorSpec>| {
+        for spec in &params {
+            outputs.push(spec.clone());
+        }
+        for prefix in ["m", "v"] {
+            for spec in &params {
+                outputs.push(tensor(&format!("{prefix}.{}", spec.name), &spec.shape, Dtype::F32));
+            }
+        }
+        outputs.push(tensor("step", &[], Dtype::I32));
+        outputs.push(tensor("metrics", &[N_METRICS], Dtype::F32));
+    };
+
+    let mut executables = BTreeMap::new();
+    let mut add = |name: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+        executables.insert(
+            name.to_string(),
+            ExecSpec {
+                name: name.to_string(),
+                file: Default::default(),
+                inputs,
+                outputs,
+                hlo_bytes: 0,
+            },
+        );
+    };
+
+    add(
+        "init",
+        vec![tensor("seed", &[], Dtype::I32)],
+        params.clone(),
+    );
+    {
+        let mut inputs = params.clone();
+        inputs.push(tensor("tokens", &[rb, s], Dtype::I32));
+        inputs.push(tensor("pos", &[], Dtype::I32));
+        add("decode", inputs, vec![tensor("logits", &[rb, p.dims.vocab], Dtype::F32)]);
+    }
+    {
+        let mut inputs = params.clone();
+        inputs.push(tensor("tokens", &[tb, s], Dtype::I32));
+        add("prox_forward", inputs, vec![tensor("prox_logp", &[tb, t], Dtype::F32)]);
+    }
+    {
+        let mut inputs = params.clone();
+        opt_state(&mut inputs);
+        inputs.push(tensor("tokens", &[tb, s], Dtype::I32));
+        inputs.push(tensor("mask", &[tb, t], Dtype::F32));
+        let mut outputs = Vec::new();
+        opt_outputs(&mut outputs);
+        add("pretrain", inputs, outputs);
+    }
+    for name in ["train_sync", "train_recompute", "train_loglinear"] {
+        let mut inputs = params.clone();
+        opt_state(&mut inputs);
+        inputs.push(tensor("tokens", &[tb, s], Dtype::I32));
+        inputs.push(tensor("mask", &[tb, t], Dtype::F32));
+        inputs.push(tensor("behav_logp", &[tb, t], Dtype::F32));
+        inputs.push(tensor("adv", &[tb, t], Dtype::F32));
+        inputs.push(tensor("alpha", &[tb], Dtype::F32));
+        inputs.push(tensor("prox_logp", &[tb, t], Dtype::F32));
+        let mut outputs = Vec::new();
+        opt_outputs(&mut outputs);
+        // Native extra: the θ log-probs of the last minibatch pass, so the
+        // trainer can seed the next step's standalone Eq. 3 measurement.
+        outputs.push(tensor("theta_logp", &[tb, t], Dtype::F32));
+        add(name, inputs, outputs);
+    }
+
+    let preset_cfg = PresetConfig {
+        name: p.name.to_string(),
+        vocab: p.dims.vocab,
+        seq_len: s,
+        prompt_len: p.prompt_len,
+        gen_len: p.gen_len,
+        group_size: p.group_size,
+        rollout_batch: rb,
+        train_batch: tb,
+        n_minibatch: p.n_minibatch,
+        param_count: p.dims.param_count(),
+        lr: p.lr as f64,
+        temperature: p.temperature,
+    };
+    let metric_names = crate::metrics::TRAIN_METRIC_NAMES
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let m = Manifest {
+        dir: Default::default(),
+        preset: preset_cfg,
+        params,
+        metric_names,
+        executables,
+    };
+    m.validate()?;
+    Ok(m)
+}
+
+// ---------------------------------------------------------------------------
+// Backend
+
+pub struct NativeBackend {
+    preset: NativePreset,
+}
+
+impl NativeBackend {
+    pub fn new(name: &str) -> Result<NativeBackend> {
+        match preset(name) {
+            Some(p) => Ok(NativeBackend { preset: p }),
+            None => bail!(
+                "unknown native preset {name:?} (built-in: {})",
+                preset_names().join("|")
+            ),
+        }
+    }
+
+    pub fn preset(&self) -> &NativePreset {
+        &self.preset
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> Result<Manifest> {
+        builtin_manifest(&self.preset)
+    }
+
+    fn load_executable(&self, spec: &ExecSpec) -> Result<Box<dyn ExecutableImpl>> {
+        let kind = match spec.name.as_str() {
+            "init" => ExecKind::Init,
+            "decode" => ExecKind::Decode,
+            "prox_forward" => ExecKind::ProxForward,
+            "pretrain" => ExecKind::Pretrain,
+            "train_sync" => ExecKind::Train(LossMode::Coupled),
+            "train_recompute" => ExecKind::Train(LossMode::Frozen),
+            "train_loglinear" => ExecKind::Train(LossMode::Interp),
+            other => bail!("native backend has no executable {other:?}"),
+        };
+        Ok(Box::new(NativeExec { preset: self.preset.clone(), kind }))
+    }
+}
+
+/// The proximal-anchor modes of the fused loss (paper Eq. 2/3; mirrors
+/// `python/compile/kernels/a3po_loss.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossMode {
+    /// sync GRPO — anchor = behaviour policy (coupled loss).
+    Coupled,
+    /// decoupled recompute — anchor = explicit `prox_logp` input, frozen.
+    Frozen,
+    /// A-3PO — anchor = α·behav + (1-α)·θ, detached (Eq. 3).
+    Interp,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum ExecKind {
+    Init,
+    Decode,
+    ProxForward,
+    Pretrain,
+    Train(LossMode),
+}
+
+struct NativeExec {
+    preset: NativePreset,
+    kind: ExecKind,
+}
+
+impl ExecutableImpl for NativeExec {
+    fn execute(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        match self.kind {
+            ExecKind::Init => self.run_init(inputs),
+            ExecKind::Decode => self.run_decode(inputs),
+            ExecKind::ProxForward => self.run_prox_forward(inputs),
+            ExecKind::Pretrain => self.run_pretrain(inputs),
+            ExecKind::Train(mode) => self.run_train(inputs, mode),
+        }
+    }
+}
+
+/// Collect the leading `np` inputs as f32 parameter views.
+fn param_views<'a>(inputs: &[&'a HostTensor], np: usize) -> Result<Vec<&'a [f32]>> {
+    inputs[..np].iter().map(|t| t.as_f32()).collect()
+}
+
+/// Clone a range of inputs into owned mutable buffers.
+fn owned_f32(inputs: &[&HostTensor], from: usize, n: usize) -> Result<Vec<Vec<f32>>> {
+    inputs[from..from + n]
+        .iter()
+        .map(|t| Ok(t.as_f32()?.to_vec()))
+        .collect()
+}
+
+fn masked_sum(values: &[f32], mask: &[f32]) -> f32 {
+    values.iter().zip(mask).map(|(v, m)| v * m).sum()
+}
+
+impl NativeExec {
+    fn np(&self) -> usize {
+        self.preset.dims.n_params()
+    }
+
+    fn pack_state(
+        &self,
+        params: Vec<Vec<f32>>,
+        m: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+        step: i32,
+        metrics: [f32; N_METRICS],
+    ) -> Vec<HostTensor> {
+        let specs = self.preset.dims.param_specs();
+        let mut out = Vec::with_capacity(3 * specs.len() + 2);
+        for group in [params, m, v] {
+            for (data, spec) in group.into_iter().zip(&specs) {
+                out.push(HostTensor::f32(spec.shape.clone(), data));
+            }
+        }
+        out.push(HostTensor::scalar_i32(step));
+        out.push(HostTensor::f32(vec![N_METRICS], metrics.to_vec()));
+        out
+    }
+
+    fn run_init(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let seed = inputs[0].scalar_i32_value()?;
+        Ok(model::init_params(&self.preset.dims, seed))
+    }
+
+    fn run_decode(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let np = self.np();
+        let p = param_views(inputs, np)?;
+        let tokens = inputs[np].as_i32()?;
+        let pos = inputs[np + 1].scalar_i32_value()?;
+        let (b, s, v) = (self.preset.rollout_batch, self.preset.seq_len(), self.preset.dims.vocab);
+        let cache = model::forward(&self.preset.dims, &p, tokens, b, s);
+        // The hidden state at pos-1 predicts the token at pos.
+        let idx = (pos - 1).clamp(0, s as i32 - 1) as usize;
+        let mut logits = vec![0.0f32; b * v];
+        for bi in 0..b {
+            logits[bi * v..(bi + 1) * v]
+                .copy_from_slice(&cache.logits[(bi * s + idx) * v..(bi * s + idx + 1) * v]);
+        }
+        Ok(vec![HostTensor::f32(vec![b, v], logits)])
+    }
+
+    fn run_prox_forward(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let np = self.np();
+        let p = param_views(inputs, np)?;
+        let tokens = inputs[np].as_i32()?;
+        let (b, s) = (self.preset.train_batch, self.preset.seq_len());
+        let cache = model::forward(&self.preset.dims, &p, tokens, b, s);
+        let stats = model::sequence_logp(&self.preset.dims, &cache, tokens);
+        Ok(vec![HostTensor::f32(vec![b, s - 1], stats.logp)])
+    }
+
+    fn run_pretrain(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let np = self.np();
+        let dims = &self.preset.dims;
+        let mut params = owned_f32(inputs, 0, np)?;
+        let mut adam_m = owned_f32(inputs, np, np)?;
+        let mut adam_v = owned_f32(inputs, 2 * np, np)?;
+        let step = inputs[3 * np].scalar_i32_value()?;
+        let tokens = inputs[3 * np + 1].as_i32()?;
+        let mask = inputs[3 * np + 2].as_f32()?;
+        let (b, s) = (self.preset.train_batch, self.preset.seq_len());
+
+        let p: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+        let cache = model::forward(dims, &p, tokens, b, s);
+        let stats = model::sequence_logp(dims, &cache, tokens);
+        let denom = mask.iter().sum::<f32>().max(1.0);
+        let loss = -masked_sum(&stats.logp, mask) / denom;
+        let entropy = masked_sum(&stats.entropy, mask) / denom;
+
+        // d(-masked_mean(logp))/dlogp = -mask/denom.
+        let dlogp: Vec<f32> = mask.iter().map(|&mk| -mk / denom).collect();
+        let dlogits = model::dlogits_from_dlogp(dims, &cache, &stats, tokens, &dlogp);
+        let grads = model::backward(dims, &p, &cache, tokens, &dlogits);
+        drop(p);
+        let gnorm = model::adam_update(
+            &self.preset.adam,
+            self.preset.lr,
+            &mut params,
+            &mut adam_m,
+            &mut adam_v,
+            &grads,
+            step,
+        );
+        let metrics = [loss, entropy, 0.0, 0.0, 0.0, 0.0, gnorm, 0.0];
+        Ok(self.pack_state(params, adam_m, adam_v, step + 1, metrics))
+    }
+
+    fn run_train(&self, inputs: &[&HostTensor], mode: LossMode) -> Result<Vec<HostTensor>> {
+        let np = self.np();
+        let dims = &self.preset.dims;
+        let mut params = owned_f32(inputs, 0, np)?;
+        let mut adam_m = owned_f32(inputs, np, np)?;
+        let mut adam_v = owned_f32(inputs, 2 * np, np)?;
+        let mut step = inputs[3 * np].scalar_i32_value()?;
+        let tokens = inputs[3 * np + 1].as_i32()?;
+        let mask = inputs[3 * np + 2].as_f32()?;
+        let behav = inputs[3 * np + 3].as_f32()?;
+        let adv = inputs[3 * np + 4].as_f32()?;
+        let alpha = inputs[3 * np + 5].as_f32()?;
+        let prox_in = inputs[3 * np + 6].as_f32()?;
+
+        let (tb, s) = (self.preset.train_batch, self.preset.seq_len());
+        let t = s - 1;
+        let n_mb = self.preset.n_minibatch;
+        let mb = tb / n_mb;
+        let clip_eps = self.preset.clip_eps;
+
+        let mut theta_out = vec![0.0f32; tb * t];
+        let mut losses = 0.0f64;
+        let mut ents = 0.0f64;
+        let mut ratios = 0.0f64;
+        let mut kls = 0.0f64;
+        let mut gnorms = 0.0f64;
+        let mut max_iw = f32::NEG_INFINITY;
+        let mut min_iw = f32::INFINITY;
+        let mut clip_total = 0.0f32;
+
+        for i in 0..n_mb {
+            let (r0, r1) = (i * mb, (i + 1) * mb);
+            let tok_mb = &tokens[r0 * s..r1 * s];
+            let mask_mb = &mask[r0 * t..r1 * t];
+            let behav_mb = &behav[r0 * t..r1 * t];
+            let adv_mb = &adv[r0 * t..r1 * t];
+            let alpha_mb = &alpha[r0..r1];
+            let prox_mb = &prox_in[r0 * t..r1 * t];
+
+            let p: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+            let cache = model::forward(dims, &p, tok_mb, mb, s);
+            let stats = model::sequence_logp(dims, &cache, tok_mb);
+            theta_out[r0 * t..r1 * t].copy_from_slice(&stats.logp);
+
+            let denom = mask_mb.iter().sum::<f32>().max(1.0);
+            let mut obj_sum = 0.0f32;
+            let mut ent_sum = 0.0f32;
+            let mut ratio_sum = 0.0f32;
+            let mut kl_sum = 0.0f32;
+            let mut clip_sum = 0.0f32;
+            let mut mb_max_iw = f32::NEG_INFINITY;
+            let mut mb_min_iw = f32::INFINITY;
+            let mut dlogp = vec![0.0f32; mb * t];
+            for row in 0..mb {
+                let a = alpha_mb[row];
+                for ti in 0..t {
+                    let idx = row * t + ti;
+                    let mk = mask_mb[idx];
+                    let theta = stats.logp[idx];
+                    let bh = behav_mb[idx];
+                    // The anchor is detached in every mode (paper Eq. 3):
+                    // the objective's only gradient path is θ in the ratio.
+                    let prox = match mode {
+                        LossMode::Coupled => bh,
+                        LossMode::Frozen => prox_mb[idx],
+                        LossMode::Interp => a * bh + (1.0 - a) * theta,
+                    };
+                    let iw = (prox - bh).exp();
+                    let ratio = (theta - prox).exp();
+                    let av = adv_mb[idx];
+                    let unclipped = ratio * av;
+                    let clipped_term = ratio.clamp(1.0 - clip_eps, 1.0 + clip_eps) * av;
+                    let is_clipped = if unclipped > clipped_term { 1.0f32 } else { 0.0 };
+                    let obj = iw * unclipped.min(clipped_term);
+                    if mk > 0.0 {
+                        obj_sum += obj * mk;
+                        ent_sum += stats.entropy[idx] * mk;
+                        ratio_sum += ratio * mk;
+                        kl_sum += (bh - theta) * mk;
+                        clip_sum += is_clipped * mk;
+                        mb_max_iw = mb_max_iw.max(iw);
+                        mb_min_iw = mb_min_iw.min(iw);
+                        // loss = -sum(obj*mask)/denom; unclipped branch only.
+                        dlogp[idx] = -mk * iw * av * ratio * (1.0 - is_clipped) / denom;
+                    }
+                }
+            }
+
+            let dlogits = model::dlogits_from_dlogp(dims, &cache, &stats, tok_mb, &dlogp);
+            let grads = model::backward(dims, &p, &cache, tok_mb, &dlogits);
+            drop(p);
+            let gnorm = model::adam_update(
+                &self.preset.adam,
+                self.preset.rl_lr,
+                &mut params,
+                &mut adam_m,
+                &mut adam_v,
+                &grads,
+                step,
+            );
+            step += 1;
+
+            losses += (-obj_sum / denom) as f64;
+            ents += (ent_sum / denom) as f64;
+            ratios += (ratio_sum / denom) as f64;
+            kls += (kl_sum / denom) as f64;
+            gnorms += gnorm as f64;
+            max_iw = max_iw.max(mb_max_iw);
+            min_iw = min_iw.min(mb_min_iw);
+            clip_total += clip_sum;
+        }
+
+        let inv = 1.0 / n_mb as f64;
+        let metrics = [
+            (losses * inv) as f32,
+            (ents * inv) as f32,
+            max_iw,
+            min_iw,
+            clip_total,
+            (ratios * inv) as f32,
+            (gnorms * inv) as f32,
+            (kls * inv) as f32,
+        ];
+        let mut out = self.pack_state(params, adam_m, adam_v, step, metrics);
+        out.push(HostTensor::f32(vec![tb, t], theta_out));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+
+    #[test]
+    fn builtin_manifests_validate() {
+        for name in preset_names() {
+            let p = preset(name).unwrap();
+            let m = builtin_manifest(&p).expect(name);
+            assert_eq!(m.preset.name, *name);
+            assert_eq!(m.preset.seq_len, m.preset.prompt_len + m.preset.gen_len);
+            assert_eq!(m.metric_names.len(), N_METRICS);
+            assert_eq!(m.n_params(), p.dims.n_params());
+        }
+        assert!(NativeBackend::new("nope").is_err());
+    }
+
+    #[test]
+    fn tiny_geometry_matches_python_config() {
+        let p = preset("tiny").unwrap();
+        assert_eq!(p.seq_len(), 20);
+        assert_eq!(p.dims.d_model, 64);
+        assert_eq!(p.dims.n_layers, 2);
+        assert_eq!(p.train_batch % p.n_minibatch, 0);
+    }
+
+    #[test]
+    fn sync_step_has_unit_importance_weights() {
+        // On-policy coupled loss: behav == anchor, so iw == 1 everywhere and
+        // the loss reduces to clipped PPO around the behaviour policy.
+        let rt = Runtime::native("tiny", Some(&["init", "train_sync"])).unwrap();
+        let geo = rt.manifest.preset.clone();
+        let snapshot = rt.init_params(5).unwrap();
+        let (b, s) = (geo.train_batch, geo.seq_len);
+        let t = s - 1;
+        let np = rt.manifest.n_params();
+
+        let zeros_f = |n: usize| vec![0.0f32; n];
+        let tokens = HostTensor::i32(vec![b, s], (0..b * s).map(|i| (i % 13) as i32).collect());
+        let mask = HostTensor::f32(vec![b, t], vec![1.0; b * t]);
+        let behav = HostTensor::f32(vec![b, t], vec![-2.0; b * t]);
+        let adv = HostTensor::f32(vec![b, t], (0..b * t).map(|i| ((i % 3) as f32) - 1.0).collect());
+        let alpha = HostTensor::f32(vec![b], zeros_f(b));
+        let prox = HostTensor::f32(vec![b, t], zeros_f(b * t));
+        let step = HostTensor::scalar_i32(0);
+
+        let adam = rt.zero_adam_state();
+        let mut refs: Vec<&HostTensor> = snapshot.tensor_refs();
+        refs.extend(adam.iter());
+        refs.extend(adam.iter());
+        refs.push(&step);
+        refs.push(&tokens);
+        refs.push(&mask);
+        refs.push(&behav);
+        refs.push(&adv);
+        refs.push(&alpha);
+        refs.push(&prox);
+        let outs = rt.exec("train_sync").unwrap().run_refs(&refs).unwrap();
+        assert_eq!(outs.len(), 3 * np + 3);
+        let metrics = outs[3 * np + 1].as_f32().unwrap();
+        // max_is_weight == min_is_weight == 1 in coupled mode.
+        assert!((metrics[2] - 1.0).abs() < 1e-6, "max_iw {}", metrics[2]);
+        assert!((metrics[3] - 1.0).abs() < 1e-6, "min_iw {}", metrics[3]);
+        // step advanced by n_minibatch.
+        assert_eq!(outs[3 * np].as_i32().unwrap()[0], geo.n_minibatch as i32);
+        // params actually moved.
+        let moved = outs[0].as_f32().unwrap() != snapshot.params[0].as_f32().unwrap();
+        assert!(moved, "train step must update parameters");
+    }
+
+    #[test]
+    fn interp_anchor_contracts_ratio_toward_one() {
+        // With alpha = 1 the anchor sits at the behaviour policy (iw = 1,
+        // ratio = theta/behav); with alpha = 0 the anchor is theta itself
+        // (ratio = 1 exactly, iw = theta/behav). Check the alpha = 0 case:
+        // loglinear on-policy anchoring makes every ratio exactly 1, so no
+        // tokens clip regardless of advantage.
+        let rt = Runtime::native("tiny", Some(&["init", "train_loglinear"])).unwrap();
+        let geo = rt.manifest.preset.clone();
+        let snapshot = rt.init_params(5).unwrap();
+        let (b, s) = (geo.train_batch, geo.seq_len);
+        let t = s - 1;
+        let np = rt.manifest.n_params();
+
+        let tokens = HostTensor::i32(vec![b, s], (0..b * s).map(|i| (i % 11) as i32).collect());
+        let mask = HostTensor::f32(vec![b, t], vec![1.0; b * t]);
+        let behav = HostTensor::f32(vec![b, t], vec![-1.5; b * t]);
+        let adv = HostTensor::f32(vec![b, t], vec![1.0; b * t]);
+        let alpha = HostTensor::f32(vec![b], vec![0.0; b]);
+        let prox = HostTensor::f32(vec![b, t], vec![0.0; b * t]);
+        let step = HostTensor::scalar_i32(0);
+
+        let adam = rt.zero_adam_state();
+        let mut refs: Vec<&HostTensor> = snapshot.tensor_refs();
+        refs.extend(adam.iter());
+        refs.extend(adam.iter());
+        refs.push(&step);
+        refs.push(&tokens);
+        refs.push(&mask);
+        refs.push(&behav);
+        refs.push(&adv);
+        refs.push(&alpha);
+        refs.push(&prox);
+        let outs = rt.exec("train_loglinear").unwrap().run_refs(&refs).unwrap();
+        let metrics = outs[3 * np + 1].as_f32().unwrap();
+        assert_eq!(metrics[4], 0.0, "alpha=0 anchor-at-theta must never clip");
+        assert!((metrics[5] - 1.0).abs() < 1e-6, "mean ratio {}", metrics[5]);
+        // theta_logp output is a valid log-prob field.
+        let theta = outs[3 * np + 2].as_f32().unwrap();
+        assert_eq!(theta.len(), b * t);
+        assert!(theta.iter().all(|&x| x <= 1e-5 && x.is_finite()));
+    }
+}

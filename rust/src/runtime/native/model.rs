@@ -1,0 +1,821 @@
+//! Pure-Rust policy model: the same decoder-only transformer as
+//! `python/compile/model.py`, with a hand-written backward pass.
+//!
+//! Everything operates on flat `f32` buffers in the manifest's parameter
+//! order (embed, pos_embed, per-layer [ln1, wq, wk, wv, wo, ln2, w1, b1,
+//! w2, b2], lnf, unembed). The forward pass caches every intermediate the
+//! backward pass needs; correctness is pinned by a finite-difference
+//! gradient check in this module's tests.
+
+#![allow(clippy::needless_range_loop)]
+
+use crate::runtime::manifest::{Dtype, TensorSpec};
+use crate::runtime::tensor::HostTensor;
+use crate::util::rng::Pcg64;
+
+const LN_EPS: f32 = 1e-5;
+
+/// Transformer hyper-parameters (mirrors python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct Dims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+/// Per-layer parameter slot offsets within the flat parameter list.
+const L_LN1S: usize = 0;
+const L_LN1B: usize = 1;
+const L_WQ: usize = 2;
+const L_WK: usize = 3;
+const L_WV: usize = 4;
+const L_WO: usize = 5;
+const L_LN2S: usize = 6;
+const L_LN2B: usize = 7;
+const L_W1: usize = 8;
+const L_B1: usize = 9;
+const L_W2: usize = 10;
+const L_B2: usize = 11;
+const PER_LAYER: usize = 12;
+
+impl Dims {
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// Deterministic (name, shape) parameter list — the manifest order.
+    pub fn param_specs(&self) -> Vec<TensorSpec> {
+        let (d, v, s, f) = (self.d_model, self.vocab, self.max_seq, self.d_ff);
+        let spec = |name: String, shape: Vec<usize>| TensorSpec {
+            name,
+            shape,
+            dtype: Dtype::F32,
+        };
+        let mut out = vec![
+            spec("embed".into(), vec![v, d]),
+            spec("pos_embed".into(), vec![s, d]),
+        ];
+        for i in 0..self.n_layers {
+            let p = format!("layer{i}.");
+            out.push(spec(format!("{p}ln1_scale"), vec![d]));
+            out.push(spec(format!("{p}ln1_bias"), vec![d]));
+            out.push(spec(format!("{p}wq"), vec![d, d]));
+            out.push(spec(format!("{p}wk"), vec![d, d]));
+            out.push(spec(format!("{p}wv"), vec![d, d]));
+            out.push(spec(format!("{p}wo"), vec![d, d]));
+            out.push(spec(format!("{p}ln2_scale"), vec![d]));
+            out.push(spec(format!("{p}ln2_bias"), vec![d]));
+            out.push(spec(format!("{p}w1"), vec![d, f]));
+            out.push(spec(format!("{p}b1"), vec![f]));
+            out.push(spec(format!("{p}w2"), vec![f, d]));
+            out.push(spec(format!("{p}b2"), vec![d]));
+        }
+        out.push(spec("lnf_scale".into(), vec![d]));
+        out.push(spec("lnf_bias".into(), vec![d]));
+        out.push(spec("unembed".into(), vec![d, v]));
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        2 + PER_LAYER * self.n_layers + 3
+    }
+
+    /// Total scalar parameter count (the manifest's `param_count`).
+    pub fn param_count(&self) -> u64 {
+        self.param_specs().iter().map(|s| s.elements() as u64).sum()
+    }
+
+    fn layer_base(&self, layer: usize) -> usize {
+        2 + PER_LAYER * layer
+    }
+
+    fn lnf_scale_idx(&self) -> usize {
+        2 + PER_LAYER * self.n_layers
+    }
+
+    fn unembed_idx(&self) -> usize {
+        self.lnf_scale_idx() + 2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Init
+
+/// Scaled-normal init, deterministic in `seed` (same *scheme* as the python
+/// model: ones for LN scales, zeros for biases, depth-scaled normals for the
+/// residual-branch outputs, 0.02-scaled normals elsewhere).
+pub fn init_params(dims: &Dims, seed: i32) -> Vec<HostTensor> {
+    let residual_std = 0.02 / (2.0 * dims.n_layers as f64).sqrt();
+    dims.param_specs()
+        .iter()
+        .enumerate()
+        .map(|(idx, spec)| {
+            let base = spec.name.rsplit('.').next().unwrap_or(&spec.name);
+            let n = spec.elements();
+            let data: Vec<f32> = if base.starts_with("ln") || base.ends_with("_scale") {
+                vec![1.0; n]
+            } else if base.ends_with("_bias") || base.starts_with('b') {
+                vec![0.0; n]
+            } else {
+                let std = if base == "wo" || base == "w2" { residual_std } else { 0.02 };
+                let mut rng = Pcg64::new(seed as i64 as u64, 0x1417 + idx as u64);
+                (0..n).map(|_| (std * rng.next_normal()) as f32).collect()
+            };
+            HostTensor::f32(spec.shape.clone(), data)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Small dense-math helpers (row-major, cache-friendly i-k-j loops)
+
+/// c[m,n] += a[m,k] · b[k,n]
+fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_acc(&mut c, a, b, m, k, n);
+    c
+}
+
+/// c[m,n] += aᵀ · b where a is [k,m] and b is [k,n] (weight gradients).
+fn matmul_at_b_acc(c: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// c[m,n] += a · bᵀ where a is [m,k] and b is [n,k] (input gradients).
+fn matmul_a_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            crow[j] += acc;
+        }
+    }
+}
+
+/// GELU (tanh approximation — jax.nn.gelu's default) and its derivative.
+const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
+const GELU_K: f32 = 0.044_715;
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + GELU_K * x * x * x)).tanh())
+}
+
+fn gelu_grad(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_K * x * x * x);
+    let th = u.tanh();
+    let sech2 = 1.0 - th * th;
+    0.5 * (1.0 + th) + 0.5 * x * sech2 * GELU_C * (1.0 + 3.0 * GELU_K * x * x)
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm
+
+pub struct LnCache {
+    /// The normalisation input (a copy of the residual-stream value).
+    x: Vec<f32>,
+    /// 1/sqrt(var + eps) per row.
+    inv: Vec<f32>,
+    mean: Vec<f32>,
+    /// The scaled + shifted output.
+    y: Vec<f32>,
+}
+
+fn layernorm(x: &[f32], scale: &[f32], bias: &[f32], rows: usize, d: usize) -> LnCache {
+    let mut y = vec![0.0f32; rows * d];
+    let mut inv = vec![0.0f32; rows];
+    let mut mean = vec![0.0f32; rows];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let iv = 1.0 / (var + LN_EPS).sqrt();
+        mean[r] = mu;
+        inv[r] = iv;
+        let out = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            out[j] = (row[j] - mu) * iv * scale[j] + bias[j];
+        }
+    }
+    LnCache { x: x.to_vec(), inv, mean, y }
+}
+
+/// Returns `dx`; accumulates `dscale`/`dbias`.
+fn layernorm_backward(
+    cache: &LnCache,
+    scale: &[f32],
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+    dscale: &mut [f32],
+    dbias: &mut [f32],
+) -> Vec<f32> {
+    let mut dx = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let x = &cache.x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let (mu, iv) = (cache.mean[r], cache.inv[r]);
+        let mut m1 = 0.0f32; // mean of dxhat
+        let mut m2 = 0.0f32; // mean of dxhat * xhat
+        for j in 0..d {
+            let xhat = (x[j] - mu) * iv;
+            let dxhat = dyr[j] * scale[j];
+            dscale[j] += dyr[j] * xhat;
+            dbias[j] += dyr[j];
+            m1 += dxhat;
+            m2 += dxhat * xhat;
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        let out = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            let xhat = (x[j] - mu) * iv;
+            let dxhat = dyr[j] * scale[j];
+            out[j] = iv * (dxhat - m1 - xhat * m2);
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Forward
+
+struct LayerCache {
+    ln1: LnCache,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention probabilities `[b, h, s, s]` (lower-triangular rows).
+    probs: Vec<f32>,
+    /// Merged-head context `[b, s, d]`.
+    ctx: Vec<f32>,
+    ln2: LnCache,
+    /// Pre-activation `h2·w1 + b1` `[b, s, f]`.
+    mlp_pre: Vec<f32>,
+    /// `gelu(mlp_pre)`.
+    mlp_act: Vec<f32>,
+}
+
+pub struct Cache {
+    b: usize,
+    s: usize,
+    layers: Vec<LayerCache>,
+    lnf: LnCache,
+    /// Logits `[b, s, v]`.
+    pub logits: Vec<f32>,
+}
+
+/// Full forward pass over a `[b, s]` token window.
+pub fn forward(dims: &Dims, p: &[&[f32]], tokens: &[i32], b: usize, s: usize) -> Cache {
+    let (d, v, f, h, hd) = (dims.d_model, dims.vocab, dims.d_ff, dims.n_heads, dims.head_dim());
+    assert!(s <= dims.max_seq, "seq {s} exceeds max_seq {}", dims.max_seq);
+    assert_eq!(tokens.len(), b * s);
+    let rows = b * s;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    // Embedding + positional.
+    let embed = p[0];
+    let pos_embed = p[1];
+    let mut x = vec![0.0f32; rows * d];
+    for bi in 0..b {
+        for i in 0..s {
+            let tok = tokens[bi * s + i] as usize;
+            debug_assert!(tok < v, "token {tok} out of vocab {v}");
+            let e = &embed[tok * d..(tok + 1) * d];
+            let pe = &pos_embed[i * d..(i + 1) * d];
+            let out = &mut x[(bi * s + i) * d..(bi * s + i + 1) * d];
+            for j in 0..d {
+                out[j] = e[j] + pe[j];
+            }
+        }
+    }
+    let mut layers = Vec::with_capacity(dims.n_layers);
+    for layer in 0..dims.n_layers {
+        let base = dims.layer_base(layer);
+        let ln1 = layernorm(&x, p[base + L_LN1S], p[base + L_LN1B], rows, d);
+        let q = matmul(&ln1.y, p[base + L_WQ], rows, d, d);
+        let k = matmul(&ln1.y, p[base + L_WK], rows, d, d);
+        let vv = matmul(&ln1.y, p[base + L_WV], rows, d, d);
+
+        // Causal multi-head attention.
+        let mut probs = vec![0.0f32; b * h * s * s];
+        let mut ctx = vec![0.0f32; rows * d];
+        for bi in 0..b {
+            for hh in 0..h {
+                let col = hh * hd;
+                for i in 0..s {
+                    let qrow = &q[(bi * s + i) * d + col..(bi * s + i) * d + col + hd];
+                    let prow_base = ((bi * h + hh) * s + i) * s;
+                    // Scores + online softmax over j <= i.
+                    let mut mx = f32::NEG_INFINITY;
+                    let mut scores: Vec<f32> = Vec::with_capacity(i + 1);
+                    for j in 0..=i {
+                        let krow = &k[(bi * s + j) * d + col..(bi * s + j) * d + col + hd];
+                        let mut acc = 0.0f32;
+                        for t in 0..hd {
+                            acc += qrow[t] * krow[t];
+                        }
+                        let sc = acc * scale;
+                        mx = mx.max(sc);
+                        scores.push(sc);
+                    }
+                    let mut denom = 0.0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - mx).exp();
+                        denom += *sc;
+                    }
+                    let crow = &mut ctx[(bi * s + i) * d + col..(bi * s + i) * d + col + hd];
+                    for j in 0..=i {
+                        let pj = scores[j] / denom;
+                        probs[prow_base + j] = pj;
+                        let vrow = &vv[(bi * s + j) * d + col..(bi * s + j) * d + col + hd];
+                        for t in 0..hd {
+                            crow[t] += pj * vrow[t];
+                        }
+                    }
+                }
+            }
+        }
+        let attn_out = matmul(&ctx, p[base + L_WO], rows, d, d);
+        for j in 0..rows * d {
+            x[j] += attn_out[j];
+        }
+
+        let ln2 = layernorm(&x, p[base + L_LN2S], p[base + L_LN2B], rows, d);
+        let mut mlp_pre = matmul(&ln2.y, p[base + L_W1], rows, d, f);
+        let b1 = p[base + L_B1];
+        for r in 0..rows {
+            let row = &mut mlp_pre[r * f..(r + 1) * f];
+            for j in 0..f {
+                row[j] += b1[j];
+            }
+        }
+        let mlp_act: Vec<f32> = mlp_pre.iter().map(|&z| gelu(z)).collect();
+        let mlp_out = matmul(&mlp_act, p[base + L_W2], rows, f, d);
+        let b2 = p[base + L_B2];
+        for r in 0..rows {
+            let xr = &mut x[r * d..(r + 1) * d];
+            let mr = &mlp_out[r * d..(r + 1) * d];
+            for j in 0..d {
+                xr[j] += mr[j] + b2[j];
+            }
+        }
+
+        layers.push(LayerCache { ln1, q, k, v: vv, probs, ctx, ln2, mlp_pre, mlp_act });
+    }
+
+    let lnf = layernorm(&x, p[dims.lnf_scale_idx()], p[dims.lnf_scale_idx() + 1], rows, d);
+    let logits = matmul(&lnf.y, p[dims.unembed_idx()], rows, d, v);
+    Cache { b, s, layers, lnf, logits }
+}
+
+// ---------------------------------------------------------------------------
+// Next-token log-probs / entropy / softmax (the L1-kernel counterpart)
+
+pub struct SeqStats {
+    /// Per-position next-token log-prob `[b, s-1]`.
+    pub logp: Vec<f32>,
+    /// Per-position distribution entropy `[b, s-1]`.
+    pub entropy: Vec<f32>,
+    /// Full softmax at each scored position `[b, s-1, v]` (backward needs it).
+    pub probs: Vec<f32>,
+}
+
+/// Score positions `0..s-1`: position t predicts `tokens[:, t+1]`.
+pub fn sequence_logp(dims: &Dims, cache: &Cache, tokens: &[i32]) -> SeqStats {
+    let (b, s, v) = (cache.b, cache.s, dims.vocab);
+    let t = s - 1;
+    let mut logp = vec![0.0f32; b * t];
+    let mut entropy = vec![0.0f32; b * t];
+    let mut probs = vec![0.0f32; b * t * v];
+    for bi in 0..b {
+        for ti in 0..t {
+            let z = &cache.logits[(bi * s + ti) * v..(bi * s + ti + 1) * v];
+            let mx = z.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let mut denom = 0.0f32;
+            let prow = &mut probs[(bi * t + ti) * v..(bi * t + ti + 1) * v];
+            for j in 0..v {
+                prow[j] = (z[j] - mx).exp();
+                denom += prow[j];
+            }
+            let lse = denom.ln() + mx;
+            let mut ent = 0.0f32;
+            for j in 0..v {
+                prow[j] /= denom;
+                if prow[j] > 0.0 {
+                    ent -= prow[j] * (z[j] - lse);
+                }
+            }
+            let target = tokens[bi * s + ti + 1] as usize;
+            logp[bi * t + ti] = z[target] - lse;
+            entropy[bi * t + ti] = ent;
+        }
+    }
+    SeqStats { logp, entropy, probs }
+}
+
+/// Expand a per-position log-prob gradient into a logits gradient:
+/// `dlogits[b,t,:] = g · (onehot(target) − softmax)` and zero at the last
+/// position (which scores nothing).
+pub fn dlogits_from_dlogp(
+    dims: &Dims,
+    cache: &Cache,
+    stats: &SeqStats,
+    tokens: &[i32],
+    dlogp: &[f32],
+) -> Vec<f32> {
+    let (b, s, v) = (cache.b, cache.s, dims.vocab);
+    let t = s - 1;
+    assert_eq!(dlogp.len(), b * t);
+    let mut dlogits = vec![0.0f32; b * s * v];
+    for bi in 0..b {
+        for ti in 0..t {
+            let g = dlogp[bi * t + ti];
+            if g == 0.0 {
+                continue;
+            }
+            let prow = &stats.probs[(bi * t + ti) * v..(bi * t + ti + 1) * v];
+            let out = &mut dlogits[(bi * s + ti) * v..(bi * s + ti + 1) * v];
+            for j in 0..v {
+                out[j] = -g * prow[j];
+            }
+            let target = tokens[bi * s + ti + 1] as usize;
+            out[target] += g;
+        }
+    }
+    dlogits
+}
+
+// ---------------------------------------------------------------------------
+// Backward
+
+/// Backprop `dlogits [b, s, v]` through the cached forward pass; returns
+/// parameter gradients in manifest order.
+pub fn backward(
+    dims: &Dims,
+    p: &[&[f32]],
+    cache: &Cache,
+    tokens: &[i32],
+    dlogits: &[f32],
+) -> Vec<Vec<f32>> {
+    let (d, v, f, h, hd) = (dims.d_model, dims.vocab, dims.d_ff, dims.n_heads, dims.head_dim());
+    let (b, s) = (cache.b, cache.s);
+    let rows = b * s;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let specs = dims.param_specs();
+    let mut grads: Vec<Vec<f32>> = specs.iter().map(|sp| vec![0.0f32; sp.elements()]).collect();
+
+    // Unembed + final LN.
+    let unembed = dims.unembed_idx();
+    matmul_at_b_acc(&mut grads[unembed], &cache.lnf.y, dlogits, rows, d, v);
+    let mut dxf = vec![0.0f32; rows * d];
+    matmul_a_bt_acc(&mut dxf, dlogits, p[unembed], rows, v, d);
+    let lnf_s = dims.lnf_scale_idx();
+    let (gs, rest) = grads.split_at_mut(lnf_s + 1);
+    let mut dx = {
+        let (dscale, dbias) = (gs.last_mut().unwrap(), &mut rest[0]);
+        layernorm_backward(&cache.lnf, p[lnf_s], &dxf, rows, d, dscale, dbias)
+    };
+
+    for layer in (0..dims.n_layers).rev() {
+        let base = dims.layer_base(layer);
+        let lc = &cache.layers[layer];
+
+        // --- MLP: x2 = x1 + gelu(ln2(x1)·w1 + b1)·w2 + b2 ----------------
+        {
+            let mut dact = vec![0.0f32; rows * f];
+            matmul_a_bt_acc(&mut dact, &dx, p[base + L_W2], rows, d, f);
+            matmul_at_b_acc(&mut grads[base + L_W2], &lc.mlp_act, &dx, rows, f, d);
+            {
+                let db2 = &mut grads[base + L_B2];
+                for r in 0..rows {
+                    let dr = &dx[r * d..(r + 1) * d];
+                    for j in 0..d {
+                        db2[j] += dr[j];
+                    }
+                }
+            }
+            let mut dpre = dact;
+            for i in 0..rows * f {
+                dpre[i] *= gelu_grad(lc.mlp_pre[i]);
+            }
+            {
+                let db1 = &mut grads[base + L_B1];
+                for r in 0..rows {
+                    let dr = &dpre[r * f..(r + 1) * f];
+                    for j in 0..f {
+                        db1[j] += dr[j];
+                    }
+                }
+            }
+            matmul_at_b_acc(&mut grads[base + L_W1], &lc.ln2.y, &dpre, rows, d, f);
+            let mut dh2 = vec![0.0f32; rows * d];
+            matmul_a_bt_acc(&mut dh2, &dpre, p[base + L_W1], rows, f, d);
+            let (gs, gb) = {
+                let (a, bpart) = grads.split_at_mut(base + L_LN2B);
+                (&mut a[base + L_LN2S], &mut bpart[0])
+            };
+            let dres = layernorm_backward(&lc.ln2, p[base + L_LN2S], &dh2, rows, d, gs, gb);
+            for i in 0..rows * d {
+                dx[i] += dres[i];
+            }
+        }
+
+        // --- Attention: x1 = x0 + (softmax(q·kᵀ)·v)·wo -------------------
+        {
+            let mut dctx = vec![0.0f32; rows * d];
+            matmul_a_bt_acc(&mut dctx, &dx, p[base + L_WO], rows, d, d);
+            matmul_at_b_acc(&mut grads[base + L_WO], &lc.ctx, &dx, rows, d, d);
+
+            let mut dq = vec![0.0f32; rows * d];
+            let mut dk = vec![0.0f32; rows * d];
+            let mut dv = vec![0.0f32; rows * d];
+            let mut dprobs_row = vec![0.0f32; s];
+            for bi in 0..b {
+                for hh in 0..h {
+                    let col = hh * hd;
+                    for i in 0..s {
+                        let prow_base = ((bi * h + hh) * s + i) * s;
+                        let dcrow =
+                            &dctx[(bi * s + i) * d + col..(bi * s + i) * d + col + hd];
+                        // dprobs and dv.
+                        let mut rowdot = 0.0f32;
+                        for j in 0..=i {
+                            let pj = lc.probs[prow_base + j];
+                            let vrow =
+                                &lc.v[(bi * s + j) * d + col..(bi * s + j) * d + col + hd];
+                            let mut acc = 0.0f32;
+                            for t in 0..hd {
+                                acc += dcrow[t] * vrow[t];
+                            }
+                            dprobs_row[j] = acc;
+                            rowdot += acc * pj;
+                            let dvrow = &mut dv
+                                [(bi * s + j) * d + col..(bi * s + j) * d + col + hd];
+                            for t in 0..hd {
+                                dvrow[t] += pj * dcrow[t];
+                            }
+                        }
+                        // dscores -> dq, dk.
+                        let qrow_start = (bi * s + i) * d + col;
+                        for j in 0..=i {
+                            let pj = lc.probs[prow_base + j];
+                            let dscore = pj * (dprobs_row[j] - rowdot) * scale;
+                            if dscore == 0.0 {
+                                continue;
+                            }
+                            let krow_start = (bi * s + j) * d + col;
+                            for t in 0..hd {
+                                dq[qrow_start + t] += dscore * lc.k[krow_start + t];
+                                dk[krow_start + t] += dscore * lc.q[qrow_start + t];
+                            }
+                        }
+                    }
+                }
+            }
+
+            matmul_at_b_acc(&mut grads[base + L_WQ], &lc.ln1.y, &dq, rows, d, d);
+            matmul_at_b_acc(&mut grads[base + L_WK], &lc.ln1.y, &dk, rows, d, d);
+            matmul_at_b_acc(&mut grads[base + L_WV], &lc.ln1.y, &dv, rows, d, d);
+            let mut dh1 = vec![0.0f32; rows * d];
+            matmul_a_bt_acc(&mut dh1, &dq, p[base + L_WQ], rows, d, d);
+            matmul_a_bt_acc(&mut dh1, &dk, p[base + L_WK], rows, d, d);
+            matmul_a_bt_acc(&mut dh1, &dv, p[base + L_WV], rows, d, d);
+            let (gs, gb) = {
+                let (a, bpart) = grads.split_at_mut(base + L_LN1B);
+                (&mut a[base + L_LN1S], &mut bpart[0])
+            };
+            let dres = layernorm_backward(&lc.ln1, p[base + L_LN1S], &dh1, rows, d, gs, gb);
+            for i in 0..rows * d {
+                dx[i] += dres[i];
+            }
+        }
+    }
+
+    // Embedding scatter + positional sum.
+    {
+        let (gembed, gpos) = {
+            let (a, bpart) = grads.split_at_mut(1);
+            (&mut a[0], &mut bpart[0])
+        };
+        for bi in 0..b {
+            for i in 0..s {
+                let tok = tokens[bi * s + i] as usize;
+                let dr = &dx[(bi * s + i) * d..(bi * s + i + 1) * d];
+                let er = &mut gembed[tok * d..(tok + 1) * d];
+                let pr = &mut gpos[i * d..(i + 1) * d];
+                for j in 0..d {
+                    er[j] += dr[j];
+                    pr[j] += dr[j];
+                }
+            }
+        }
+    }
+    grads
+}
+
+// ---------------------------------------------------------------------------
+// Adam (bias-corrected, global-norm clipped)
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdamHp {
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    pub grad_clip: f32,
+}
+
+/// One Adam update in place. `step` is the pre-update counter (python keeps
+/// the same convention: `t = step + 1`). Returns the pre-clip global norm.
+pub fn adam_update(
+    hp: &AdamHp,
+    lr: f32,
+    params: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+    step: i32,
+) -> f32 {
+    let mut sq = 0.0f64;
+    for g in grads {
+        for &x in g {
+            sq += (x as f64) * (x as f64);
+        }
+    }
+    let gnorm = sq.sqrt() as f32;
+    let scale = (hp.grad_clip / gnorm.max(1e-12)).min(1.0);
+    let t = step + 1;
+    let bc1 = 1.0 - hp.b1.powi(t);
+    let bc2 = 1.0 - hp.b2.powi(t);
+    for (pi, g) in grads.iter().enumerate() {
+        let (pv, mv, vv) = (&mut params[pi], &mut m[pi], &mut v[pi]);
+        for j in 0..g.len() {
+            let gj = g[j] * scale;
+            mv[j] = hp.b1 * mv[j] + (1.0 - hp.b1) * gj;
+            vv[j] = hp.b2 * vv[j] + (1.0 - hp.b2) * gj * gj;
+            let mhat = mv[j] / bc1;
+            let vhat = vv[j] / bc2;
+            pv[j] -= lr * mhat / (vhat.sqrt() + hp.eps);
+        }
+    }
+    gnorm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dims() -> Dims {
+        Dims { vocab: 8, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 12, max_seq: 6 }
+    }
+
+    fn views(params: &[HostTensor]) -> Vec<&[f32]> {
+        params.iter().map(|t| t.as_f32().unwrap()).collect()
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let dims = tiny_dims();
+        let a = init_params(&dims, 7);
+        let b = init_params(&dims, 7);
+        let c = init_params(&dims, 8);
+        assert_eq!(a.len(), dims.n_params());
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // The python scheme's quirk carries over: every `ln*` parameter
+        // (scales AND biases) initialises to ones; MLP biases to zeros.
+        assert!(a[2].as_f32().unwrap().iter().all(|&x| x == 1.0), "ln1_scale");
+        assert!(a[3].as_f32().unwrap().iter().all(|&x| x == 1.0), "ln1_bias");
+        assert!(a[2 + 9].as_f32().unwrap().iter().all(|&x| x == 0.0), "b1");
+    }
+
+    #[test]
+    fn forward_logits_are_finite_and_softmax_normalises() {
+        let dims = tiny_dims();
+        let params = init_params(&dims, 1);
+        let p = views(&params);
+        let (b, s) = (2, 5);
+        let tokens: Vec<i32> = (0..b * s).map(|i| (i % dims.vocab) as i32).collect();
+        let cache = forward(&dims, &p, &tokens, b, s);
+        assert!(cache.logits.iter().all(|x| x.is_finite()));
+        let stats = sequence_logp(&dims, &cache, &tokens);
+        for ti in 0..b * (s - 1) {
+            let prow = &stats.probs[ti * dims.vocab..(ti + 1) * dims.vocab];
+            let total: f32 = prow.iter().sum();
+            assert!((total - 1.0).abs() < 1e-4, "sum p = {total}");
+            assert!(stats.logp[ti] <= 1e-5);
+            assert!(stats.entropy[ti] > 0.0);
+        }
+    }
+
+    /// The load-bearing test: analytic parameter gradients of a masked
+    /// log-prob objective vs central finite differences.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let dims = tiny_dims();
+        let params = init_params(&dims, 3);
+        let (b, s) = (2, 4);
+        let t = s - 1;
+        let tokens: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 0];
+        let mask: Vec<f32> = vec![1.0, 1.0, 0.0, 0.0, 1.0, 1.0];
+        assert_eq!(mask.len(), b * t);
+
+        let loss = |ps: &[HostTensor]| -> f32 {
+            let p = views(ps);
+            let cache = forward(&dims, &p, &tokens, b, s);
+            let stats = sequence_logp(&dims, &cache, &tokens);
+            stats.logp.iter().zip(&mask).map(|(lp, mk)| lp * mk).sum()
+        };
+
+        // Analytic gradients of sum(mask * logp).
+        let p = views(&params);
+        let cache = forward(&dims, &p, &tokens, b, s);
+        let stats = sequence_logp(&dims, &cache, &tokens);
+        let dlogits = dlogits_from_dlogp(&dims, &cache, &stats, &tokens, &mask);
+        let grads = backward(&dims, &p, &cache, &tokens, &dlogits);
+
+        let eps = 1e-2f32;
+        let specs = dims.param_specs();
+        for (pi, spec) in specs.iter().enumerate() {
+            let n = spec.elements();
+            // Sample a few entries per tensor.
+            for &j in [0usize, n / 2, n - 1].iter() {
+                let mut plus = params.clone();
+                let mut minus = params.clone();
+                if let HostTensor::F32 { data, .. } = &mut plus[pi] {
+                    data[j] += eps;
+                }
+                if let HostTensor::F32 { data, .. } = &mut minus[pi] {
+                    data[j] -= eps;
+                }
+                let num = (loss(&plus) - loss(&minus)) / (2.0 * eps);
+                let ana = grads[pi][j];
+                assert!(
+                    (num - ana).abs() <= 5e-3 + 0.05 * num.abs().max(ana.abs()),
+                    "param {} [{j}]: numeric {num} vs analytic {ana}",
+                    spec.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adam_moves_params_against_gradient_and_clips() {
+        let hp = AdamHp { b1: 0.9, b2: 0.95, eps: 1e-8, grad_clip: 1.0 };
+        let mut params = vec![vec![0.0f32; 2]];
+        let mut m = vec![vec![0.0f32; 2]];
+        let mut v = vec![vec![0.0f32; 2]];
+        let grads = vec![vec![3.0f32, 4.0]]; // norm 5 -> clipped to 1
+        let gnorm = adam_update(&hp, 0.1, &mut params, &mut m, &mut v, &grads, 0);
+        assert!((gnorm - 5.0).abs() < 1e-5);
+        assert!(params[0][0] < 0.0 && params[0][1] < 0.0, "{params:?}");
+        // Bias-corrected first step ~= -lr * sign(g).
+        assert!((params[0][0] + 0.1).abs() < 1e-3, "{}", params[0][0]);
+    }
+}

@@ -1,36 +1,32 @@
 //! Versioned model parameters.
 //!
 //! The trainer owns the full optimiser state (params + Adam moments) as
-//! literals; after each training step it *publishes* the new parameters to
-//! the `WeightStore`, bumping the version counter `v(pi)`. Rollout workers
-//! grab the latest published snapshot at episode start — the difference
-//! between the trainer's version and the snapshot's version is exactly the
-//! staleness `d` of paper Eq. 4.
+//! host tensors; after each training step it *publishes* the new parameters
+//! to the `WeightStore`, bumping the version counter `v(pi)`. Rollout
+//! workers grab the latest published snapshot at episode start — the
+//! difference between the trainer's version and the snapshot's version is
+//! exactly the staleness `d` of paper Eq. 4.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use xla::Literal;
-
-use super::tensor::SharedLiteral;
+use super::tensor::HostTensor;
 
 /// An immutable snapshot of model parameters at some version.
 pub struct ParamSnapshot {
     pub version: u64,
-    /// Parameter literals in manifest order.
-    pub params: Vec<SharedLiteral>,
+    /// Parameter tensors in manifest order.
+    pub params: Vec<HostTensor>,
 }
 
 impl ParamSnapshot {
-    pub fn new(version: u64, params: Vec<Literal>) -> Arc<ParamSnapshot> {
-        Arc::new(ParamSnapshot {
-            version,
-            params: params.into_iter().map(SharedLiteral).collect(),
-        })
+    pub fn new(version: u64, params: Vec<HostTensor>) -> Arc<ParamSnapshot> {
+        Arc::new(ParamSnapshot { version, params })
     }
 
-    pub fn literal_refs(&self) -> Vec<&Literal> {
-        self.params.iter().map(|p| p.lit()).collect()
+    /// Borrowed views in manifest order (executable input prefix).
+    pub fn tensor_refs(&self) -> Vec<&HostTensor> {
+        self.params.iter().collect()
     }
 }
 
@@ -86,7 +82,7 @@ mod tests {
     use super::*;
 
     fn snap(version: u64) -> Arc<ParamSnapshot> {
-        ParamSnapshot::new(version, vec![Literal::scalar(version as f32)])
+        ParamSnapshot::new(version, vec![HostTensor::scalar_f32(version as f32)])
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! PJRT backend (cargo feature `pjrt`): executes the AOT-compiled HLO
+//! artifacts produced by `python/compile/aot.py` through the PJRT C API.
+//!
+//! Requires the external `xla` crate (not part of the hermetic build
+//! universe) — add it to `[dependencies]` before enabling the feature.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (jax >= 0.5 protos are rejected by xla_extension 0.5.1; the text
+//! parser reassigns instruction ids).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::backend::{Backend, ExecutableImpl};
+use super::manifest::{Dtype, ExecSpec, Manifest, TensorSpec};
+use super::tensor::HostTensor;
+
+/// Process-wide PJRT client.
+///
+/// SAFETY of `Send + Sync`: the underlying `TfrtCpuClient` (and PJRT client
+/// API generally) is thread-safe — compilation and execution may be invoked
+/// concurrently from multiple threads. The Rust wrapper types only lack the
+/// auto-traits because they hold raw pointers.
+pub struct Client {
+    inner: PjRtClient,
+}
+
+unsafe impl Send for Client {}
+unsafe impl Sync for Client {}
+
+impl Client {
+    pub fn cpu() -> Result<Arc<Client>> {
+        let inner = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(Client { inner }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    /// Load + compile an HLO-text file into a PJRT executable.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+fn to_literal(t: &HostTensor) -> Result<Literal> {
+    fn le_bytes<T: Copy, const N: usize>(data: &[T], conv: impl Fn(T) -> [u8; N]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(data.len() * N);
+        for &x in data {
+            out.extend_from_slice(&conv(x));
+        }
+        out
+    }
+    let (ty, bytes): (ElementType, Vec<u8>) = match t {
+        HostTensor::F32 { data, .. } => (ElementType::F32, le_bytes(data, f32::to_le_bytes)),
+        HostTensor::I32 { data, .. } => (ElementType::S32, le_bytes(data, i32::to_le_bytes)),
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ty, t.shape(), &bytes)?)
+}
+
+fn from_literal(lit: &Literal, spec: &TensorSpec) -> Result<HostTensor> {
+    match spec.dtype {
+        Dtype::F32 => Ok(HostTensor::f32(spec.shape.clone(), lit.to_vec::<f32>()?)),
+        Dtype::I32 => Ok(HostTensor::i32(spec.shape.clone(), lit.to_vec::<i32>()?)),
+    }
+}
+
+/// SAFETY: PJRT loaded executables are thread-safe for concurrent Execute
+/// calls (the PJRT contract); the wrapper only lacks auto-traits because of
+/// raw pointers. Rollout workers share one decode executable.
+struct SendExec(PjRtLoadedExecutable);
+unsafe impl Send for SendExec {}
+unsafe impl Sync for SendExec {}
+
+/// One compiled HLO module bound to its signature.
+///
+/// Known trade-off vs the pre-backend-abstraction design: inputs (including
+/// the parameter snapshot) are packed into fresh `Literal`s on every call
+/// instead of kept resident across steps. If this backend's per-step packing
+/// ever shows up in profiles, cache packed literals keyed on the
+/// `ParamSnapshot` identity.
+pub struct PjrtExecutable {
+    exe: SendExec,
+    spec: ExecSpec,
+}
+
+impl ExecutableImpl for PjrtExecutable {
+    fn execute(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits = inputs.iter().map(|t| to_literal(t)).collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let result = self
+            .exe
+            .0
+            .execute::<&Literal>(&refs)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.spec.name))?;
+        let outs = tuple.to_tuple()?;
+        outs.iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, spec)| from_literal(l, spec))
+            .collect()
+    }
+}
+
+/// Backend over an `artifacts/<preset>` directory.
+pub struct PjrtBackend {
+    dir: PathBuf,
+    client: Arc<Client>,
+}
+
+impl PjrtBackend {
+    pub fn new(dir: &Path) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { dir: dir.to_path_buf(), client: Client::cpu()? })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.dir)
+    }
+
+    fn load_executable(&self, spec: &ExecSpec) -> Result<Box<dyn ExecutableImpl>> {
+        let t0 = std::time::Instant::now();
+        let exe = self
+            .client
+            .compile_hlo_file(&spec.file)
+            .with_context(|| format!("loading executable {:?}", spec.name))?;
+        if std::env::var_os("A3PO_QUIET").is_none() {
+            eprintln!(
+                "[runtime] compiled {:<18} ({:>7.2} MB HLO) in {:.2}s",
+                spec.name,
+                spec.hlo_bytes as f64 / 1e6,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        Ok(Box::new(PjrtExecutable { exe: SendExec(exe), spec: spec.clone() }))
+    }
+}
+
+impl std::fmt::Debug for Client {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Client({})", self.platform())
+    }
+}

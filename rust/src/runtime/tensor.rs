@@ -1,15 +1,15 @@
-//! Host-side tensors and conversion to/from `xla::Literal`.
+//! Host-side tensors — the currency of the backend-agnostic runtime.
 //!
 //! The coordinator assembles batches as plain `Vec<f32>`/`Vec<i32>` host
-//! tensors; this module packs them into literals following the manifest's
-//! positional signatures and unpacks executable outputs back.
+//! tensors; backends consume and produce them directly. The native backend
+//! operates on the underlying slices in place; the PJRT backend (feature
+//! `pjrt`) packs them into `xla::Literal`s at the call boundary.
 
 use anyhow::{bail, Result};
-use xla::{ElementType, Literal};
 
 use super::manifest::{Dtype, TensorSpec};
 
-/// A host tensor: shape + typed data.
+/// A host tensor: shape + typed data. Plain owned memory, `Send + Sync`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostTensor {
     F32 { shape: Vec<usize>, data: Vec<f32> },
@@ -86,6 +86,15 @@ impl HostTensor {
         }
     }
 
+    /// Scalar i32 accessor (seed / step counters in executable signatures).
+    pub fn scalar_i32_value(&self) -> Result<i32> {
+        let data = self.as_i32()?;
+        if data.len() != 1 {
+            bail!("expected scalar, got {} elements", data.len());
+        }
+        Ok(data[0])
+    }
+
     /// Validate against a manifest signature entry.
     pub fn check(&self, spec: &TensorSpec) -> Result<()> {
         if self.shape() != spec.shape.as_slice() {
@@ -101,60 +110,6 @@ impl HostTensor {
         }
         Ok(())
     }
-
-    pub fn to_literal(&self) -> Result<Literal> {
-        let (ty, bytes): (ElementType, &[u8]) = match self {
-            HostTensor::F32 { data, .. } => (ElementType::F32, bytemuck_f32(data)),
-            HostTensor::I32 { data, .. } => (ElementType::S32, bytemuck_i32(data)),
-        };
-        Ok(Literal::create_from_shape_and_untyped_data(ty, self.shape(), bytes)?)
-    }
-
-    pub fn from_literal(lit: &Literal, spec: &TensorSpec) -> Result<HostTensor> {
-        match spec.dtype {
-            Dtype::F32 => Ok(HostTensor::F32 {
-                shape: spec.shape.clone(),
-                data: lit.to_vec::<f32>()?,
-            }),
-            Dtype::I32 => Ok(HostTensor::I32 {
-                shape: spec.shape.clone(),
-                data: lit.to_vec::<i32>()?,
-            }),
-        }
-    }
-}
-
-fn bytemuck_f32(v: &[f32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
-}
-
-fn bytemuck_i32(v: &[i32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
-}
-
-/// `xla::Literal` wrapped for cross-thread sharing.
-///
-/// SAFETY: a literal is plain host memory owned by the XLA runtime; all uses
-/// in this crate after construction are read-only (executables *borrow*
-/// literals as inputs and never mutate them), and the underlying
-/// xla::Literal operations used (`to_vec`, `shape`, execute-as-argument) are
-/// const on the C++ side. Mutation APIs (`copy_from`, `decompose_tuple`) are
-/// never called through a `SharedLiteral`.
-pub struct SharedLiteral(pub Literal);
-
-unsafe impl Send for SharedLiteral {}
-unsafe impl Sync for SharedLiteral {}
-
-impl SharedLiteral {
-    pub fn lit(&self) -> &Literal {
-        &self.0
-    }
-}
-
-impl std::fmt::Debug for SharedLiteral {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "SharedLiteral")
-    }
 }
 
 #[cfg(test)]
@@ -166,19 +121,20 @@ mod tests {
     }
 
     #[test]
-    fn f32_roundtrip() {
+    fn accessors_match_dtype() {
         let t = HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let lit = t.to_literal().unwrap();
-        let back = HostTensor::from_literal(&lit, &spec("x", &[2, 3], Dtype::F32)).unwrap();
-        assert_eq!(t, back);
+        assert_eq!(t.as_f32().unwrap().len(), 6);
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), Dtype::F32);
     }
 
     #[test]
-    fn i32_roundtrip_scalar() {
+    fn scalar_value_roundtrip() {
         let t = HostTensor::scalar_i32(-7);
-        let lit = t.to_literal().unwrap();
-        let back = HostTensor::from_literal(&lit, &spec("s", &[], Dtype::I32)).unwrap();
-        assert_eq!(back.as_i32().unwrap(), &[-7]);
+        assert_eq!(t.scalar_i32_value().unwrap(), -7);
+        assert!(HostTensor::i32(vec![2], vec![0, 1]).scalar_i32_value().is_err());
+        assert!(HostTensor::scalar_f32(1.0).scalar_i32_value().is_err());
     }
 
     #[test]

@@ -1,13 +1,21 @@
 //! Small statistics helpers used by metrics, benches, and the evaluators.
 
 /// Online mean/variance (Welford) plus min/max tracking.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Running {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// `Default` must match `new()`: a derived default would start min/max at
+/// 0.0 and report a spurious 0.0 extremum from any `Running::default()`.
+impl Default for Running {
+    fn default() -> Self {
+        Running::new()
+    }
 }
 
 impl Running {
@@ -132,6 +140,21 @@ mod tests {
         assert!((r.var() - 32.0 / 7.0).abs() < 1e-12);
         assert_eq!(r.min(), 2.0);
         assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn default_matches_new_and_tracks_true_extrema() {
+        // Regression: a derived Default yielded min = max = 0.0, so the
+        // first pushed value could never raise min above 0 (or lower max).
+        let mut r = Running::default();
+        assert_eq!(r.min(), f64::INFINITY);
+        assert_eq!(r.max(), f64::NEG_INFINITY);
+        r.push(3.5);
+        assert_eq!(r.min(), 3.5);
+        assert_eq!(r.max(), 3.5);
+        r.push(7.0);
+        assert_eq!(r.min(), 3.5);
+        assert_eq!(r.max(), 7.0);
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Hermetic drop-in subset of the `anyhow` error-handling API.
+//!
+//! The build universe for this repository is fully offline (see the root
+//! README): every dependency must live in-tree. This vendored crate
+//! implements exactly the surface the workspace uses — `Error`, `Result`,
+//! the `anyhow!`/`bail!` macros, and the `Context` extension trait for
+//! `Result` and `Option` — with the same semantics as the real crate for
+//! those operations (context chains print outermost-first, `?` converts any
+//! `std::error::Error`, `Error` itself deliberately does *not* implement
+//! `std::error::Error` so the blanket `From` impl stays coherent).
+
+use std::fmt;
+
+/// An error chain: `chain[0]` is the outermost message/context, the last
+/// element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (`anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The error chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or("unknown error"))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self)?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any standard error. `Error` itself does not implement
+// `std::error::Error`, so this blanket impl cannot overlap the reflexive
+// `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values (`Result` and `Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn context_chains_print_outermost_first() {
+        let e: Result<()> = Err(io_err()).context("reading config");
+        let e = e.unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(e.root_cause(), "missing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_on_result_and_option() {
+        let r: Result<i32> = Err(io_err()).with_context(|| format!("step {}", 3));
+        assert_eq!(r.unwrap_err().to_string(), "step 3");
+        let o: Result<i32> = None.context("empty");
+        assert_eq!(o.unwrap_err().to_string(), "empty");
+        let some: Result<i32> = Some(5).context("unused");
+        assert_eq!(some.unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "decode";
+        let e = anyhow!("executable {name} missing");
+        assert_eq!(e.to_string(), "executable decode missing");
+        let e2 = anyhow!("{} of {}", 2, 3);
+        assert_eq!(e2.to_string(), "2 of 3");
+        fn fail() -> Result<()> {
+            bail!("boom {}", 7);
+        }
+        assert_eq!(fail().unwrap_err().to_string(), "boom 7");
+        let owned = anyhow!(String::from("owned"));
+        assert_eq!(owned.to_string(), "owned");
+    }
+
+    #[test]
+    fn context_on_anyhow_error_itself() {
+        let base: Result<()> = Err(anyhow!("inner"));
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "inner"]);
+    }
+}
