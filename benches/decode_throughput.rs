@@ -1,0 +1,159 @@
+//! Decode throughput: KV-cache session decode vs the seed full-forward
+//! path, with threaded vs single-thread kernels — the generation-side
+//! speedup that makes the paper's prox-phase saving visible at all.
+//!
+//! Drives a full prompt-prefill + generation window per pass with a fixed
+//! non-EOS token stream (worst case: no row finishes early), then emits a
+//! machine-readable `BENCH_decode.json` so the perf trajectory is tracked
+//! from this PR onward. Acceptance: session decode >= 3x tokens/sec over
+//! the full-forward path on setup1 geometry.
+//!
+//!   cargo bench --bench decode_throughput -- --preset setup1
+//!   cargo bench --bench decode_throughput -- --preset tiny --out BENCH_decode.json
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use a3po::bench::write_bench_json;
+use a3po::runtime::native::kernels;
+use a3po::runtime::{Decoder, ParamSnapshot, PresetConfig, Runtime};
+use a3po::util::cli::Args;
+use a3po::util::json::Json;
+use a3po::util::timer::Stopwatch;
+
+/// Deterministic non-EOS token (ids 0..2 are PAD/BOS/EOS specials).
+fn safe_token(geo: &PresetConfig, row: usize, pos: usize) -> i32 {
+    (3 + (row * 7 + pos * 11) % (geo.vocab - 3)) as i32
+}
+
+/// One measured generation pass set; returns (tokens generated, seconds).
+fn drive(
+    decoder: &Decoder,
+    snapshot: &Arc<ParamSnapshot>,
+    geo: &PresetConfig,
+    full_forward: bool,
+    reps: usize,
+) -> anyhow::Result<(u64, f64)> {
+    let (br, s, pl) = (geo.rollout_batch, geo.seq_len, geo.prompt_len);
+    let mut prompts = vec![0i32; br * pl];
+    for r in 0..br {
+        for i in 0..pl {
+            prompts[r * pl + i] = safe_token(geo, r, i);
+        }
+    }
+    let mut generated = 0u64;
+    let mut sink = 0.0f32;
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        let mut session = if full_forward {
+            decoder.start_full_forward(snapshot, &prompts, br, pl)?
+        } else {
+            decoder.start(snapshot, &prompts, br, pl)?
+        };
+        for pos in pl..s {
+            sink += session.logits()[0];
+            generated += br as u64;
+            if pos + 1 == s {
+                break;
+            }
+            let toks: Vec<i32> = (0..br).map(|r| safe_token(geo, r, pos)).collect();
+            session.step(&toks)?;
+        }
+    }
+    let secs = sw.secs();
+    std::hint::black_box(sink);
+    Ok((generated, secs))
+}
+
+fn main() -> anyhow::Result<()> {
+    let parsed = Args::new(
+        "decode_throughput",
+        "tokens/sec: session (KV-cache) decode vs full-forward, threaded vs serial kernels",
+    )
+    .opt("preset", "setup1", "native preset geometry")
+    .opt("reps", "0", "generation passes per measurement (0 = auto per preset)")
+    .opt("out", "BENCH_decode.json", "machine-readable output path")
+    .flag("bench", "(ignored; passed by cargo bench)")
+    .parse();
+
+    std::env::set_var("A3PO_QUIET", "1");
+    let preset = parsed.string("preset");
+    let rt = Runtime::native(&preset, Some(&["init", "decode"]))?;
+    let geo = rt.manifest.preset.clone();
+    let snapshot = rt.init_params(0)?;
+    let decoder = rt.decoder()?;
+    let reps = match parsed.usize("reps") {
+        0 if preset == "tiny" => 20,
+        0 => 3,
+        r => r,
+    };
+    let threads = kernels::pool().workers();
+
+    println!("\n== Decode throughput: {} ==", preset);
+    println!(
+        "rows={} prompt={} gen={} params={} kernel threads={} reps={}\n",
+        geo.rollout_batch,
+        geo.prompt_len,
+        geo.seq_len - geo.prompt_len,
+        geo.param_count,
+        threads,
+        reps
+    );
+
+    // (label, full_forward path?, force single-thread kernels?)
+    let plan: [(&str, bool, bool); 4] = [
+        ("full_forward_serial", true, true), // the seed decode path
+        ("full_forward", true, false),
+        ("session_serial", false, true),
+        ("session", false, false),
+    ];
+    let mut measured: Vec<(&str, u64, f64, f64)> = Vec::new();
+    for (label, full_forward, serial) in plan {
+        kernels::set_force_serial(serial);
+        let res = drive(&decoder, &snapshot, &geo, full_forward, reps);
+        kernels::set_force_serial(false);
+        let (tokens, secs) = res?;
+        let tps = tokens as f64 / secs.max(1e-12);
+        println!("{label:<24} {tokens:>8} tokens in {secs:>8.3}s = {tps:>10.1} tok/s");
+        measured.push((label, tokens, secs, tps));
+    }
+
+    let tps = |name: &str| -> f64 {
+        measured.iter().find(|(l, ..)| *l == name).map(|&(.., t)| t).unwrap_or(f64::NAN)
+    };
+    let speedup_vs_seed = tps("session") / tps("full_forward_serial");
+    let speedup_vs_full = tps("session") / tps("full_forward");
+    let speedup_threads = tps("session") / tps("session_serial");
+    println!("\nsession vs seed (serial full-forward) : {speedup_vs_seed:>6.2}x  (target >= 3x)");
+    println!("session vs threaded full-forward      : {speedup_vs_full:>6.2}x");
+    println!("threaded vs serial session kernels    : {speedup_threads:>6.2}x");
+
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("preset", Json::Str(preset.clone())),
+        ("rows", Json::Num(geo.rollout_batch as f64)),
+        ("prompt_len", Json::Num(geo.prompt_len as f64)),
+        ("gen_len", Json::Num((geo.seq_len - geo.prompt_len) as f64)),
+        ("param_count", Json::Num(geo.param_count as f64)),
+        ("kernel_threads", Json::Num(threads as f64)),
+        ("reps", Json::Num(reps as f64)),
+        ("speedup_session_vs_seed", Json::Num(speedup_vs_seed)),
+        ("speedup_session_vs_threaded_full_forward", Json::Num(speedup_vs_full)),
+        ("speedup_threaded_vs_serial_session", Json::Num(speedup_threads)),
+    ];
+    let detail: Vec<(&str, Json)> = measured
+        .iter()
+        .map(|&(label, tokens, secs, tps)| {
+            (
+                label,
+                Json::obj(vec![
+                    ("tokens", Json::Num(tokens as f64)),
+                    ("secs", Json::Num(secs)),
+                    ("tokens_per_sec", Json::Num(tps)),
+                ]),
+            )
+        })
+        .collect();
+    pairs.push(("paths", Json::obj(detail)));
+    write_bench_json(&PathBuf::from(parsed.str("out")), &Json::obj(pairs))?;
+    Ok(())
+}

@@ -12,6 +12,7 @@
 
 use a3po::bench::{bench, BenchConfig};
 use a3po::coordinator::trainer::interp_prox_host;
+use a3po::runtime::native::kernels;
 use a3po::runtime::{HostTensor, Runtime};
 use a3po::util::rng::Pcg64;
 
@@ -40,11 +41,28 @@ fn main() -> anyhow::Result<()> {
     println!("preset={} batch={}x{} params={}\n", geo.name, b, s, geo.param_count);
 
     let iters = 20;
-    let recompute = bench("recompute: prox_forward (full fwd pass)", iters, || {
+    let recompute = bench(
+        &format!(
+            "recompute: prox_forward ({} kernel threads)",
+            kernels::pool().workers()
+        ),
+        iters,
+        || {
+            let mut refs = snapshot.tensor_refs();
+            refs.push(&tokens_t);
+            let _ = prox_exec.run_refs(&refs).unwrap();
+        },
+    );
+    // The same forward with single-thread kernels: how much of the prox
+    // overhead the shared worker pool claws back before A-3PO removes the
+    // pass entirely.
+    kernels::set_force_serial(true);
+    let recompute_serial = bench("recompute: prox_forward (serial kernels)", iters, || {
         let mut refs = snapshot.tensor_refs();
         refs.push(&tokens_t);
         let _ = prox_exec.run_refs(&refs).unwrap();
     });
+    kernels::set_force_serial(false);
 
     let mut sink = 0.0f32;
     let loglinear = bench("loglinear: Eq.3 interpolation (A-3PO)", 200, || {
@@ -55,8 +73,15 @@ fn main() -> anyhow::Result<()> {
 
     println!("\nsync: no prox computation (coupled loss)          0.0 ns by definition");
     let ratio = recompute.mean_ns / loglinear.mean_ns;
+    let thread_gain = recompute_serial.mean_ns / recompute.mean_ns;
     println!("\n{:<28} {:>14} {:>14}", "method", "mean / step", "paper");
     println!("{:<28} {:>11.3} ms {:>14}", "recompute", recompute.mean_ns / 1e6, "4000-8000 ms");
+    println!(
+        "{:<28} {:>11.3} ms {:>14}",
+        "recompute (serial kernels)",
+        recompute_serial.mean_ns / 1e6,
+        format!("{thread_gain:.2}x slower")
+    );
     println!("{:<28} {:>11.3} ms {:>14}", "loglinear (A-3PO)", loglinear.mean_ns / 1e6, "1.2 ms");
     println!("{:<28} {:>11.3} ms {:>14}", "sync", 0.0, "0 ms");
     println!(

@@ -2,8 +2,8 @@
 //!
 //! Covers every function on the coordinator's per-step path: sampling,
 //! log-softmax, Eq. 3 interpolation, GRPO advantages, batch assembly,
-//! buffer push/pop, tokenizer encode/decode, JSON serialisation, and
-//! literal packing.
+//! buffer push/pop, tokenizer encode/decode, JSON serialisation, literal
+//! packing, the shared threaded kernels, and KV-cache decode sessions.
 //!
 //!   cargo bench --bench micro_hotpath
 
@@ -14,7 +14,8 @@ use a3po::coordinator::advantage::grpo_group_advantages;
 use a3po::coordinator::batch::assemble;
 use a3po::coordinator::trainer::interp_prox_host;
 use a3po::env::{tokenizer, Problem};
-use a3po::runtime::{HostTensor, PresetConfig};
+use a3po::runtime::native::kernels;
+use a3po::runtime::{HostTensor, PresetConfig, Runtime};
 use a3po::sampler::{log_softmax, sample, SamplerConfig};
 use a3po::util::json::Json;
 use a3po::util::rng::Pcg64;
@@ -122,5 +123,42 @@ fn main() {
     let tokens: Vec<i32> = (0..g.train_batch * s).map(|_| rng.below(64) as i32).collect();
     bench("tensor::HostTensor::i32 pack (64x48)", 5_000, || {
         std::hint::black_box(HostTensor::i32(vec![g.train_batch, s], tokens.clone()));
+    });
+
+    // Shared dense kernels: threaded vs single-thread (setup1-shaped op).
+    let (m, kd, n) = (64usize, 192usize, 192usize);
+    let ma: Vec<f32> = (0..m * kd).map(|_| rng.next_f32() - 0.5).collect();
+    let mb: Vec<f32> = (0..kd * n).map(|_| rng.next_f32() - 0.5).collect();
+    bench(
+        &format!("kernels::matmul {m}x{kd}x{n} ({} threads)", kernels::pool().workers()),
+        2_000,
+        || {
+            std::hint::black_box(kernels::matmul(&ma, &mb, m, kd, n));
+        },
+    );
+    kernels::set_force_serial(true);
+    bench(&format!("kernels::matmul {m}x{kd}x{n} (serial)"), 2_000, || {
+        std::hint::black_box(kernels::matmul(&ma, &mb, m, kd, n));
+    });
+    kernels::set_force_serial(false);
+
+    // KV-cache decode session: prompt prefill + a full tiny generation
+    // window, the rollout engine's per-batch hot path.
+    let rt = Runtime::native("tiny", Some(&["init", "decode"])).unwrap();
+    let tiny = rt.manifest.preset.clone();
+    let snapshot = rt.init_params(0).unwrap();
+    let decoder = rt.decoder().unwrap();
+    let prompts: Vec<i32> =
+        (0..tiny.rollout_batch * tiny.prompt_len).map(|i| 3 + (i % 60) as i32).collect();
+    bench("decode_session: prefill + gen window (tiny)", 50, || {
+        let mut session = decoder
+            .start(&snapshot, &prompts, tiny.rollout_batch, tiny.prompt_len)
+            .unwrap();
+        for pos in tiny.prompt_len..tiny.seq_len - 1 {
+            let toks: Vec<i32> =
+                (0..session.active_rows()).map(|r| 3 + ((r + pos) % 60) as i32).collect();
+            session.step(&toks).unwrap();
+        }
+        std::hint::black_box(session.logits()[0]);
     });
 }

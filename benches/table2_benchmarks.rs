@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     std::env::set_var("A3PO_QUIET", "1");
     let rt = Runtime::load(&a3po::bench::artifact_dir(&cfg), Some(&["decode", "init"]))?;
     let geo = rt.manifest.preset.clone();
-    let decode = rt.exec("decode")?;
+    let decoder = rt.decoder()?;
 
     let all_suites = suites::table2_suites();
     println!("\n== Table 2: benchmark evaluation ({}) ==\n", cfg.preset);
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
                 geo.prompt_len.saturating_sub(1),
                 geo.gen_len.saturating_sub(1),
             );
-            let (p, se) = evaluate_pass_at_1(decode, &snapshot, &fit.problems, &geo, false)?;
+            let (p, se) = evaluate_pass_at_1(&decoder, &snapshot, &fit.problems, &geo, false)?;
             avg += 100.0 * p / all_suites.len() as f64;
             cells.push(format!("{:>6.2}% ± {:>5.2}%", 100.0 * p, 100.0 * se));
         }

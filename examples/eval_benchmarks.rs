@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
             rt.init_params(0)?
         }
     };
-    let decode = rt.exec("decode")?;
+    let decoder = rt.decoder()?;
 
     println!(
         "\n{:<16} {:>6} {:>20}   note",
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         );
         let skipped = suite.problems.len() - fit.problems.len();
         let (p, se) =
-            evaluate_pass_at_1(decode, &snapshot, &fit.problems, &geo, parsed.flag("greedy"))?;
+            evaluate_pass_at_1(&decoder, &snapshot, &fit.problems, &geo, parsed.flag("greedy"))?;
         avg += 100.0 * p / all.len() as f64;
         println!(
             "{:<16} {:>6} {:>12.2}% ± {:>4.2}%   {}",

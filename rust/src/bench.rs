@@ -57,6 +57,19 @@ pub fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> BenchStats {
     stats
 }
 
+/// Write a machine-readable bench artifact (e.g. `BENCH_decode.json`),
+/// creating parent directories as needed.
+pub fn write_bench_json(path: &Path, j: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, j.dump()).with_context(|| format!("writing {}", path.display()))?;
+    eprintln!("[bench] wrote {}", path.display());
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // Shared comparison runs (the paper's three-method protocol)
 

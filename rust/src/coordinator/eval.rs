@@ -1,11 +1,13 @@
 //! Held-out evaluation: greedy decoding on frozen prompt sets, strict
 //! exact-match scoring (Fig. 3, Table 1's "final eval reward", Table 2).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::env::Problem;
 use crate::rollout::generate_for_problems;
-use crate::runtime::{Executable, ParamSnapshot, PresetConfig};
+use crate::runtime::{Decoder, ParamSnapshot, PresetConfig};
 use crate::sampler::SamplerConfig;
 use crate::util::rng::Pcg64;
 use crate::util::stats::pass_at_1;
@@ -14,12 +16,12 @@ use crate::util::stats::pass_at_1;
 /// reward. Problem lists that don't divide the rollout batch are padded
 /// with repeats (padding rows are not scored).
 pub fn evaluate_exact(
-    decode: &Executable,
-    snapshot: &ParamSnapshot,
+    decoder: &Decoder,
+    snapshot: &Arc<ParamSnapshot>,
     problems: &[Problem],
     geo: &PresetConfig,
 ) -> Result<f64> {
-    let (correct, total) = evaluate_counts(decode, snapshot, problems, geo, true)?;
+    let (correct, total) = evaluate_counts(decoder, snapshot, problems, geo, true)?;
     Ok(if total == 0 { 0.0 } else { correct as f64 / total as f64 })
 }
 
@@ -27,19 +29,19 @@ pub fn evaluate_exact(
 /// `greedy=false` samples at the training temperature (closer to the
 /// paper's pass@1-with-sampling protocol).
 pub fn evaluate_pass_at_1(
-    decode: &Executable,
-    snapshot: &ParamSnapshot,
+    decoder: &Decoder,
+    snapshot: &Arc<ParamSnapshot>,
     problems: &[Problem],
     geo: &PresetConfig,
     greedy: bool,
 ) -> Result<(f64, f64)> {
-    let (correct, total) = evaluate_counts(decode, snapshot, problems, geo, greedy)?;
+    let (correct, total) = evaluate_counts(decoder, snapshot, problems, geo, greedy)?;
     Ok(pass_at_1(correct, total))
 }
 
 fn evaluate_counts(
-    decode: &Executable,
-    snapshot: &ParamSnapshot,
+    decoder: &Decoder,
+    snapshot: &Arc<ParamSnapshot>,
     problems: &[Problem],
     geo: &PresetConfig,
     greedy: bool,
@@ -62,7 +64,7 @@ fn evaluate_counts(
         while padded.len() < br {
             padded.push(chunk[0].clone());
         }
-        let eps = generate_for_problems(decode, snapshot, &padded, geo, &cfg, &mut rng)?;
+        let eps = generate_for_problems(decoder, snapshot, &padded, geo, &cfg, &mut rng)?;
         correct += eps
             .iter()
             .take(chunk.len())

@@ -89,7 +89,7 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
     let geo = runtime.manifest.preset.clone();
     let env: Arc<dyn env::TaskEnv> =
         env::env_for_preset(&opts.preset, geo.prompt_len, geo.gen_len).into();
-    let decode = runtime.exec("decode")?.clone();
+    let decoder = runtime.decoder()?;
 
     let mut rng = Pcg64::from_seed(opts.seed);
     let snapshot = match &opts.init_ckpt {
@@ -135,7 +135,7 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
     let pool = if opts.method.is_async() {
         Some(RolloutPool::spawn(
             opts.workers,
-            decode.clone(),
+            decoder.clone(),
             store.clone(),
             buffer.clone(),
             env.clone(),
@@ -162,7 +162,7 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
             let mut got = Vec::with_capacity(groups_per_step);
             while got.len() < groups_per_step {
                 let gs = generate_batch(
-                    &decode,
+                    &decoder,
                     &trainer.snapshot(),
                     env.as_ref(),
                     &geo,
@@ -214,7 +214,7 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
         // -- periodic held-out eval -------------------------------------
         if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
             let sw = Stopwatch::start();
-            let r = eval::evaluate_exact(&decode, &trainer.snapshot(), &heldout, &geo)?;
+            let r = eval::evaluate_exact(&decoder, &trainer.snapshot(), &heldout, &geo)?;
             phases.add("eval", sw.secs());
             logger.log_eval(EvalRecord {
                 step,
@@ -234,7 +234,7 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
     let total_secs = run_sw.secs();
 
     // Final held-out eval (Table 1's "Final Eval Reward").
-    let final_eval = eval::evaluate_exact(&decode, &trainer.snapshot(), &heldout, &geo)?;
+    let final_eval = eval::evaluate_exact(&decoder, &trainer.snapshot(), &heldout, &geo)?;
     logger.log_eval(EvalRecord {
         step: opts.steps,
         wallclock: total_secs,

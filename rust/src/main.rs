@@ -80,7 +80,7 @@ fn cmd_eval(argv: Vec<String>) -> Result<()> {
         checkpoint::load(&PathBuf::from(parsed.str("ckpt")), &runtime.manifest)?
     };
 
-    let decode = runtime.exec("decode")?;
+    let decoder = runtime.decoder()?;
     println!("{:<16} {:>8} {:>16}", "suite", "n", "pass@1 ± stderr");
     for suite in suites::table2_suites() {
         let usable = suites::fitting(
@@ -89,7 +89,7 @@ fn cmd_eval(argv: Vec<String>) -> Result<()> {
             geo.gen_len.saturating_sub(1),
         );
         let (p, se) = evaluate_pass_at_1(
-            decode,
+            &decoder,
             &snapshot,
             &usable.problems,
             geo,

@@ -1,7 +1,14 @@
-//! The rollout engine: batched token-by-token generation through the
-//! backend's `decode` executable, playing the role of the paper's inference
-//! engine (SGLang/vLLM): it produces responses *and* their behaviour-policy
+//! The rollout engine: batched incremental generation through the runtime's
+//! [`Decoder`] sessions, playing the role of the paper's inference engine
+//! (SGLang/vLLM): it produces responses *and* their behaviour-policy
 //! log-probs, tagged with the weight version that generated them.
+//!
+//! Generation drives a [`DecodeSession`]: the prompt window is prefilled
+//! once, then each step appends exactly one token per *unfinished* row and
+//! rows that hit EOS are dropped from the active batch instead of being
+//! recomputed every position. On backends with KV-cache sessions (native)
+//! each step costs one position of work; on others the session front end
+//! falls back to the full-forward `decode` executable transparently.
 //!
 //! Async methods run `RolloutWorker`s on dedicated threads, continuously
 //! pulling the latest published weights and pushing complete GRPO groups
@@ -16,7 +23,7 @@ use anyhow::Result;
 
 use crate::buffer::{Episode, EpisodeBuffer};
 use crate::env::{tokenizer, verifier, Problem, TaskEnv};
-use crate::runtime::{Executable, HostTensor, ParamSnapshot, PresetConfig, WeightStore};
+use crate::runtime::{Decoder, ParamSnapshot, PresetConfig, WeightStore};
 use crate::sampler::{sample, SamplerConfig};
 use crate::util::rng::Pcg64;
 
@@ -33,8 +40,8 @@ impl GroupIds {
 /// Generate one rollout batch: `rollout_batch / group_size` prompts, each
 /// with `group_size` sampled responses. Returns complete groups.
 pub fn generate_batch(
-    decode: &Executable,
-    snapshot: &ParamSnapshot,
+    decoder: &Decoder,
+    snapshot: &Arc<ParamSnapshot>,
     env: &dyn TaskEnv,
     geo: &PresetConfig,
     sampler_cfg: &SamplerConfig,
@@ -44,7 +51,7 @@ pub fn generate_batch(
     let problems: Vec<Problem> =
         (0..geo.rollout_batch / geo.group_size).map(|_| env.sample(rng)).collect();
     let episodes = generate_for_problems(
-        decode,
+        decoder,
         snapshot,
         &repeat_problems(&problems, geo.group_size),
         geo,
@@ -81,8 +88,8 @@ fn repeat_problems(problems: &[Problem], g: usize) -> Vec<Problem> {
 /// Core generation loop over a fixed problem list (len == rollout_batch).
 /// Used by both training rollouts and held-out evaluation.
 pub fn generate_for_problems(
-    decode: &Executable,
-    snapshot: &ParamSnapshot,
+    decoder: &Decoder,
+    snapshot: &Arc<ParamSnapshot>,
     problems: &[Problem],
     geo: &PresetConfig,
     sampler_cfg: &SamplerConfig,
@@ -93,40 +100,53 @@ pub fn generate_for_problems(
     let (s, t, v) = (geo.seq_len, geo.seq_len - 1, geo.vocab);
     let pl = geo.prompt_len;
 
-    // Token window, row-major [br, s].
+    // Full token window [br, s] (the episode record) + the prompt block
+    // [br, pl] that seeds the decode session.
     let mut tokens = vec![tokenizer::PAD; br * s];
+    let mut prompts = vec![tokenizer::PAD; br * pl];
     for (row, p) in problems.iter().enumerate() {
         let prompt = tokenizer::encode_prompt_padded(&p.prompt, pl);
         tokens[row * s..row * s + pl].copy_from_slice(&prompt);
+        prompts[row * pl..(row + 1) * pl].copy_from_slice(&prompt);
     }
     let mut behav_logp = vec![0.0f32; br * t];
     let mut mask = vec![0.0f32; br * t];
-    let mut finished = vec![false; br];
 
+    let mut session = decoder.start(snapshot, &prompts, br, pl)?;
+    // Active rows by original index; rows leave the batch when they emit
+    // EOS, so late positions run on ever-smaller batches.
+    let mut active: Vec<usize> = (0..br).collect();
     for pos in pl..s {
-        if finished.iter().all(|&f| f) {
+        debug_assert_eq!(session.active_rows(), active.len());
+        let mut new_tokens = Vec::with_capacity(active.len());
+        let mut keep = Vec::with_capacity(active.len());
+        {
+            let logits = session.logits();
+            for (ai, &row) in active.iter().enumerate() {
+                let (tok, logp) = sample(&logits[ai * v..(ai + 1) * v], sampler_cfg, rng);
+                tokens[row * s + pos] = tok;
+                behav_logp[row * t + pos - 1] = logp;
+                mask[row * t + pos - 1] = 1.0;
+                let finished = tok == tokenizer::EOS;
+                keep.push(!finished);
+                if !finished {
+                    new_tokens.push(tok);
+                }
+            }
+        }
+        if new_tokens.is_empty() || pos + 1 == s {
             break;
         }
-        let tokens_t = HostTensor::i32(vec![br, s], tokens.clone());
-        let pos_t = HostTensor::scalar_i32(pos as i32);
-        let mut refs = snapshot.tensor_refs();
-        refs.push(&tokens_t);
-        refs.push(&pos_t);
-        let outs = decode.run_refs(&refs)?;
-        let logits = outs[0].as_f32()?; // [br, v]
-
-        for row in 0..br {
-            if finished[row] {
-                continue;
-            }
-            let (tok, logp) = sample(&logits[row * v..(row + 1) * v], sampler_cfg, rng);
-            tokens[row * s + pos] = tok;
-            behav_logp[row * t + pos - 1] = logp;
-            mask[row * t + pos - 1] = 1.0;
-            if tok == tokenizer::EOS {
-                finished[row] = true;
-            }
+        if new_tokens.len() != active.len() {
+            session.retain_rows(&keep)?;
+            active = active
+                .iter()
+                .zip(&keep)
+                .filter(|(_, &k)| k)
+                .map(|(&row, _)| row)
+                .collect();
         }
+        session.step(&new_tokens)?;
     }
 
     let version = snapshot.version;
@@ -160,7 +180,7 @@ impl RolloutPool {
     #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         n: usize,
-        decode: Arc<Executable>,
+        decoder: Decoder,
         store: Arc<WeightStore>,
         buffer: Arc<EpisodeBuffer>,
         env: Arc<dyn TaskEnv>,
@@ -171,7 +191,7 @@ impl RolloutPool {
     ) -> RolloutPool {
         let handles = (0..n)
             .map(|wid| {
-                let decode = decode.clone();
+                let decoder = decoder.clone();
                 let store = store.clone();
                 let buffer = buffer.clone();
                 let env = env.clone();
@@ -185,7 +205,7 @@ impl RolloutPool {
                         while !buffer.is_shutdown() {
                             let snapshot = store.latest();
                             let groups = generate_batch(
-                                &decode,
+                                &decoder,
                                 &snapshot,
                                 env.as_ref(),
                                 &geo,

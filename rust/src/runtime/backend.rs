@@ -12,10 +12,20 @@
 //! Both sides of the boundary speak [`HostTensor`]: a backend's executable
 //! receives positional inputs matching its [`ExecSpec`] signature and
 //! returns positional outputs the same way.
+//!
+//! Backends may additionally expose **incremental decode sessions** via
+//! [`Backend::decode_session_factory`]: per-layer KV caches that make each
+//! generated token cost one position of work instead of a full-window
+//! forward pass. Backends without that support (PJRT today) return `None`
+//! and rollout falls back to the full-forward `decode` executable through
+//! [`super::decode::Decoder`] — rollout code never branches on the backend.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::manifest::{ExecSpec, Manifest};
+use super::params::ParamSnapshot;
 use super::tensor::HostTensor;
 
 /// One loaded/compiled executable. Implementations must be callable from
@@ -25,6 +35,46 @@ pub trait ExecutableImpl: Send + Sync {
     /// Input arity/shape validation happens in the [`super::Executable`]
     /// wrapper — implementations may assume the signature was honoured.
     fn execute(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// One live incremental-decode session over a fixed weight snapshot.
+///
+/// Lifecycle: a [`DecodeSessionFactory`] prefills the prompt window and
+/// returns the session with [`DecodeSession::logits`] already predicting
+/// position `prompt_len`. The caller then loops: sample one token per
+/// active row from `logits()`, drop rows that finished via
+/// [`DecodeSession::retain_rows`], and advance the survivors with
+/// [`DecodeSession::step`]. Rows advance in lockstep (same position).
+pub trait DecodeSession: Send {
+    /// Number of rows still being generated.
+    fn active_rows(&self) -> usize;
+
+    /// Next-token logits `[active_rows, vocab]` for the position after the
+    /// last appended token. Valid after `start`/`step`; `retain_rows`
+    /// compacts this buffer to the surviving rows.
+    fn logits(&self) -> &[f32];
+
+    /// Append one sampled token per active row (in current row order) and
+    /// recompute `logits()` for the following position.
+    fn step(&mut self, new_tokens: &[i32]) -> Result<()>;
+
+    /// Drop finished rows: `keep[i]` corresponds to active row `i`.
+    /// Surviving rows keep their relative order.
+    fn retain_rows(&mut self, keep: &[bool]) -> Result<()>;
+}
+
+/// Creates [`DecodeSession`]s for one preset (stored by the `Runtime`,
+/// shared across rollout workers).
+pub trait DecodeSessionFactory: Send + Sync {
+    /// Prefill `prompts` (`[rows, prompt_len]`, row-major) under `snapshot`
+    /// and return a session whose `logits()` predicts position `prompt_len`.
+    fn start(
+        &self,
+        snapshot: &Arc<ParamSnapshot>,
+        prompts: &[i32],
+        rows: usize,
+        prompt_len: usize,
+    ) -> Result<Box<dyn DecodeSession>>;
 }
 
 /// A source of executables for one preset.
@@ -38,4 +88,11 @@ pub trait Backend: Send + Sync {
 
     /// Instantiate (compile/load) one executable by its manifest spec.
     fn load_executable(&self, spec: &ExecSpec) -> Result<Box<dyn ExecutableImpl>>;
+
+    /// Incremental-decode support. `None` (the default) means the backend
+    /// only has the full-forward `decode` executable; [`super::Decoder`]
+    /// then falls back transparently.
+    fn decode_session_factory(&self) -> Option<Arc<dyn DecodeSessionFactory>> {
+        None
+    }
 }

@@ -1,0 +1,243 @@
+//! The rollout-facing decode front end.
+//!
+//! [`Decoder`] hides the gap between backends with incremental decode
+//! support (the native backend's KV-cache sessions, `native::kv`) and
+//! backends that only expose the full-forward `decode` executable (PJRT):
+//! both paths present the same [`DecodeSession`] interface, so the rollout
+//! engine is written once against sessions and stays backend-agnostic.
+//!
+//! The fallback [`FullForwardSession`] reproduces the seed behaviour
+//! exactly: it keeps the full `[rollout_batch, seq_len]` token window and
+//! re-runs the `decode` executable once per generated position. It is also
+//! the reference implementation the decode-parity tests and the
+//! `decode_throughput` bench compare the KV path against.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::backend::{DecodeSession, DecodeSessionFactory};
+use super::executable::Executable;
+use super::manifest::PresetConfig;
+use super::params::ParamSnapshot;
+use super::tensor::HostTensor;
+
+/// Session front end for one preset's decode path. Cheap to clone (shared
+/// executable + factory); every rollout worker carries its own copy.
+#[derive(Clone)]
+pub struct Decoder {
+    exec: Arc<Executable>,
+    factory: Option<Arc<dyn DecodeSessionFactory>>,
+    geo: PresetConfig,
+}
+
+impl Decoder {
+    pub fn new(
+        exec: Arc<Executable>,
+        factory: Option<Arc<dyn DecodeSessionFactory>>,
+        geo: PresetConfig,
+    ) -> Decoder {
+        Decoder { exec, factory, geo }
+    }
+
+    /// Does this decoder run incremental KV-cache sessions (vs full-forward
+    /// fallback)?
+    pub fn incremental(&self) -> bool {
+        self.factory.is_some()
+    }
+
+    /// The underlying full-forward `decode` executable.
+    pub fn exec(&self) -> &Arc<Executable> {
+        &self.exec
+    }
+
+    /// A copy of this decoder with incremental sessions disabled — every
+    /// `start` takes the full-forward path (parity tests, benches).
+    pub fn without_sessions(&self) -> Decoder {
+        Decoder { exec: self.exec.clone(), factory: None, geo: self.geo.clone() }
+    }
+
+    /// Start a decode session: incremental when the backend supports it,
+    /// full-forward fallback otherwise.
+    pub fn start(
+        &self,
+        snapshot: &Arc<ParamSnapshot>,
+        prompts: &[i32],
+        rows: usize,
+        prompt_len: usize,
+    ) -> Result<Box<dyn DecodeSession>> {
+        match &self.factory {
+            Some(f) => f.start(snapshot, prompts, rows, prompt_len),
+            None => self.start_full_forward(snapshot, prompts, rows, prompt_len),
+        }
+    }
+
+    /// Start a full-forward fallback session regardless of backend support
+    /// (the parity/bench reference path).
+    pub fn start_full_forward(
+        &self,
+        snapshot: &Arc<ParamSnapshot>,
+        prompts: &[i32],
+        rows: usize,
+        prompt_len: usize,
+    ) -> Result<Box<dyn DecodeSession>> {
+        Ok(Box::new(FullForwardSession::start(
+            self.exec.clone(),
+            &self.geo,
+            snapshot.clone(),
+            prompts,
+            rows,
+            prompt_len,
+        )?))
+    }
+}
+
+impl std::fmt::Debug for Decoder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Decoder({}, {})",
+            self.geo.name,
+            if self.incremental() { "kv-sessions" } else { "full-forward" }
+        )
+    }
+}
+
+/// Fallback session over the full-forward `decode` executable (the seed
+/// path): fixed `[rollout_batch, seq_len]` window, one full forward per
+/// generated position, inactive rows padded and ignored.
+struct FullForwardSession {
+    exec: Arc<Executable>,
+    snapshot: Arc<ParamSnapshot>,
+    rollout_batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    /// Token window `[rollout_batch, seq_len]` (0-padded; padding never
+    /// influences other rows under causal attention).
+    window: Vec<i32>,
+    /// Original window row index of each active row, in order.
+    active: Vec<usize>,
+    /// Next position to be predicted/filled.
+    pos: usize,
+    /// Gathered next-token logits `[active, vocab]`.
+    logits: Vec<f32>,
+}
+
+impl FullForwardSession {
+    fn start(
+        exec: Arc<Executable>,
+        geo: &PresetConfig,
+        snapshot: Arc<ParamSnapshot>,
+        prompts: &[i32],
+        rows: usize,
+        prompt_len: usize,
+    ) -> Result<FullForwardSession> {
+        if rows != geo.rollout_batch {
+            bail!(
+                "full-forward decode is fixed to rollout_batch = {} rows, got {}",
+                geo.rollout_batch,
+                rows
+            );
+        }
+        if prompt_len == 0 || prompt_len >= geo.seq_len {
+            bail!("prompt_len {} must be in 1..seq_len {}", prompt_len, geo.seq_len);
+        }
+        if prompts.len() != rows * prompt_len {
+            bail!(
+                "prompt buffer has {} tokens, expected rows {} x prompt_len {}",
+                prompts.len(),
+                rows,
+                prompt_len
+            );
+        }
+        let s = geo.seq_len;
+        let mut window = vec![0i32; rows * s];
+        for r in 0..rows {
+            window[r * s..r * s + prompt_len]
+                .copy_from_slice(&prompts[r * prompt_len..(r + 1) * prompt_len]);
+        }
+        let mut session = FullForwardSession {
+            exec,
+            snapshot,
+            rollout_batch: geo.rollout_batch,
+            seq_len: s,
+            vocab: geo.vocab,
+            window,
+            active: (0..rows).collect(),
+            pos: prompt_len,
+            logits: Vec::new(),
+        };
+        session.forward()?;
+        Ok(session)
+    }
+
+    /// Run the decode executable at `self.pos` and gather active-row logits.
+    fn forward(&mut self) -> Result<()> {
+        let tokens_t =
+            HostTensor::i32(vec![self.rollout_batch, self.seq_len], self.window.clone());
+        let pos_t = HostTensor::scalar_i32(self.pos as i32);
+        let mut refs = self.snapshot.tensor_refs();
+        refs.push(&tokens_t);
+        refs.push(&pos_t);
+        let outs = self.exec.run_refs(&refs)?;
+        let all = outs[0].as_f32()?;
+        let v = self.vocab;
+        self.logits.clear();
+        for &row in &self.active {
+            self.logits.extend_from_slice(&all[row * v..(row + 1) * v]);
+        }
+        Ok(())
+    }
+}
+
+impl DecodeSession for FullForwardSession {
+    fn active_rows(&self) -> usize {
+        self.active.len()
+    }
+
+    fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    fn step(&mut self, new_tokens: &[i32]) -> Result<()> {
+        if new_tokens.len() != self.active.len() {
+            bail!(
+                "step got {} tokens for {} active rows",
+                new_tokens.len(),
+                self.active.len()
+            );
+        }
+        if self.active.is_empty() {
+            bail!("decode session has no active rows");
+        }
+        if self.pos + 1 >= self.seq_len {
+            bail!("decode window exhausted at position {}", self.pos);
+        }
+        for (i, &row) in self.active.iter().enumerate() {
+            self.window[row * self.seq_len + self.pos] = new_tokens[i];
+        }
+        self.pos += 1;
+        self.forward()
+    }
+
+    fn retain_rows(&mut self, keep: &[bool]) -> Result<()> {
+        if keep.len() != self.active.len() {
+            bail!("retain mask has {} entries for {} active rows", keep.len(), self.active.len());
+        }
+        let v = self.vocab;
+        let mut new_active = Vec::with_capacity(self.active.len());
+        let mut dst = 0usize;
+        for (i, &row) in self.active.iter().enumerate() {
+            if keep[i] {
+                if dst != i {
+                    self.logits.copy_within(i * v..(i + 1) * v, dst * v);
+                }
+                new_active.push(row);
+                dst += 1;
+            }
+        }
+        self.active = new_active;
+        self.logits.truncate(self.active.len() * v);
+        Ok(())
+    }
+}

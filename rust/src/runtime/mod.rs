@@ -21,6 +21,7 @@
 
 pub mod backend;
 pub mod checkpoint;
+pub mod decode;
 pub mod executable;
 pub mod manifest;
 pub mod native;
@@ -35,7 +36,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
-pub use backend::{Backend, ExecutableImpl};
+pub use backend::{Backend, DecodeSession, DecodeSessionFactory, ExecutableImpl};
+pub use decode::Decoder;
 pub use executable::Executable;
 pub use manifest::{Dtype, ExecSpec, Manifest, PresetConfig, TensorSpec};
 pub use native::NativeBackend;
@@ -48,6 +50,9 @@ pub struct Runtime {
     pub backend_name: &'static str,
     pub manifest: Manifest,
     executables: BTreeMap<String, Arc<Executable>>,
+    /// Incremental-decode support, if the backend has it (see
+    /// [`Runtime::decoder`]).
+    decode_factory: Option<Arc<dyn DecodeSessionFactory>>,
 }
 
 impl Runtime {
@@ -105,13 +110,29 @@ impl Runtime {
                 .with_context(|| format!("loading executable {name:?}"))?;
             executables.insert(name.clone(), Executable::new(spec.clone(), imp));
         }
-        Ok(Runtime { backend_name: backend.name(), manifest, executables })
+        Ok(Runtime {
+            backend_name: backend.name(),
+            manifest,
+            executables,
+            decode_factory: backend.decode_session_factory(),
+        })
     }
 
     pub fn exec(&self, name: &str) -> Result<&Arc<Executable>> {
         self.executables
             .get(name)
             .with_context(|| format!("executable {name:?} not loaded (filtered at load?)"))
+    }
+
+    /// The rollout-facing decode front end: incremental KV-cache sessions
+    /// when the backend provides them, transparent full-forward fallback
+    /// otherwise. Requires the `decode` executable to be loaded.
+    pub fn decoder(&self) -> Result<Decoder> {
+        Ok(Decoder::new(
+            self.exec("decode")?.clone(),
+            self.decode_factory.clone(),
+            self.manifest.preset.clone(),
+        ))
     }
 
     pub fn has_exec(&self, name: &str) -> bool {

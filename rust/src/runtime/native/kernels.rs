@@ -1,0 +1,859 @@
+//! Shared dense-math kernels for the native backend, with a small
+//! `std::thread` worker pool that parallelises matmul/attention over rows.
+//!
+//! Every kernel here is used by *both* halves of the system: the
+//! incremental decode sessions (`super::kv`) and the train/prox
+//! forward-backward paths (`super::model`). Parallel execution never
+//! changes results: work is split by output rows and each output element
+//! accumulates in exactly the same scalar order as the serial loop, so
+//! threaded and single-threaded runs are bit-identical (the decode-parity
+//! tests rely on this).
+//!
+//! Pool sizing: `A3PO_THREADS` overrides; the default is
+//! `available_parallelism` capped at [`MAX_THREADS`]. Kernels fall back to
+//! the serial path for small operands (below [`PAR_MIN_WORK`] multiply-adds)
+//! where fan-out overhead would dominate, or when
+//! [`set_force_serial`]`(true)` is active (benches use this to measure the
+//! threading speedup in-process).
+
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+/// Hard cap on pool size (beyond this, the tiny matmuls here stop scaling).
+pub const MAX_THREADS: usize = 16;
+
+/// Minimum multiply-add count before a kernel fans out to the pool.
+const PAR_MIN_WORK: usize = 1 << 17;
+
+static FORCE_SERIAL: AtomicBool = AtomicBool::new(false);
+
+/// Force every kernel onto the serial path (process-global). Results are
+/// identical either way; benches toggle this to isolate the thread-pool
+/// contribution to throughput.
+pub fn set_force_serial(v: bool) {
+    FORCE_SERIAL.store(v, Ordering::SeqCst);
+}
+
+pub fn force_serial() -> bool {
+    FORCE_SERIAL.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn complete_one(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Completion is signalled from a `Drop` guard so a panicking job still
+/// releases the caller instead of deadlocking `Latch::wait`.
+struct DoneGuard {
+    latch: Arc<Latch>,
+}
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        self.latch.complete_one();
+    }
+}
+
+/// A fixed set of persistent worker threads fed through one shared channel.
+pub struct WorkerPool {
+    workers: usize,
+    tx: Option<Mutex<mpsc::Sender<Job>>>,
+}
+
+impl WorkerPool {
+    fn new(workers: usize) -> WorkerPool {
+        if workers <= 1 {
+            return WorkerPool { workers: 1, tx: None };
+        }
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("a3po-kernel-{i}"))
+                .spawn(move || loop {
+                    let msg = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(job) => job(),
+                        Err(_) => return,
+                    }
+                })
+                .expect("spawning kernel worker");
+        }
+        WorkerPool { workers, tx: Some(Mutex::new(tx)) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run a batch of jobs, blocking until every one has finished. Jobs may
+    /// borrow from the caller's stack: the blocking wait is what makes the
+    /// internal lifetime erasure sound. Panics if any job panicked.
+    pub fn run<'a>(&self, mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        match jobs.len() {
+            0 => return,
+            1 => {
+                (jobs.pop().unwrap())();
+                return;
+            }
+            _ => {}
+        }
+        let tx = match &self.tx {
+            Some(tx) if !force_serial() => tx,
+            _ => {
+                for job in jobs {
+                    job();
+                }
+                return;
+            }
+        };
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(jobs.len()),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let tx = tx.lock().unwrap();
+            for job in jobs {
+                // SAFETY: `run` blocks on the latch until every submitted
+                // job has completed (the Drop guard fires even on panic), so
+                // all borrows captured in `job` strictly outlive its
+                // execution. Only the lifetime is erased; the layout of the
+                // boxed trait object is unchanged.
+                let job: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'a>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                let latch = latch.clone();
+                tx.send(Box::new(move || {
+                    let guard = DoneGuard { latch };
+                    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                        guard.latch.panicked.store(true, Ordering::SeqCst);
+                    }
+                    drop(guard);
+                }))
+                .expect("kernel pool channel closed");
+            }
+        }
+        latch.wait();
+        if latch.panicked.load(Ordering::SeqCst) {
+            panic!("a kernel worker job panicked");
+        }
+    }
+}
+
+/// The process-global kernel pool (created on first use).
+pub fn pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::env::var("A3PO_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+            .clamp(1, MAX_THREADS);
+        WorkerPool::new(n)
+    })
+}
+
+/// Should an op of `work` multiply-adds with `rows` splittable rows fan out?
+fn parallel_ok(rows: usize, work: usize) -> bool {
+    rows >= 2 && work >= PAR_MIN_WORK && pool().workers() >= 2 && !force_serial()
+}
+
+/// Rows per job when splitting `rows` across the pool.
+#[allow(clippy::manual_div_ceil)] // usize::div_ceil needs rustc >= 1.73
+fn rows_per_job(rows: usize) -> usize {
+    let parts = pool().workers().max(1);
+    ((rows + parts - 1) / parts).max(1)
+}
+
+// ---------------------------------------------------------------------------
+// Matmul family (row-major; identical accumulation order serial/parallel)
+
+/// c[m,n] += a[m,k] · b[k,n]
+pub fn matmul_acc<'a>(c: &'a mut [f32], a: &'a [f32], b: &'a [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if !parallel_ok(m, m * k * n) {
+        matmul_acc_chunk(c, a, b, k, n);
+        return;
+    }
+    let rows = rows_per_job(m);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::new();
+    for (ci, cc) in c.chunks_mut(rows * n).enumerate() {
+        let r0 = ci * rows;
+        let r1 = r0 + cc.len() / n;
+        let ac = &a[r0 * k..r1 * k];
+        jobs.push(Box::new(move || matmul_acc_chunk(cc, ac, b, k, n)));
+    }
+    pool().run(jobs);
+}
+
+fn matmul_acc_chunk(c: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
+    let m = c.len() / n;
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// c[m,n] = a[m,k] · b[k,n]
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_acc(&mut c, a, b, m, k, n);
+    c
+}
+
+/// c[m,n] += aᵀ · b where a is [k,m] and b is [k,n] (weight gradients).
+pub fn matmul_at_b_acc<'a>(
+    c: &'a mut [f32],
+    a: &'a [f32],
+    b: &'a [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if !parallel_ok(m, m * k * n) {
+        matmul_at_b_chunk(c, a, b, k, m, n, 0);
+        return;
+    }
+    let rows = rows_per_job(m);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::new();
+    for (ci, cc) in c.chunks_mut(rows * n).enumerate() {
+        let i0 = ci * rows;
+        jobs.push(Box::new(move || matmul_at_b_chunk(cc, a, b, k, m, n, i0)));
+    }
+    pool().run(jobs);
+}
+
+/// The `i0`-offset chunk of aᵀ·b: fills `c` rows `i0..i0 + c.len()/n`.
+/// Keeps the serial p-outer order so per-element accumulation matches.
+fn matmul_at_b_chunk(c: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize, i0: usize) {
+    let rows = c.len() / n;
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..rows {
+            let av = arow[i0 + i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// c[m,n] += a · bᵀ where a is [m,k] and b is [n,k] (input gradients).
+pub fn matmul_a_bt_acc<'a>(
+    c: &'a mut [f32],
+    a: &'a [f32],
+    b: &'a [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if !parallel_ok(m, m * k * n) {
+        matmul_a_bt_chunk(c, a, b, k, n);
+        return;
+    }
+    let rows = rows_per_job(m);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::new();
+    for (ci, cc) in c.chunks_mut(rows * n).enumerate() {
+        let r0 = ci * rows;
+        let r1 = r0 + cc.len() / n;
+        let ac = &a[r0 * k..r1 * k];
+        jobs.push(Box::new(move || matmul_a_bt_chunk(cc, ac, b, k, n)));
+    }
+    pool().run(jobs);
+}
+
+fn matmul_a_bt_chunk(c: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
+    let m = c.len() / n;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            crow[j] += acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GELU (tanh approximation — jax.nn.gelu's default) and LayerNorm
+
+const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
+const GELU_K: f32 = 0.044_715;
+
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + GELU_K * x * x * x)).tanh())
+}
+
+pub fn gelu_grad(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_K * x * x * x);
+    let th = u.tanh();
+    let sech2 = 1.0 - th * th;
+    0.5 * (1.0 + th) + 0.5 * x * sech2 * GELU_C * (1.0 + 3.0 * GELU_K * x * x)
+}
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// LayerNorm over `rows` rows of width `d`; returns `(y, mean, inv_std)`.
+/// The training path keeps mean/inv for its backward; decode ignores them.
+pub fn layernorm_stats(
+    x: &[f32],
+    scale: &[f32],
+    bias: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), rows * d);
+    let mut y = vec![0.0f32; rows * d];
+    let mut inv = vec![0.0f32; rows];
+    let mut mean = vec![0.0f32; rows];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let iv = 1.0 / (var + LN_EPS).sqrt();
+        mean[r] = mu;
+        inv[r] = iv;
+        let out = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            out[j] = (row[j] - mu) * iv * scale[j] + bias[j];
+        }
+    }
+    (y, mean, inv)
+}
+
+/// LayerNorm returning only the normalised output (the decode hot path).
+pub fn layernorm_rows(x: &[f32], scale: &[f32], bias: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    layernorm_stats(x, scale, bias, rows, d).0
+}
+
+// ---------------------------------------------------------------------------
+// Causal multi-head attention (full window + incremental decode step)
+
+/// Causal attention over a full `[b, s]` window. `q`/`k`/`v` are `[b, s, d]`
+/// with per-head column blocks; fills `probs` `[b, h, s, s]` and
+/// accumulates into `ctx` `[b, s, d]` (callers pass zeroed buffers).
+/// Parallel over batch rows: each row's output block is independent.
+pub fn attention_forward<'a>(
+    b: usize,
+    s: usize,
+    h: usize,
+    hd: usize,
+    q: &'a [f32],
+    k: &'a [f32],
+    v: &'a [f32],
+    probs: &'a mut [f32],
+    ctx: &'a mut [f32],
+) {
+    let d = h * hd;
+    debug_assert_eq!(probs.len(), b * h * s * s);
+    debug_assert_eq!(ctx.len(), b * s * d);
+    if !parallel_ok(b, b * h * s * s * hd) {
+        for bi in 0..b {
+            attention_forward_row(
+                s,
+                h,
+                hd,
+                &q[bi * s * d..(bi + 1) * s * d],
+                &k[bi * s * d..(bi + 1) * s * d],
+                &v[bi * s * d..(bi + 1) * s * d],
+                &mut probs[bi * h * s * s..(bi + 1) * h * s * s],
+                &mut ctx[bi * s * d..(bi + 1) * s * d],
+            );
+        }
+        return;
+    }
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::with_capacity(b);
+    for (bi, (pc, cc)) in probs.chunks_mut(h * s * s).zip(ctx.chunks_mut(s * d)).enumerate() {
+        let qc = &q[bi * s * d..(bi + 1) * s * d];
+        let kc = &k[bi * s * d..(bi + 1) * s * d];
+        let vc = &v[bi * s * d..(bi + 1) * s * d];
+        jobs.push(Box::new(move || attention_forward_row(s, h, hd, qc, kc, vc, pc, cc)));
+    }
+    pool().run(jobs);
+}
+
+/// One batch row of causal attention (`q`/`k`/`v` row-local `[s, d]`).
+fn attention_forward_row(
+    s: usize,
+    h: usize,
+    hd: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &mut [f32],
+    ctx: &mut [f32],
+) {
+    let d = h * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores: Vec<f32> = Vec::with_capacity(s);
+    for hh in 0..h {
+        let col = hh * hd;
+        for i in 0..s {
+            let qrow = &q[i * d + col..i * d + col + hd];
+            let prow_base = (hh * s + i) * s;
+            let mut mx = f32::NEG_INFINITY;
+            scores.clear();
+            for j in 0..=i {
+                let krow = &k[j * d + col..j * d + col + hd];
+                let mut acc = 0.0f32;
+                for t in 0..hd {
+                    acc += qrow[t] * krow[t];
+                }
+                let sc = acc * scale;
+                mx = mx.max(sc);
+                scores.push(sc);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let crow = &mut ctx[i * d + col..i * d + col + hd];
+            for j in 0..=i {
+                let pj = scores[j] / denom;
+                probs[prow_base + j] = pj;
+                let vrow = &v[j * d + col..j * d + col + hd];
+                for t in 0..hd {
+                    crow[t] += pj * vrow[t];
+                }
+            }
+        }
+    }
+}
+
+/// Backward of [`attention_forward`]: given `dctx` `[b, s, d]` and the
+/// forward's `probs`/`q`/`k`/`v`, accumulates into `dq`/`dk`/`dv`
+/// (zeroed by the caller). Parallel over batch rows.
+pub fn attention_backward<'a>(
+    b: usize,
+    s: usize,
+    h: usize,
+    hd: usize,
+    probs: &'a [f32],
+    q: &'a [f32],
+    k: &'a [f32],
+    v: &'a [f32],
+    dctx: &'a [f32],
+    dq: &'a mut [f32],
+    dk: &'a mut [f32],
+    dv: &'a mut [f32],
+) {
+    let d = h * hd;
+    if !parallel_ok(b, 2 * b * h * s * s * hd) {
+        for bi in 0..b {
+            attention_backward_row(
+                s,
+                h,
+                hd,
+                &probs[bi * h * s * s..(bi + 1) * h * s * s],
+                &q[bi * s * d..(bi + 1) * s * d],
+                &k[bi * s * d..(bi + 1) * s * d],
+                &v[bi * s * d..(bi + 1) * s * d],
+                &dctx[bi * s * d..(bi + 1) * s * d],
+                &mut dq[bi * s * d..(bi + 1) * s * d],
+                &mut dk[bi * s * d..(bi + 1) * s * d],
+                &mut dv[bi * s * d..(bi + 1) * s * d],
+            );
+        }
+        return;
+    }
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::with_capacity(b);
+    let iter = dq
+        .chunks_mut(s * d)
+        .zip(dk.chunks_mut(s * d))
+        .zip(dv.chunks_mut(s * d))
+        .enumerate();
+    for (bi, ((dqc, dkc), dvc)) in iter {
+        let pc = &probs[bi * h * s * s..(bi + 1) * h * s * s];
+        let qc = &q[bi * s * d..(bi + 1) * s * d];
+        let kc = &k[bi * s * d..(bi + 1) * s * d];
+        let vc = &v[bi * s * d..(bi + 1) * s * d];
+        let dc = &dctx[bi * s * d..(bi + 1) * s * d];
+        jobs.push(Box::new(move || {
+            attention_backward_row(s, h, hd, pc, qc, kc, vc, dc, dqc, dkc, dvc)
+        }));
+    }
+    pool().run(jobs);
+}
+
+fn attention_backward_row(
+    s: usize,
+    h: usize,
+    hd: usize,
+    probs: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dctx: &[f32],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    let d = h * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dprobs_row = vec![0.0f32; s];
+    for hh in 0..h {
+        let col = hh * hd;
+        for i in 0..s {
+            let prow_base = (hh * s + i) * s;
+            let dcrow = &dctx[i * d + col..i * d + col + hd];
+            // dprobs and dv.
+            let mut rowdot = 0.0f32;
+            for j in 0..=i {
+                let pj = probs[prow_base + j];
+                let vrow = &v[j * d + col..j * d + col + hd];
+                let mut acc = 0.0f32;
+                for t in 0..hd {
+                    acc += dcrow[t] * vrow[t];
+                }
+                dprobs_row[j] = acc;
+                rowdot += acc * pj;
+                let dvrow = &mut dv[j * d + col..j * d + col + hd];
+                for t in 0..hd {
+                    dvrow[t] += pj * dcrow[t];
+                }
+            }
+            // dscores -> dq, dk.
+            let q_start = i * d + col;
+            for j in 0..=i {
+                let pj = probs[prow_base + j];
+                let dscore = pj * (dprobs_row[j] - rowdot) * scale;
+                if dscore == 0.0 {
+                    continue;
+                }
+                let k_start = j * d + col;
+                for t in 0..hd {
+                    dq[q_start + t] += dscore * k[k_start + t];
+                    dk[k_start + t] += dscore * q[q_start + t];
+                }
+            }
+        }
+    }
+}
+
+/// One incremental decode step of causal attention: each row's single query
+/// at position `pos` attends over its `pos + 1` cached keys. `q` is
+/// `[rows, d]`; `kcache`/`vcache` are `[rows, cap, d]`; accumulates into
+/// `ctx` `[rows, d]` (zeroed by the caller). Parallel over rows.
+pub fn attention_decode_step<'a>(
+    rows: usize,
+    cap: usize,
+    pos: usize,
+    h: usize,
+    hd: usize,
+    q: &'a [f32],
+    kcache: &'a [f32],
+    vcache: &'a [f32],
+    ctx: &'a mut [f32],
+) {
+    let d = h * hd;
+    debug_assert!(pos < cap);
+    debug_assert_eq!(q.len(), rows * d);
+    debug_assert!(kcache.len() >= rows * cap * d);
+    debug_assert_eq!(ctx.len(), rows * d);
+    if !parallel_ok(rows, rows * (pos + 1) * d) {
+        for r in 0..rows {
+            attention_decode_row(
+                cap,
+                pos,
+                h,
+                hd,
+                &q[r * d..(r + 1) * d],
+                &kcache[r * cap * d..(r + 1) * cap * d],
+                &vcache[r * cap * d..(r + 1) * cap * d],
+                &mut ctx[r * d..(r + 1) * d],
+            );
+        }
+        return;
+    }
+    let per = rows_per_job(rows);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::new();
+    for (ci, cc) in ctx.chunks_mut(per * d).enumerate() {
+        let r0 = ci * per;
+        let nr = cc.len() / d;
+        let qc = &q[r0 * d..(r0 + nr) * d];
+        let kc = &kcache[r0 * cap * d..(r0 + nr) * cap * d];
+        let vc = &vcache[r0 * cap * d..(r0 + nr) * cap * d];
+        jobs.push(Box::new(move || {
+            for r in 0..nr {
+                attention_decode_row(
+                    cap,
+                    pos,
+                    h,
+                    hd,
+                    &qc[r * d..(r + 1) * d],
+                    &kc[r * cap * d..(r + 1) * cap * d],
+                    &vc[r * cap * d..(r + 1) * cap * d],
+                    &mut cc[r * d..(r + 1) * d],
+                );
+            }
+        }));
+    }
+    pool().run(jobs);
+}
+
+/// One row of decode attention (`q` `[d]`, caches `[cap, d]`, `ctx` `[d]`).
+/// Same online-softmax arithmetic (and scalar order) as the full-window
+/// kernel at position `pos`, so session logits match full-forward decode.
+fn attention_decode_row(
+    cap: usize,
+    pos: usize,
+    h: usize,
+    hd: usize,
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    ctx: &mut [f32],
+) {
+    debug_assert!(pos < cap);
+    let d = h * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores: Vec<f32> = Vec::with_capacity(pos + 1);
+    for hh in 0..h {
+        let col = hh * hd;
+        let qrow = &q[col..col + hd];
+        let mut mx = f32::NEG_INFINITY;
+        scores.clear();
+        for j in 0..=pos {
+            let krow = &kc[j * d + col..j * d + col + hd];
+            let mut acc = 0.0f32;
+            for t in 0..hd {
+                acc += qrow[t] * krow[t];
+            }
+            let sc = acc * scale;
+            mx = mx.max(sc);
+            scores.push(sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - mx).exp();
+            denom += *sc;
+        }
+        let crow = &mut ctx[col..col + hd];
+        for j in 0..=pos {
+            let pj = scores[j] / denom;
+            let vrow = &vc[j * d + col..j * d + col + hd];
+            for t in 0..hd {
+                crow[t] += pj * vrow[t];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    /// Textbook triple-loop reference.
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+                }
+                c[i * n + j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn pool_runs_borrowed_jobs_to_completion() {
+        let mut out = vec![0u32; 64];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, chunk) in out.chunks_mut(8).enumerate() {
+                jobs.push(Box::new(move || {
+                    for (j, c) in chunk.iter_mut().enumerate() {
+                        *c = (i * 8 + j) as u32;
+                    }
+                }));
+            }
+            pool().run(jobs);
+        }
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+
+    #[test]
+    fn pool_propagates_job_panics() {
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("boom")),
+                Box::new(|| {}),
+            ];
+            pool().run(jobs);
+        }));
+        // Single-worker pools run inline and propagate directly; multi-worker
+        // pools re-panic from the latch. Either way the caller sees a panic.
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn matmul_matches_naive_and_is_thread_invariant() {
+        let mut rng = Pcg64::from_seed(1);
+        // Large enough to cross the parallel threshold on multicore hosts.
+        let (m, k, n) = (96, 64, 48);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let c = matmul(&a, &b, m, k, n);
+        let reference = naive_matmul(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&reference) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+        set_force_serial(true);
+        let c_serial = matmul(&a, &b, m, k, n);
+        set_force_serial(false);
+        assert_eq!(c, c_serial, "threaded matmul must be bit-identical to serial");
+    }
+
+    #[test]
+    fn at_b_and_a_bt_match_transposed_naive() {
+        let mut rng = Pcg64::from_seed(2);
+        let (m, k, n) = (40, 96, 32);
+        // c[m,n] += aᵀ·b with a: [k,m].
+        let a = randv(&mut rng, k * m);
+        let b = randv(&mut rng, k * n);
+        let mut c = vec![0.0f32; m * n];
+        matmul_at_b_acc(&mut c, &a, &b, k, m, n);
+        let mut at = vec![0.0f32; m * k];
+        for p in 0..k {
+            for i in 0..m {
+                at[i * k + p] = a[p * m + i];
+            }
+        }
+        let reference = naive_matmul(&at, &b, m, k, n);
+        for (x, y) in c.iter().zip(&reference) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+
+        // c[m,n] += a·bᵀ with b: [n,k].
+        let a2 = randv(&mut rng, m * k);
+        let b2 = randv(&mut rng, n * k);
+        let mut c2 = vec![0.0f32; m * n];
+        matmul_a_bt_acc(&mut c2, &a2, &b2, m, k, n);
+        let mut b2t = vec![0.0f32; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                b2t[p * n + j] = b2[j * k + p];
+            }
+        }
+        let reference2 = naive_matmul(&a2, &b2t, m, k, n);
+        for (x, y) in c2.iter().zip(&reference2) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn decode_attention_matches_full_window_last_position() {
+        let mut rng = Pcg64::from_seed(3);
+        let (b, s, h, hd) = (3, 6, 2, 4);
+        let d = h * hd;
+        let q = randv(&mut rng, b * s * d);
+        let k = randv(&mut rng, b * s * d);
+        let v = randv(&mut rng, b * s * d);
+        let mut probs = vec![0.0f32; b * h * s * s];
+        let mut ctx = vec![0.0f32; b * s * d];
+        attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+
+        // Same data laid out as decode caches [rows, cap, d]; query = last pos.
+        let pos = s - 1;
+        let mut qlast = vec![0.0f32; b * d];
+        for r in 0..b {
+            qlast[r * d..(r + 1) * d].copy_from_slice(&q[(r * s + pos) * d..(r * s + pos + 1) * d]);
+        }
+        let mut ctx_step = vec![0.0f32; b * d];
+        attention_decode_step(b, s, pos, h, hd, &qlast, &k, &v, &mut ctx_step);
+        for r in 0..b {
+            let full = &ctx[(r * s + pos) * d..(r * s + pos + 1) * d];
+            let step = &ctx_step[r * d..(r + 1) * d];
+            assert_eq!(full, step, "row {r}: decode-step attention diverged");
+        }
+    }
+
+    #[test]
+    fn layernorm_rows_matches_stats_output() {
+        let mut rng = Pcg64::from_seed(4);
+        let (rows, d) = (5, 16);
+        let x = randv(&mut rng, rows * d);
+        let scale = randv(&mut rng, d);
+        let bias = randv(&mut rng, d);
+        let (y, mean, inv) = layernorm_stats(&x, &scale, &bias, rows, d);
+        assert_eq!(y, layernorm_rows(&x, &scale, &bias, rows, d));
+        assert_eq!(mean.len(), rows);
+        assert!(inv.iter().all(|&v| v > 0.0));
+    }
+}

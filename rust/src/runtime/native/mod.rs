@@ -9,13 +9,16 @@
 //! `tiny`, `setup1`, `setup2`, and `big` are built in and mirror
 //! `python/compile/config.py`.
 
+pub mod kernels;
+pub mod kv;
 pub mod model;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::backend::{Backend, ExecutableImpl};
+use super::backend::{Backend, DecodeSessionFactory, ExecutableImpl};
 use super::manifest::{Dtype, ExecSpec, Manifest, PresetConfig, TensorSpec};
 use super::tensor::HostTensor;
 
@@ -305,6 +308,13 @@ impl Backend for NativeBackend {
         };
         Ok(Box::new(NativeExec { preset: self.preset.clone(), kind }))
     }
+
+    fn decode_session_factory(&self) -> Option<Arc<dyn DecodeSessionFactory>> {
+        Some(Arc::new(kv::NativeDecodeFactory::new(
+            self.preset.dims.clone(),
+            self.preset.seq_len(),
+        )))
+    }
 }
 
 /// The proximal-anchor modes of the fused loss (paper Eq. 2/3; mirrors
@@ -398,9 +408,17 @@ impl NativeExec {
         let tokens = inputs[np].as_i32()?;
         let pos = inputs[np + 1].scalar_i32_value()?;
         let (b, s, v) = (self.preset.rollout_batch, self.preset.seq_len(), self.preset.dims.vocab);
+        // The hidden state at pos-1 predicts the token at pos. A pos outside
+        // [1, s) has no in-window predictor; silently clamping (the old
+        // behaviour) computed logits for the wrong position.
+        if pos < 1 || pos as usize >= s {
+            bail!(
+                "decode pos {pos} out of range: need 1 <= pos < seq_len {s} \
+                 (logits at pos-1 predict pos)"
+            );
+        }
         let cache = model::forward(&self.preset.dims, &p, tokens, b, s);
-        // The hidden state at pos-1 predicts the token at pos.
-        let idx = (pos - 1).clamp(0, s as i32 - 1) as usize;
+        let idx = pos as usize - 1;
         let mut logits = vec![0.0f32; b * v];
         for bi in 0..b {
             logits[bi * v..(bi + 1) * v]
@@ -609,6 +627,33 @@ mod tests {
         assert_eq!(p.dims.d_model, 64);
         assert_eq!(p.dims.n_layers, 2);
         assert_eq!(p.train_batch % p.n_minibatch, 0);
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_pos() {
+        // Regression: pos used to be silently clamped into [0, s), returning
+        // logits for the wrong position instead of an error.
+        let rt = Runtime::native("tiny", Some(&["init", "decode"])).unwrap();
+        let geo = rt.manifest.preset.clone();
+        let snapshot = rt.init_params(1).unwrap();
+        let decode = rt.exec("decode").unwrap();
+        let tokens = HostTensor::i32(
+            vec![geo.rollout_batch, geo.seq_len],
+            vec![1; geo.rollout_batch * geo.seq_len],
+        );
+        let run_at = |pos: i32| {
+            let pos_t = HostTensor::scalar_i32(pos);
+            let mut refs = snapshot.tensor_refs();
+            refs.push(&tokens);
+            refs.push(&pos_t);
+            decode.run_refs(&refs)
+        };
+        for bad in [0, -3, geo.seq_len as i32, geo.seq_len as i32 + 7] {
+            assert!(run_at(bad).is_err(), "pos {bad} must be rejected");
+        }
+        // Boundaries: 1 (first prediction) and s-1 (last) are valid.
+        assert!(run_at(1).is_ok());
+        assert!(run_at(geo.seq_len as i32 - 1).is_ok());
     }
 
     #[test]

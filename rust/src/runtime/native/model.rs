@@ -3,17 +3,21 @@
 //!
 //! Everything operates on flat `f32` buffers in the manifest's parameter
 //! order (embed, pos_embed, per-layer [ln1, wq, wk, wv, wo, ln2, w1, b1,
-//! w2, b2], lnf, unembed). The forward pass caches every intermediate the
-//! backward pass needs; correctness is pinned by a finite-difference
+//! w2, b2], lnf, unembed). The dense math lives in [`super::kernels`]
+//! (shared with the incremental decode sessions in [`super::kv`], and
+//! thread-parallel over rows). The forward pass caches every intermediate
+//! the backward pass needs; correctness is pinned by a finite-difference
 //! gradient check in this module's tests.
 
 #![allow(clippy::needless_range_loop)]
 
+use super::kernels::{
+    self, attention_backward, attention_forward, gelu, gelu_grad, matmul, matmul_a_bt_acc,
+    matmul_at_b_acc,
+};
 use crate::runtime::manifest::{Dtype, TensorSpec};
 use crate::runtime::tensor::HostTensor;
 use crate::util::rng::Pcg64;
-
-const LN_EPS: f32 = 1e-5;
 
 /// Transformer hyper-parameters (mirrors python `ModelConfig`).
 #[derive(Debug, Clone)]
@@ -26,19 +30,20 @@ pub struct Dims {
     pub max_seq: usize,
 }
 
-/// Per-layer parameter slot offsets within the flat parameter list.
-const L_LN1S: usize = 0;
-const L_LN1B: usize = 1;
-const L_WQ: usize = 2;
-const L_WK: usize = 3;
-const L_WV: usize = 4;
-const L_WO: usize = 5;
-const L_LN2S: usize = 6;
-const L_LN2B: usize = 7;
-const L_W1: usize = 8;
-const L_B1: usize = 9;
-const L_W2: usize = 10;
-const L_B2: usize = 11;
+/// Per-layer parameter slot offsets within the flat parameter list
+/// (shared with the KV-cache decode sessions in `super::kv`).
+pub(crate) const L_LN1S: usize = 0;
+pub(crate) const L_LN1B: usize = 1;
+pub(crate) const L_WQ: usize = 2;
+pub(crate) const L_WK: usize = 3;
+pub(crate) const L_WV: usize = 4;
+pub(crate) const L_WO: usize = 5;
+pub(crate) const L_LN2S: usize = 6;
+pub(crate) const L_LN2B: usize = 7;
+pub(crate) const L_W1: usize = 8;
+pub(crate) const L_B1: usize = 9;
+pub(crate) const L_W2: usize = 10;
+pub(crate) const L_B2: usize = 11;
 const PER_LAYER: usize = 12;
 
 impl Dims {
@@ -89,15 +94,15 @@ impl Dims {
         self.param_specs().iter().map(|s| s.elements() as u64).sum()
     }
 
-    fn layer_base(&self, layer: usize) -> usize {
+    pub(crate) fn layer_base(&self, layer: usize) -> usize {
         2 + PER_LAYER * layer
     }
 
-    fn lnf_scale_idx(&self) -> usize {
+    pub(crate) fn lnf_scale_idx(&self) -> usize {
         2 + PER_LAYER * self.n_layers
     }
 
-    fn unembed_idx(&self) -> usize {
+    pub(crate) fn unembed_idx(&self) -> usize {
         self.lnf_scale_idx() + 2
     }
 }
@@ -131,91 +136,7 @@ pub fn init_params(dims: &Dims, seed: i32) -> Vec<HostTensor> {
 }
 
 // ---------------------------------------------------------------------------
-// Small dense-math helpers (row-major, cache-friendly i-k-j loops)
-
-/// c[m,n] += a[m,k] · b[k,n]
-fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let crow = &mut c[i * n..(i + 1) * n];
-        for p in 0..k {
-            let av = a[i * k + p];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
-}
-
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut c = vec![0.0f32; m * n];
-    matmul_acc(&mut c, a, b, m, k, n);
-    c
-}
-
-/// c[m,n] += aᵀ · b where a is [k,m] and b is [k,n] (weight gradients).
-fn matmul_at_b_acc(c: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize) {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    for p in 0..k {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
-}
-
-/// c[m,n] += a · bᵀ where a is [m,k] and b is [n,k] (input gradients).
-fn matmul_a_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
-            }
-            crow[j] += acc;
-        }
-    }
-}
-
-/// GELU (tanh approximation — jax.nn.gelu's default) and its derivative.
-const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
-const GELU_K: f32 = 0.044_715;
-
-fn gelu(x: f32) -> f32 {
-    0.5 * x * (1.0 + (GELU_C * (x + GELU_K * x * x * x)).tanh())
-}
-
-fn gelu_grad(x: f32) -> f32 {
-    let u = GELU_C * (x + GELU_K * x * x * x);
-    let th = u.tanh();
-    let sech2 = 1.0 - th * th;
-    0.5 * (1.0 + th) + 0.5 * x * sech2 * GELU_C * (1.0 + 3.0 * GELU_K * x * x)
-}
-
-// ---------------------------------------------------------------------------
-// LayerNorm
+// LayerNorm (normalisation math in `kernels`; the cache is training-only)
 
 pub struct LnCache {
     /// The normalisation input (a copy of the residual-stream value).
@@ -228,21 +149,7 @@ pub struct LnCache {
 }
 
 fn layernorm(x: &[f32], scale: &[f32], bias: &[f32], rows: usize, d: usize) -> LnCache {
-    let mut y = vec![0.0f32; rows * d];
-    let mut inv = vec![0.0f32; rows];
-    let mut mean = vec![0.0f32; rows];
-    for r in 0..rows {
-        let row = &x[r * d..(r + 1) * d];
-        let mu: f32 = row.iter().sum::<f32>() / d as f32;
-        let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-        let iv = 1.0 / (var + LN_EPS).sqrt();
-        mean[r] = mu;
-        inv[r] = iv;
-        let out = &mut y[r * d..(r + 1) * d];
-        for j in 0..d {
-            out[j] = (row[j] - mu) * iv * scale[j] + bias[j];
-        }
-    }
+    let (y, mean, inv) = kernels::layernorm_stats(x, scale, bias, rows, d);
     LnCache { x: x.to_vec(), inv, mean, y }
 }
 
@@ -286,11 +193,13 @@ fn layernorm_backward(
 // ---------------------------------------------------------------------------
 // Forward
 
-struct LayerCache {
+pub(crate) struct LayerCache {
     ln1: LnCache,
     q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// Per-position keys `[b, s, d]` — the KV sessions' prefill source.
+    pub(crate) k: Vec<f32>,
+    /// Per-position values `[b, s, d]` — the KV sessions' prefill source.
+    pub(crate) v: Vec<f32>,
     /// Attention probabilities `[b, h, s, s]` (lower-triangular rows).
     probs: Vec<f32>,
     /// Merged-head context `[b, s, d]`.
@@ -305,7 +214,7 @@ struct LayerCache {
 pub struct Cache {
     b: usize,
     s: usize,
-    layers: Vec<LayerCache>,
+    pub(crate) layers: Vec<LayerCache>,
     lnf: LnCache,
     /// Logits `[b, s, v]`.
     pub logits: Vec<f32>,
@@ -317,7 +226,6 @@ pub fn forward(dims: &Dims, p: &[&[f32]], tokens: &[i32], b: usize, s: usize) ->
     assert!(s <= dims.max_seq, "seq {s} exceeds max_seq {}", dims.max_seq);
     assert_eq!(tokens.len(), b * s);
     let rows = b * s;
-    let scale = 1.0 / (hd as f32).sqrt();
 
     // Embedding + positional.
     let embed = p[0];
@@ -343,45 +251,10 @@ pub fn forward(dims: &Dims, p: &[&[f32]], tokens: &[i32], b: usize, s: usize) ->
         let k = matmul(&ln1.y, p[base + L_WK], rows, d, d);
         let vv = matmul(&ln1.y, p[base + L_WV], rows, d, d);
 
-        // Causal multi-head attention.
+        // Causal multi-head attention (row-parallel kernel).
         let mut probs = vec![0.0f32; b * h * s * s];
         let mut ctx = vec![0.0f32; rows * d];
-        for bi in 0..b {
-            for hh in 0..h {
-                let col = hh * hd;
-                for i in 0..s {
-                    let qrow = &q[(bi * s + i) * d + col..(bi * s + i) * d + col + hd];
-                    let prow_base = ((bi * h + hh) * s + i) * s;
-                    // Scores + online softmax over j <= i.
-                    let mut mx = f32::NEG_INFINITY;
-                    let mut scores: Vec<f32> = Vec::with_capacity(i + 1);
-                    for j in 0..=i {
-                        let krow = &k[(bi * s + j) * d + col..(bi * s + j) * d + col + hd];
-                        let mut acc = 0.0f32;
-                        for t in 0..hd {
-                            acc += qrow[t] * krow[t];
-                        }
-                        let sc = acc * scale;
-                        mx = mx.max(sc);
-                        scores.push(sc);
-                    }
-                    let mut denom = 0.0f32;
-                    for sc in scores.iter_mut() {
-                        *sc = (*sc - mx).exp();
-                        denom += *sc;
-                    }
-                    let crow = &mut ctx[(bi * s + i) * d + col..(bi * s + i) * d + col + hd];
-                    for j in 0..=i {
-                        let pj = scores[j] / denom;
-                        probs[prow_base + j] = pj;
-                        let vrow = &vv[(bi * s + j) * d + col..(bi * s + j) * d + col + hd];
-                        for t in 0..hd {
-                            crow[t] += pj * vrow[t];
-                        }
-                    }
-                }
-            }
-        }
+        attention_forward(b, s, h, hd, &q, &k, &vv, &mut probs, &mut ctx);
         let attn_out = matmul(&ctx, p[base + L_WO], rows, d, d);
         for j in 0..rows * d {
             x[j] += attn_out[j];
@@ -507,7 +380,6 @@ pub fn backward(
     let (d, v, f, h, hd) = (dims.d_model, dims.vocab, dims.d_ff, dims.n_heads, dims.head_dim());
     let (b, s) = (cache.b, cache.s);
     let rows = b * s;
-    let scale = 1.0 / (hd as f32).sqrt();
     let specs = dims.param_specs();
     let mut grads: Vec<Vec<f32>> = specs.iter().map(|sp| vec![0.0f32; sp.elements()]).collect();
 
@@ -576,49 +448,9 @@ pub fn backward(
             let mut dq = vec![0.0f32; rows * d];
             let mut dk = vec![0.0f32; rows * d];
             let mut dv = vec![0.0f32; rows * d];
-            let mut dprobs_row = vec![0.0f32; s];
-            for bi in 0..b {
-                for hh in 0..h {
-                    let col = hh * hd;
-                    for i in 0..s {
-                        let prow_base = ((bi * h + hh) * s + i) * s;
-                        let dcrow =
-                            &dctx[(bi * s + i) * d + col..(bi * s + i) * d + col + hd];
-                        // dprobs and dv.
-                        let mut rowdot = 0.0f32;
-                        for j in 0..=i {
-                            let pj = lc.probs[prow_base + j];
-                            let vrow =
-                                &lc.v[(bi * s + j) * d + col..(bi * s + j) * d + col + hd];
-                            let mut acc = 0.0f32;
-                            for t in 0..hd {
-                                acc += dcrow[t] * vrow[t];
-                            }
-                            dprobs_row[j] = acc;
-                            rowdot += acc * pj;
-                            let dvrow = &mut dv
-                                [(bi * s + j) * d + col..(bi * s + j) * d + col + hd];
-                            for t in 0..hd {
-                                dvrow[t] += pj * dcrow[t];
-                            }
-                        }
-                        // dscores -> dq, dk.
-                        let qrow_start = (bi * s + i) * d + col;
-                        for j in 0..=i {
-                            let pj = lc.probs[prow_base + j];
-                            let dscore = pj * (dprobs_row[j] - rowdot) * scale;
-                            if dscore == 0.0 {
-                                continue;
-                            }
-                            let krow_start = (bi * s + j) * d + col;
-                            for t in 0..hd {
-                                dq[qrow_start + t] += dscore * lc.k[krow_start + t];
-                                dk[krow_start + t] += dscore * lc.q[qrow_start + t];
-                            }
-                        }
-                    }
-                }
-            }
+            attention_backward(
+                b, s, h, hd, &lc.probs, &lc.q, &lc.k, &lc.v, &dctx, &mut dq, &mut dk, &mut dv,
+            );
 
             matmul_at_b_acc(&mut grads[base + L_WQ], &lc.ln1.y, &dq, rows, d, d);
             matmul_at_b_acc(&mut grads[base + L_WK], &lc.ln1.y, &dk, rows, d, d);

@@ -82,12 +82,14 @@ pub fn pass_at_1(successes: usize, trials: usize) -> (f64, f64) {
 }
 
 /// Percentile over a copy of the data (p in [0, 100], linear interpolation).
+/// NaN-safe: samples sort under IEEE total order (NaNs rank last) instead
+/// of panicking mid-report the way `partial_cmp().unwrap()` used to.
 pub fn percentile(data: &[f64], p: f64) -> f64 {
     if data.is_empty() {
         return f64::NAN;
     }
     let mut v: Vec<f64> = data.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -171,6 +173,18 @@ mod tests {
         assert_eq!(percentile(&d, 0.0), 1.0);
         assert_eq!(percentile(&d, 100.0), 4.0);
         assert!((percentile(&d, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression: the old partial_cmp().unwrap() comparator panicked the
+        // moment a NaN metric reached a percentile report.
+        let d = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&d, 0.0), 1.0);
+        // Total order ranks NaN last: sorted = [1, 2, 3, NaN].
+        assert!((percentile(&d, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&d, 100.0).is_nan());
+        assert!(percentile(&[f64::NAN; 3], 50.0).is_nan());
     }
 
     #[test]

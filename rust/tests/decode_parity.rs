@@ -1,0 +1,161 @@
+//! Decode parity: the KV-cache session path must reproduce the full-forward
+//! decode executable's logits within 1e-4 at every generated position — the
+//! correctness anchor for the incremental decode subsystem. Covered across
+//! random prompts, staggered EOS (rows retained mid-generation), threaded
+//! vs single-thread kernels, and end-to-end through the rollout engine.
+//!
+//! Runs hermetically on the native `tiny` preset.
+
+use std::sync::Arc;
+
+use a3po::env::Problem;
+use a3po::rollout::generate_for_problems;
+use a3po::runtime::native::kernels;
+use a3po::runtime::{Decoder, ParamSnapshot, PresetConfig, Runtime};
+use a3po::sampler::SamplerConfig;
+use a3po::util::rng::Pcg64;
+
+const TOL: f32 = 1e-4;
+
+fn fixture() -> (Runtime, PresetConfig, Arc<ParamSnapshot>) {
+    std::env::set_var("A3PO_QUIET", "1");
+    let rt = Runtime::native("tiny", Some(&["init", "decode"])).unwrap();
+    let geo = rt.manifest.preset.clone();
+    let snapshot = rt.init_params(3).unwrap();
+    (rt, geo, snapshot)
+}
+
+/// Deterministic non-EOS token (vocab ids 0..2 are PAD/BOS/EOS).
+fn safe_token(geo: &PresetConfig, row: usize, pos: usize) -> i32 {
+    (3 + (row * 7 + pos * 11) % (geo.vocab - 3)) as i32
+}
+
+fn random_prompts(geo: &PresetConfig, seed: u64) -> Vec<i32> {
+    let mut rng = Pcg64::from_seed(seed);
+    (0..geo.rollout_batch * geo.prompt_len)
+        .map(|_| rng.below(geo.vocab as u64) as i32)
+        .collect()
+}
+
+fn assert_logits_close(pos: usize, session: &[f32], full: &[f32]) {
+    assert_eq!(session.len(), full.len(), "logit count diverged at pos {pos}");
+    for (i, (a, b)) in session.iter().zip(full).enumerate() {
+        assert!(
+            (a - b).abs() <= TOL,
+            "pos {pos} logit {i}: session {a} vs full-forward {b}"
+        );
+    }
+}
+
+#[test]
+fn session_logits_match_full_forward_every_position() {
+    let (rt, geo, snapshot) = fixture();
+    let decoder = rt.decoder().unwrap();
+    assert!(decoder.incremental(), "native backend must provide KV sessions");
+    let (br, pl, s) = (geo.rollout_batch, geo.prompt_len, geo.seq_len);
+    let prompts = random_prompts(&geo, 7);
+
+    let mut kv = decoder.start(&snapshot, &prompts, br, pl).unwrap();
+    let mut ff = decoder.start_full_forward(&snapshot, &prompts, br, pl).unwrap();
+    for pos in pl..s {
+        assert_logits_close(pos, kv.logits(), ff.logits());
+        if pos + 1 == s {
+            break;
+        }
+        let toks: Vec<i32> = (0..br).map(|r| safe_token(&geo, r, pos)).collect();
+        kv.step(&toks).unwrap();
+        ff.step(&toks).unwrap();
+    }
+}
+
+#[test]
+fn session_parity_survives_mixed_finished_rows() {
+    // Rows leave the batch at different positions (the EOS-staggered case);
+    // the compacted KV caches must keep matching the full-forward reference.
+    let (rt, geo, snapshot) = fixture();
+    let decoder = rt.decoder().unwrap();
+    let (br, pl, s) = (geo.rollout_batch, geo.prompt_len, geo.seq_len);
+    assert!(br >= 4, "test wants a few rows to drop");
+    let prompts = random_prompts(&geo, 21);
+
+    let mut kv = decoder.start(&snapshot, &prompts, br, pl).unwrap();
+    let mut ff = decoder.start_full_forward(&snapshot, &prompts, br, pl).unwrap();
+    let mut active = br;
+    for (step_i, pos) in (pl..s).enumerate() {
+        assert_logits_close(pos, kv.logits(), ff.logits());
+        if pos + 1 == s || active == 0 {
+            break;
+        }
+        // Drop one row every other step, varying which index goes.
+        if step_i % 2 == 1 && active > 1 {
+            let victim = step_i % active;
+            let keep: Vec<bool> = (0..active).map(|i| i != victim).collect();
+            kv.retain_rows(&keep).unwrap();
+            ff.retain_rows(&keep).unwrap();
+            active -= 1;
+        }
+        let toks: Vec<i32> = (0..active).map(|r| safe_token(&geo, r, pos)).collect();
+        kv.step(&toks).unwrap();
+        ff.step(&toks).unwrap();
+        assert_eq!(kv.active_rows(), active);
+        assert_eq!(ff.active_rows(), active);
+    }
+}
+
+#[test]
+fn session_parity_is_thread_invariant() {
+    // Threaded and single-thread kernels must produce identical logits
+    // (the pool splits by rows without changing accumulation order).
+    let (rt, geo, snapshot) = fixture();
+    let decoder = rt.decoder().unwrap();
+    let (br, pl, s) = (geo.rollout_batch, geo.prompt_len, geo.seq_len);
+    let prompts = random_prompts(&geo, 40);
+
+    let run = |serial: bool| -> Vec<f32> {
+        kernels::set_force_serial(serial);
+        let mut kv = decoder.start(&snapshot, &prompts, br, pl).unwrap();
+        let mut all = Vec::new();
+        for pos in pl..s {
+            all.extend_from_slice(kv.logits());
+            if pos + 1 == s {
+                break;
+            }
+            let toks: Vec<i32> = (0..br).map(|r| safe_token(&geo, r, pos)).collect();
+            kv.step(&toks).unwrap();
+        }
+        kernels::set_force_serial(false);
+        all
+    };
+    let threaded = run(false);
+    let serial = run(true);
+    assert_eq!(threaded, serial, "threading changed decode results");
+}
+
+#[test]
+fn generation_is_decode_path_invariant() {
+    // Same RNG + matching logits => the rollout engine must produce
+    // identical episodes through KV sessions and the full-forward fallback.
+    let (rt, geo, snapshot) = fixture();
+    let decoder = rt.decoder().unwrap();
+    let problems: Vec<Problem> = (0..geo.rollout_batch)
+        .map(|i| Problem { prompt: format!("{}+{}=", i % 7, (i * 3) % 5), answer: "0".into() })
+        .collect();
+    let generate = |d: &Decoder| {
+        let mut rng = Pcg64::from_seed(11);
+        generate_for_problems(d, &snapshot, &problems, &geo, &SamplerConfig::default(), &mut rng)
+            .unwrap()
+    };
+    let via_sessions = generate(&decoder);
+    let via_full_forward = generate(&decoder.without_sessions());
+
+    assert_eq!(via_sessions.len(), via_full_forward.len());
+    for (a, b) in via_sessions.iter().zip(&via_full_forward) {
+        assert_eq!(a.tokens, b.tokens, "sampled tokens diverged between decode paths");
+        assert_eq!(a.mask, b.mask);
+        assert_eq!(a.text, b.text);
+        assert_eq!(a.reward, b.reward);
+        for (x, y) in a.behav_logp.iter().zip(&b.behav_logp) {
+            assert!((x - y).abs() <= TOL, "behaviour logp diverged: {x} vs {y}");
+        }
+    }
+}

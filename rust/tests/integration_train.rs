@@ -129,14 +129,9 @@ fn checkpoint_save_then_benchmark_eval() {
     let fit = a3po::env::suites::fitting(&suite, geo.prompt_len - 1, geo.gen_len - 1);
     assert!(!fit.problems.is_empty());
     let take: Vec<_> = fit.problems.into_iter().take(geo.rollout_batch).collect();
-    let (p, se) = coordinator::eval::evaluate_pass_at_1(
-        out.runtime.exec("decode").unwrap(),
-        &loaded,
-        &take,
-        geo,
-        true,
-    )
-    .unwrap();
+    let decoder = out.runtime.decoder().unwrap();
+    let (p, se) =
+        coordinator::eval::evaluate_pass_at_1(&decoder, &loaded, &take, geo, true).unwrap();
     assert!((0.0..=1.0).contains(&p));
     assert!(se >= 0.0);
 }
