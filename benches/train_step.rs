@@ -1,0 +1,242 @@
+//! Train-step throughput: stateful train session vs the positional
+//! executable path, with threaded vs single-thread kernels.
+//!
+//! The session path keeps parameters, Adam moments, and the activation
+//! workspace in-place inside the backend; a step moves only the batch in
+//! and metrics out, plus one copy-on-publish parameter snapshot. The
+//! positional path round-trips the full optimiser state through the
+//! executable every step. Both run identical math (see
+//! `rust/tests/train_parity.rs`); this bench measures what the state
+//! transfer and allocation churn cost.
+//!
+//! Emits a machine-readable `BENCH_train.json` with steps/sec plus mean
+//! per-step heap allocations (count and bytes), counted by a wrapping
+//! global allocator. Acceptance: session train_loglinear steps/sec >=
+//! 1.3x the positional path on the tiny preset.
+//!
+//!   cargo bench --bench train_step -- --preset tiny
+//!   cargo bench --bench train_step -- --preset tiny --out BENCH_train.json
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use a3po::bench::write_bench_json;
+use a3po::config::Method;
+use a3po::coordinator::batch::TrainBatch;
+use a3po::coordinator::Trainer;
+use a3po::runtime::native::kernels;
+use a3po::runtime::{PresetConfig, Runtime, WeightStore};
+use a3po::util::cli::Args;
+use a3po::util::json::Json;
+use a3po::util::rng::Pcg64;
+use a3po::util::timer::Stopwatch;
+
+/// [`System`] allocator wrapper that counts allocations so the bench can
+/// report per-step heap churn (all threads, which is what we want: the
+/// kernel pool's allocations count too).
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size.saturating_sub(layout.size()) as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+const EXECS: &[&str] = &["init", "train_loglinear"];
+
+/// Deterministic synthetic RL batch (same shape the coordinator builds).
+fn synthetic_batch(rng: &mut Pcg64, geo: &PresetConfig) -> TrainBatch {
+    let (b, s) = (geo.train_batch, geo.seq_len);
+    let t = s - 1;
+    let tokens = (0..b * s).map(|_| rng.below(geo.vocab as u64) as i32).collect();
+    let mask = (0..b * t).map(|i| if i % t >= t - geo.gen_len { 1.0 } else { 0.0 }).collect();
+    let behav_logp = (0..b * t).map(|_| -0.1 - 2.0 * rng.next_f32()).collect();
+    let adv = (0..b * t).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+    let alpha = (0..b).map(|_| rng.next_f32()).collect();
+    TrainBatch {
+        tokens,
+        mask,
+        behav_logp,
+        adv,
+        alpha,
+        staleness: vec![0; b],
+        mean_staleness: 0.0,
+        mean_alpha: 0.0,
+        mean_reward: 0.0,
+        mean_reward_exact: 0.0,
+    }
+}
+
+struct Measurement {
+    steps: u64,
+    secs: f64,
+    allocs_per_step: f64,
+    alloc_bytes_per_step: f64,
+}
+
+fn find<'a>(measured: &'a [(&str, Measurement)], name: &str) -> &'a Measurement {
+    &measured.iter().find(|(l, _)| *l == name).expect("unmeasured configuration").1
+}
+
+fn steps_per_sec(m: &Measurement) -> f64 {
+    m.steps as f64 / m.secs.max(1e-12)
+}
+
+/// Run `warmup + reps` train_loglinear steps down one path; measure the
+/// timed portion. Batches are pre-built so batch synthesis never lands in
+/// the timing or allocation window (steps take them by move).
+fn drive(
+    rt: &Runtime,
+    geo: &PresetConfig,
+    use_sessions: bool,
+    reps: usize,
+) -> anyhow::Result<Measurement> {
+    let init = rt.init_params(0)?;
+    let store = WeightStore::new(init.clone());
+    let mut trainer = if use_sessions {
+        Trainer::new(rt, Method::Loglinear, init, store)?
+    } else {
+        Trainer::new_without_sessions(rt, Method::Loglinear, init, store)?
+    };
+
+    let warmup = 2;
+    let mut rng = Pcg64::from_seed(0xBE);
+    let mut batches: Vec<TrainBatch> =
+        (0..warmup + reps).map(|_| synthetic_batch(&mut rng, geo)).collect();
+    let timed = batches.split_off(warmup);
+    for batch in batches {
+        trainer.step(batch)?;
+    }
+
+    let calls0 = ALLOC_CALLS.load(Ordering::Relaxed);
+    let bytes0 = ALLOC_BYTES.load(Ordering::Relaxed);
+    let sw = Stopwatch::start();
+    let mut sink = 0.0;
+    for batch in timed {
+        let (metrics, _) = trainer.step(batch)?;
+        sink += metrics.loss;
+    }
+    let secs = sw.secs();
+    let calls = ALLOC_CALLS.load(Ordering::Relaxed) - calls0;
+    let bytes = ALLOC_BYTES.load(Ordering::Relaxed) - bytes0;
+    std::hint::black_box(sink);
+
+    Ok(Measurement {
+        steps: reps as u64,
+        secs,
+        allocs_per_step: calls as f64 / reps as f64,
+        alloc_bytes_per_step: bytes as f64 / reps as f64,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let parsed = Args::new(
+        "train_step",
+        "steps/sec + per-step allocations: train sessions vs positional executables",
+    )
+    .opt("preset", "tiny", "native preset geometry")
+    .opt("reps", "0", "measured steps per configuration (0 = auto per preset)")
+    .opt("out", "BENCH_train.json", "machine-readable output path")
+    .flag("bench", "(ignored; passed by cargo bench)")
+    .parse();
+
+    std::env::set_var("A3PO_QUIET", "1");
+    let preset = parsed.string("preset");
+    let rt = Runtime::native(&preset, Some(EXECS))?;
+    let geo = rt.manifest.preset.clone();
+    let reps = match parsed.usize("reps") {
+        0 if preset == "tiny" => 20,
+        0 => 3,
+        r => r,
+    };
+    let threads = kernels::pool().workers();
+
+    println!("\n== Train step throughput: {} (train_loglinear) ==", preset);
+    println!(
+        "batch={} seq={} minibatches/step={} params={} kernel threads={} reps={}\n",
+        geo.train_batch, geo.seq_len, geo.n_minibatch, geo.param_count, threads, reps
+    );
+
+    // (label, session path?, force single-thread kernels?)
+    let plan: [(&str, bool, bool); 4] = [
+        ("legacy_serial", false, true), // the seed train path
+        ("legacy", false, false),
+        ("session_serial", true, true),
+        ("session", true, false),
+    ];
+    let mut measured: Vec<(&str, Measurement)> = Vec::new();
+    for (label, use_sessions, serial) in plan {
+        kernels::set_force_serial(serial);
+        let res = drive(&rt, &geo, use_sessions, reps);
+        kernels::set_force_serial(false);
+        let m = res?;
+        let sps = m.steps as f64 / m.secs.max(1e-12);
+        println!(
+            "{label:<16} {:>4} steps in {:>8.3}s = {sps:>8.2} steps/s  \
+             ({:>9.0} allocs/step, {:>12.0} bytes/step)",
+            m.steps, m.secs, m.allocs_per_step, m.alloc_bytes_per_step
+        );
+        measured.push((label, m));
+    }
+
+    let session = find(&measured, "session");
+    let legacy = find(&measured, "legacy");
+    let session_serial = find(&measured, "session_serial");
+    let speedup_vs_legacy = steps_per_sec(session) / steps_per_sec(legacy);
+    let speedup_threads = steps_per_sec(session) / steps_per_sec(session_serial);
+    let alloc_ratio = session.allocs_per_step / legacy.allocs_per_step.max(1.0);
+    println!("\nsession vs legacy steps/sec       : {speedup_vs_legacy:>6.2}x  (target >= 1.3x)");
+    println!("threaded vs serial session kernels: {speedup_threads:>6.2}x");
+    println!("session allocs per step vs legacy : {alloc_ratio:>6.3}x");
+
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("preset", Json::Str(preset.clone())),
+        ("method", Json::Str("loglinear".to_string())),
+        ("train_batch", Json::Num(geo.train_batch as f64)),
+        ("seq_len", Json::Num(geo.seq_len as f64)),
+        ("n_minibatch", Json::Num(geo.n_minibatch as f64)),
+        ("param_count", Json::Num(geo.param_count as f64)),
+        ("kernel_threads", Json::Num(threads as f64)),
+        ("reps", Json::Num(reps as f64)),
+        ("speedup_session_vs_legacy", Json::Num(speedup_vs_legacy)),
+        ("speedup_threaded_vs_serial_session", Json::Num(speedup_threads)),
+        ("alloc_ratio_session_vs_legacy", Json::Num(alloc_ratio)),
+    ];
+    let detail: Vec<(&str, Json)> = measured
+        .iter()
+        .map(|(label, m)| {
+            (
+                *label,
+                Json::obj(vec![
+                    ("steps", Json::Num(m.steps as f64)),
+                    ("secs", Json::Num(m.secs)),
+                    ("steps_per_sec", Json::Num(m.steps as f64 / m.secs.max(1e-12))),
+                    ("allocs_per_step", Json::Num(m.allocs_per_step)),
+                    ("alloc_bytes_per_step", Json::Num(m.alloc_bytes_per_step)),
+                ]),
+            )
+        })
+        .collect();
+    pairs.push(("paths", Json::obj(detail)));
+    write_bench_json(&PathBuf::from(parsed.str("out")), &Json::obj(pairs))?;
+    Ok(())
+}

@@ -30,7 +30,7 @@ use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
-use trainer::Trainer;
+pub use trainer::Trainer;
 
 /// Everything a finished run hands back to examples/benches.
 pub struct RunOutput {
@@ -103,6 +103,9 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
     };
     let store = WeightStore::new(snapshot.clone());
     let mut trainer = Trainer::new(&runtime, opts.method, snapshot, store.clone())?;
+    if std::env::var_os("A3PO_QUIET").is_none() {
+        eprintln!("[run] train path: {}", trainer.path_label());
+    }
 
     let metrics_path =
         PathBuf::from(&opts.out_dir).join(format!("{}_{}.jsonl", opts.preset, opts.method.label()));
@@ -186,7 +189,11 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
             opts.alpha_schedule,
             opts.inject_staleness,
         );
-        let step_result = trainer.step(&tb);
+        // The trainer consumes the batch (its buffers move into the step);
+        // keep the summary stats for the log record.
+        let (mean_staleness, mean_alpha) = (tb.mean_staleness, tb.mean_alpha);
+        let (mean_reward, mean_reward_exact) = (tb.mean_reward, tb.mean_reward_exact);
+        let step_result = trainer.step(tb);
         let (m, timing) = match step_result {
             Ok(x) => x,
             Err(e) => {
@@ -201,10 +208,10 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
             step,
             wallclock: run_sw.secs(),
             version: trainer.version(),
-            mean_staleness: tb.mean_staleness,
-            mean_alpha: tb.mean_alpha,
-            reward: tb.mean_reward,
-            reward_exact: tb.mean_reward_exact,
+            mean_staleness,
+            mean_alpha,
+            reward: mean_reward,
+            reward_exact: mean_reward_exact,
             prox_secs: timing.prox_secs,
             train_secs: timing.train_secs,
             rollout_secs,

@@ -1,6 +1,16 @@
-//! The trainer: owns the optimiser state, drives the method-specific train
-//! executable, times the proximal-policy phase (Fig. 1), and publishes new
-//! weight versions.
+//! The trainer: drives the method-specific training path, times the
+//! proximal-policy phase (Fig. 1), and publishes new weight versions.
+//!
+//! Two data paths, chosen at construction:
+//!
+//! * **Session** — the backend's [`TrainSession`] owns parameters, Adam
+//!   moments, and the step counter in-place; a step moves only the batch in
+//!   and metrics + θ log-probs out, plus one copy-on-publish parameter
+//!   snapshot for the [`WeightStore`].
+//! * **Legacy (positional)** — for backends without session support (PJRT):
+//!   the trainer keeps the optimiser state as host tensors and round-trips
+//!   all of it through the positional `train_*`/`pretrain` executables,
+//!   unpacking outputs by spec name via [`TrainOutputs`].
 //!
 //! Method-specific prox phase, mirroring the paper exactly:
 //! * `sync`       — no proximal policy at all (coupled loss).
@@ -20,28 +30,44 @@ use anyhow::{bail, Result};
 
 use crate::config::Method;
 use crate::metrics::TrainMetrics;
-use crate::runtime::{Executable, HostTensor, ParamSnapshot, Runtime, WeightStore};
+use crate::runtime::{
+    Executable, HostTensor, ParamSnapshot, Runtime, TrainInputs, TrainOutputs, TrainSession,
+    TrainState, WeightStore,
+};
 use crate::util::timer::Stopwatch;
 
 use super::batch::TrainBatch;
 
-pub struct Trainer {
-    method: Method,
+/// The positional fallback: optimiser state lives host-side and crosses the
+/// backend boundary in full on every step.
+struct LegacyPath {
     train_exec: Arc<Executable>,
-    prox_exec: Option<Arc<Executable>>,
     pretrain_exec: Option<Arc<Executable>>,
-    store: Arc<WeightStore>,
-    /// Current parameters (shared snapshot; publishing is an Arc swap).
-    snapshot: Arc<ParamSnapshot>,
     adam_m: Vec<HostTensor>,
     adam_v: Vec<HostTensor>,
-    /// Adam step counter fed to the executable (bias correction).
+    /// Adam step counter, kept in lockstep with the executable's reported
+    /// `step` output (bias correction).
     opt_step: i32,
+    n_params: usize,
+}
+
+enum TrainPath {
+    Session(Box<dyn TrainSession>),
+    Legacy(LegacyPath),
+}
+
+pub struct Trainer {
+    method: Method,
+    path: TrainPath,
+    prox_exec: Option<Arc<Executable>>,
+    store: Arc<WeightStore>,
+    /// Latest published parameters (shared snapshot; publishing is an Arc
+    /// swap). Under sessions this mirrors the session's in-place state at
+    /// step boundaries.
+    snapshot: Arc<ParamSnapshot>,
     /// θ log-probs returned by the previous train step (native backend);
     /// operand of the standalone Eq. 3 measurement.
     last_theta_logp: Option<Vec<f32>>,
-    n_params: usize,
-    n_minibatch: usize,
     geo_b: usize,
     geo_s: usize,
 }
@@ -54,37 +80,66 @@ pub struct StepTiming {
 }
 
 impl Trainer {
+    /// Build a trainer, preferring the backend's train sessions when it has
+    /// them; otherwise the positional executables.
     pub fn new(
         runtime: &Runtime,
         method: Method,
         initial: Arc<ParamSnapshot>,
         store: Arc<WeightStore>,
     ) -> Result<Trainer> {
-        let train_exec = runtime.exec(method.executable())?.clone();
+        Trainer::build(runtime, method, initial, store, true)
+    }
+
+    /// Build a trainer pinned to the positional path even when the backend
+    /// has sessions (parity tests and benchmarks).
+    pub fn new_without_sessions(
+        runtime: &Runtime,
+        method: Method,
+        initial: Arc<ParamSnapshot>,
+        store: Arc<WeightStore>,
+    ) -> Result<Trainer> {
+        Trainer::build(runtime, method, initial, store, false)
+    }
+
+    fn build(
+        runtime: &Runtime,
+        method: Method,
+        initial: Arc<ParamSnapshot>,
+        store: Arc<WeightStore>,
+        use_sessions: bool,
+    ) -> Result<Trainer> {
+        let n_params = runtime.manifest.n_params();
+        if initial.params.len() != n_params {
+            bail!("snapshot has {} tensors, manifest {}", initial.params.len(), n_params);
+        }
         let prox_exec = if method == Method::Recompute {
             Some(runtime.exec("prox_forward")?.clone())
         } else {
             None
         };
-        let pretrain_exec =
-            if runtime.has_exec("pretrain") { Some(runtime.exec("pretrain")?.clone()) } else { None };
-        let n_params = runtime.manifest.n_params();
-        if initial.params.len() != n_params {
-            bail!("snapshot has {} tensors, manifest {}", initial.params.len(), n_params);
-        }
+        let path = match runtime.train_session_factory().filter(|_| use_sessions) {
+            Some(factory) => TrainPath::Session(factory.start(method.executable(), &initial)?),
+            None => TrainPath::Legacy(LegacyPath {
+                train_exec: runtime.exec(method.executable())?.clone(),
+                pretrain_exec: if runtime.has_exec("pretrain") {
+                    Some(runtime.exec("pretrain")?.clone())
+                } else {
+                    None
+                },
+                adam_m: runtime.zero_adam_state(),
+                adam_v: runtime.zero_adam_state(),
+                opt_step: 0,
+                n_params,
+            }),
+        };
         Ok(Trainer {
             method,
-            train_exec,
+            path,
             prox_exec,
-            pretrain_exec,
             store,
             snapshot: initial,
-            adam_m: runtime.zero_adam_state(),
-            adam_v: runtime.zero_adam_state(),
-            opt_step: 0,
             last_theta_logp: None,
-            n_params,
-            n_minibatch: runtime.manifest.preset.n_minibatch,
             geo_b: runtime.manifest.preset.train_batch,
             geo_s: runtime.manifest.preset.seq_len,
         })
@@ -98,28 +153,65 @@ impl Trainer {
         self.snapshot.clone()
     }
 
+    /// Whether this trainer drives a stateful backend session (vs the
+    /// positional executables).
+    pub fn session_active(&self) -> bool {
+        matches!(self.path, TrainPath::Session(_))
+    }
+
+    /// Short label of the active data path for logs/summaries.
+    pub fn path_label(&self) -> &'static str {
+        match self.path {
+            TrainPath::Session(_) => "session",
+            TrainPath::Legacy(_) => "positional",
+        }
+    }
+
+    /// Optimiser steps applied so far (across pretrain + RL minibatches).
+    pub fn opt_step(&self) -> i32 {
+        match &self.path {
+            TrainPath::Session(s) => s.opt_step(),
+            TrainPath::Legacy(l) => l.opt_step,
+        }
+    }
+
+    /// Export the full optimiser state (params + Adam moments + step) for
+    /// checkpointing, from whichever path holds it.
+    pub fn export_state(&self) -> Result<TrainState> {
+        match &self.path {
+            TrainPath::Session(s) => s.export_state(),
+            TrainPath::Legacy(l) => Ok(TrainState {
+                opt_step: l.opt_step,
+                params: self.snapshot.params.clone(),
+                adam_m: l.adam_m.clone(),
+                adam_v: l.adam_v.clone(),
+            }),
+        }
+    }
+
     /// One RL training step (= n_minibatch gradient updates inside the
-    /// executable), with the method's prox phase timed separately.
-    pub fn step(&mut self, batch: &TrainBatch) -> Result<(TrainMetrics, StepTiming)> {
+    /// backend), with the method's prox phase timed separately. Takes the
+    /// batch by value: the session path borrows it, the legacy path moves
+    /// its buffers into the executable inputs — neither copies.
+    pub fn step(&mut self, batch: TrainBatch) -> Result<(TrainMetrics, StepTiming)> {
         let (b, s) = (self.geo_b, self.geo_s);
         let t = s - 1;
-        let tokens = HostTensor::i32(vec![b, s], batch.tokens.clone());
-        let mask = HostTensor::f32(vec![b, t], batch.mask.clone());
-        let behav = HostTensor::f32(vec![b, t], batch.behav_logp.clone());
-        let adv = HostTensor::f32(vec![b, t], batch.adv.clone());
-        let alpha = HostTensor::f32(vec![b], batch.alpha.clone());
 
         // --- proximal-policy phase (the paper's Fig. 1 measurement) ------
         let prox_sw = Stopwatch::start();
-        let prox = match self.method {
+        let prox_host: Option<Vec<f32>> = match self.method {
             Method::Recompute => {
                 // Extra forward pass over the training batch; frozen for
                 // the rest of the step.
                 let exec = self.prox_exec.as_ref().expect("recompute needs prox_forward");
+                let tokens = HostTensor::i32(vec![b, s], batch.tokens.clone());
                 let mut refs = self.snapshot.tensor_refs();
                 refs.push(&tokens);
                 let outs = exec.run_refs(&refs)?;
-                outs.into_iter().next().unwrap()
+                match outs.into_iter().next() {
+                    Some(HostTensor::F32 { data, .. }) => Some(data),
+                    _ => bail!("prox_forward returned no f32 output"),
+                }
             }
             Method::Loglinear => {
                 // Eq. 3 as a standalone elementwise op (what replaces the
@@ -133,89 +225,119 @@ impl Trainer {
                     Some(v) => v,
                     None => &batch.behav_logp,
                 };
-                let interp = interp_prox_host(theta, &batch.behav_logp, &batch.alpha, t);
-                HostTensor::f32(vec![b, t], interp)
+                Some(interp_prox_host(theta, &batch.behav_logp, &batch.alpha, t))
             }
-            Method::Sync => {
-                // Coupled loss: no proximal policy. Zero placeholder (the
-                // executable ignores it).
-                HostTensor::f32(vec![b, t], vec![0.0; b * t])
-            }
+            // Coupled loss: no proximal policy at all.
+            Method::Sync => None,
         };
         let prox_secs = prox_sw.secs();
 
-        // --- train executable --------------------------------------------
-        let step_lit = HostTensor::scalar_i32(self.opt_step);
+        // --- train step ---------------------------------------------------
         let train_sw = Stopwatch::start();
-        let mut refs = self.snapshot.tensor_refs();
-        refs.extend(self.adam_m.iter());
-        refs.extend(self.adam_v.iter());
-        refs.push(&step_lit);
-        refs.push(&tokens);
-        refs.push(&mask);
-        refs.push(&behav);
-        refs.push(&adv);
-        refs.push(&alpha);
-        refs.push(&prox);
-        let mut outs = self.train_exec.run_refs(&refs)?;
+        let (metrics_vec, theta_logp, new_params) = match &mut self.path {
+            TrainPath::Session(session) => {
+                let inputs = TrainInputs {
+                    tokens: &batch.tokens,
+                    mask: &batch.mask,
+                    behav_logp: &batch.behav_logp,
+                    adv: &batch.adv,
+                    alpha: &batch.alpha,
+                    prox_logp: prox_host.as_deref(),
+                };
+                let out = session.train_step(&inputs)?;
+                // The one per-step parameter copy: copy-on-publish.
+                let params = session.snapshot_params()?;
+                (out.metrics, out.theta_logp, params)
+            }
+            TrainPath::Legacy(l) => {
+                let TrainBatch { tokens, mask, behav_logp, adv, alpha, .. } = batch;
+                let tokens = HostTensor::i32(vec![b, s], tokens);
+                let mask = HostTensor::f32(vec![b, t], mask);
+                let behav = HostTensor::f32(vec![b, t], behav_logp);
+                let adv = HostTensor::f32(vec![b, t], adv);
+                let alpha = HostTensor::f32(vec![b], alpha);
+                // The positional signature always takes a prox input; sync
+                // passes a zero placeholder the executable ignores.
+                let prox =
+                    HostTensor::f32(vec![b, t], prox_host.unwrap_or_else(|| vec![0.0; b * t]));
+                let step_lit = HostTensor::scalar_i32(l.opt_step);
+                let mut refs = self.snapshot.tensor_refs();
+                refs.extend(l.adam_m.iter());
+                refs.extend(l.adam_v.iter());
+                refs.push(&step_lit);
+                refs.push(&tokens);
+                refs.push(&mask);
+                refs.push(&behav);
+                refs.push(&adv);
+                refs.push(&alpha);
+                refs.push(&prox);
+                let outs = l.train_exec.run_refs(&refs)?;
+                let unpacked = TrainOutputs::unpack(&l.train_exec.spec, outs, l.n_params)?;
+                l.adam_m = unpacked.adam_m;
+                l.adam_v = unpacked.adam_v;
+                l.opt_step = unpacked.opt_step;
+                let theta = match unpacked.theta_logp {
+                    Some(HostTensor::F32 { data, .. }) => Some(data),
+                    Some(_) => bail!("theta_logp output must be f32"),
+                    None => None,
+                };
+                (unpacked.metrics.as_f32()?.to_vec(), theta, unpacked.params)
+            }
+        };
         let train_secs = train_sw.secs();
 
-        // Unpack: params, m, v, step, metrics[, theta_logp].
-        let np = self.n_params;
-        let theta_out = if outs.len() > 3 * np + 2 { outs.pop() } else { None };
-        let metrics_t = outs.pop().expect("metrics output");
-        let _step_out = outs.pop().expect("step output");
-        let new_v: Vec<HostTensor> = outs.split_off(2 * np);
-        let new_m: Vec<HostTensor> = outs.split_off(np);
-        let new_params = outs;
-
-        if let Some(theta) = theta_out {
-            self.last_theta_logp = Some(theta.as_f32()?.to_vec());
+        if let Some(theta) = theta_logp {
+            self.last_theta_logp = Some(theta);
         }
-
-        // The executable performed n_minibatch Adam updates; keep the host
-        // step counter (bias correction) in lockstep.
-        self.opt_step += self.n_minibatch as i32;
-        self.adam_m = new_m;
-        self.adam_v = new_v;
         let new_version = self.snapshot.version + 1;
         self.snapshot = ParamSnapshot::new(new_version, new_params);
         self.store.publish(self.snapshot.clone());
 
-        let metrics = TrainMetrics::from_vector(metrics_t.as_f32()?);
+        let metrics = TrainMetrics::from_vector(&metrics_vec);
         Ok((metrics, StepTiming { prox_secs, train_secs }))
     }
 
     /// One supervised warm-start step (next-token CE on correct solutions).
     pub fn pretrain_step(&mut self, tokens: &[i32], mask: &[f32]) -> Result<TrainMetrics> {
-        let exec = match &self.pretrain_exec {
-            Some(e) => e.clone(),
-            None => bail!("pretrain executable not loaded"),
-        };
         let (b, s) = (self.geo_b, self.geo_s);
-        let tokens = HostTensor::i32(vec![b, s], tokens.to_vec());
-        let mask = HostTensor::f32(vec![b, s - 1], mask.to_vec());
-        let step_lit = HostTensor::scalar_i32(self.opt_step);
-        let mut refs = self.snapshot.tensor_refs();
-        refs.extend(self.adam_m.iter());
-        refs.extend(self.adam_v.iter());
-        refs.push(&step_lit);
-        refs.push(&tokens);
-        refs.push(&mask);
-        let mut outs = exec.run_refs(&refs)?;
-
-        let np = self.n_params;
-        let metrics_t = outs.pop().expect("metrics output");
-        let _step_out = outs.pop();
-        let new_v: Vec<HostTensor> = outs.split_off(2 * np);
-        let new_m: Vec<HostTensor> = outs.split_off(np);
-        self.adam_m = new_m;
-        self.adam_v = new_v;
-        self.opt_step += 1;
+        let t = s - 1;
+        if tokens.len() != b * s {
+            bail!("pretrain tokens: {} elements, expected [{b}, {s}]", tokens.len());
+        }
+        if mask.len() != b * t {
+            bail!("pretrain mask: {} elements, expected [{b}, {t}]", mask.len());
+        }
+        let (metrics_vec, new_params) = match &mut self.path {
+            TrainPath::Session(session) => {
+                let out = session.pretrain_step(tokens, mask)?;
+                (out.metrics, session.snapshot_params()?)
+            }
+            TrainPath::Legacy(l) => {
+                let exec = match &l.pretrain_exec {
+                    Some(e) => e.clone(),
+                    None => bail!("pretrain executable not loaded"),
+                };
+                let tokens = HostTensor::i32(vec![b, s], tokens.to_vec());
+                let mask = HostTensor::f32(vec![b, t], mask.to_vec());
+                let step_lit = HostTensor::scalar_i32(l.opt_step);
+                let mut refs = self.snapshot.tensor_refs();
+                refs.extend(l.adam_m.iter());
+                refs.extend(l.adam_v.iter());
+                refs.push(&step_lit);
+                refs.push(&tokens);
+                refs.push(&mask);
+                let outs = exec.run_refs(&refs)?;
+                let unpacked = TrainOutputs::unpack(&exec.spec, outs, l.n_params)?;
+                l.adam_m = unpacked.adam_m;
+                l.adam_v = unpacked.adam_v;
+                l.opt_step = unpacked.opt_step;
+                (unpacked.metrics.as_f32()?.to_vec(), unpacked.params)
+            }
+        };
         // Warm start does not bump the RL version: v(pi) counts RL updates.
-        self.snapshot = ParamSnapshot::new(self.snapshot.version, outs);
+        self.snapshot = ParamSnapshot::new(self.snapshot.version, new_params);
         self.store.publish(self.snapshot.clone());
-        Ok(TrainMetrics::from_vector(metrics_t.as_f32()?))
+        Ok(TrainMetrics::from_vector(&metrics_vec))
     }
 }
 

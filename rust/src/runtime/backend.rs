@@ -19,6 +19,15 @@
 //! forward pass. Backends without that support (PJRT today) return `None`
 //! and rollout falls back to the full-forward `decode` executable through
 //! [`super::decode::Decoder`] — rollout code never branches on the backend.
+//!
+//! Symmetrically, backends may expose **stateful train sessions** via
+//! [`Backend::train_session_factory`]: the session owns parameters, Adam
+//! moments, and the optimiser step counter in-place, so a train step moves
+//! only the batch in and metrics + θ log-probs out, plus one copy-on-publish
+//! parameter snapshot — instead of round-tripping params + 2× Adam state in
+//! both directions through positional executables. Backends without that
+//! support return `None` and [`crate::coordinator::Trainer`] falls back to
+//! the positional `train_*`/`pretrain` executables transparently.
 
 use std::sync::Arc;
 
@@ -27,6 +36,7 @@ use anyhow::Result;
 use super::manifest::{ExecSpec, Manifest};
 use super::params::ParamSnapshot;
 use super::tensor::HostTensor;
+use super::train::TrainState;
 
 /// One loaded/compiled executable. Implementations must be callable from
 /// multiple threads concurrently (rollout workers share `decode`).
@@ -77,6 +87,68 @@ pub trait DecodeSessionFactory: Send + Sync {
     ) -> Result<Box<dyn DecodeSession>>;
 }
 
+/// Borrowed views of one RL training batch, lengths in host layout:
+/// `tokens` is `[batch, seq]` row-major, the per-token tensors are
+/// `[batch, gen_len]`, `alpha` is `[batch]`. `prox_logp` carries the
+/// anchor log-probs when the loss mode needs them (`None` for `sync`).
+pub struct TrainInputs<'a> {
+    pub tokens: &'a [i32],
+    pub mask: &'a [f32],
+    pub behav_logp: &'a [f32],
+    pub adv: &'a [f32],
+    pub alpha: &'a [f32],
+    pub prox_logp: Option<&'a [f32]>,
+}
+
+/// What a train step hands back: the metrics vector (layout
+/// [`crate::metrics::TRAIN_METRIC_NAMES`]) and, for RL steps, the θ
+/// log-probs `[batch, gen_len]` that seed the next step's prox anchor.
+pub struct TrainStepOutput {
+    pub metrics: Vec<f32>,
+    pub theta_logp: Option<Vec<f32>>,
+}
+
+/// One live training session: owns parameters, Adam `m`/`v`, and the step
+/// counter, mutating them in-place each step.
+///
+/// Publish semantics: state lives inside the session; the trainer calls
+/// [`TrainSession::snapshot_params`] after each step to obtain the single
+/// copy-on-publish parameter set it hands to the `WeightStore`. Optimiser
+/// moments never cross the boundary except through
+/// [`TrainSession::export_state`] (checkpointing).
+pub trait TrainSession: Send {
+    /// Optimiser steps applied so far (after `n` RL steps on a preset with
+    /// `n_minibatch` minibatches this reads `n * n_minibatch`).
+    fn opt_step(&self) -> i32;
+
+    /// One RL step over `inputs`: mutate params/moments/step in-place,
+    /// return metrics + θ log-probs.
+    fn train_step(&mut self, inputs: &TrainInputs<'_>) -> Result<TrainStepOutput>;
+
+    /// One supervised warm-up step (`tokens` `[batch, seq]`, `mask`
+    /// `[batch, gen_len]`); returns metrics with `theta_logp: None`.
+    fn pretrain_step(&mut self, tokens: &[i32], mask: &[f32]) -> Result<TrainStepOutput>;
+
+    /// Copy the current parameters out as host tensors in manifest order
+    /// (the one per-step copy the publish path pays).
+    fn snapshot_params(&self) -> Result<Vec<HostTensor>>;
+
+    /// Copy the full optimiser state out (for checkpointing).
+    fn export_state(&self) -> Result<TrainState>;
+}
+
+/// Creates [`TrainSession`]s for one preset.
+pub trait TrainSessionFactory: Send + Sync {
+    /// Start a session for the method named by its train executable
+    /// (`"train_sync"` / `"train_recompute"` / `"train_loglinear"`),
+    /// seeding parameters from `initial` with zeroed Adam moments.
+    fn start(
+        &self,
+        train_exec: &str,
+        initial: &Arc<ParamSnapshot>,
+    ) -> Result<Box<dyn TrainSession>>;
+}
+
 /// A source of executables for one preset.
 pub trait Backend: Send + Sync {
     /// Short backend label ("native", "pjrt") for logs and summaries.
@@ -93,6 +165,13 @@ pub trait Backend: Send + Sync {
     /// only has the full-forward `decode` executable; [`super::Decoder`]
     /// then falls back transparently.
     fn decode_session_factory(&self) -> Option<Arc<dyn DecodeSessionFactory>> {
+        None
+    }
+
+    /// Stateful-train support. `None` (the default) means the backend only
+    /// has the positional `train_*`/`pretrain` executables;
+    /// [`crate::coordinator::Trainer`] then falls back transparently.
+    fn train_session_factory(&self) -> Option<Arc<dyn TrainSessionFactory>> {
         None
     }
 }

@@ -4,6 +4,11 @@
 //! Format: `<path>.json` — a JSON header with the param specs and version;
 //! `<path>.bin` — the raw little-endian f32 data concatenated in manifest
 //! order. Backend-independent: any snapshot of host tensors round-trips.
+//!
+//! A second variant (`a3po-opt-v1`) saves the full optimiser state
+//! ([`TrainState`]: params + Adam moments + step counter) so a training run
+//! can resume exactly: the `.bin` holds params, then first moments, then
+//! second moments, each in manifest order.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -16,6 +21,7 @@ use crate::util::json::Json;
 use super::manifest::{Dtype, Manifest, TensorSpec};
 use super::params::ParamSnapshot;
 use super::tensor::HostTensor;
+use super::train::TrainState;
 
 pub fn save(path: &Path, manifest: &Manifest, snapshot: &ParamSnapshot) -> Result<()> {
     if let Some(parent) = path.parent() {
@@ -101,6 +107,86 @@ pub fn load(path: &Path, manifest: &Manifest) -> Result<Arc<ParamSnapshot>> {
         bail!("checkpoint has trailing data (param spec drift?)");
     }
     Ok(ParamSnapshot::new(version, params))
+}
+
+/// Save a full optimiser state (params + Adam moments + step counter) for
+/// exact training resume.
+pub fn save_train_state(path: &Path, manifest: &Manifest, state: &TrainState) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut header = vec![
+        ("format", Json::Str("a3po-opt-v1".into())),
+        ("preset", Json::Str(manifest.preset.name.clone())),
+        ("opt_step", Json::Num(state.opt_step as f64)),
+    ];
+    header.sort_by(|a, b| a.0.cmp(b.0));
+    std::fs::write(path.with_extension("json"), Json::obj(header).dump())?;
+
+    let mut bin = std::io::BufWriter::new(std::fs::File::create(path.with_extension("bin"))?);
+    for (label, group) in
+        [("param", &state.params), ("adam_m", &state.adam_m), ("adam_v", &state.adam_v)]
+    {
+        if group.len() != manifest.params.len() {
+            bail!("{label} group has {} tensors, manifest {}", group.len(), manifest.params.len());
+        }
+        for (tensor, spec) in group.iter().zip(&manifest.params) {
+            tensor.check(spec).with_context(|| format!("saving {label} {}", spec.name))?;
+            for x in tensor.as_f32()? {
+                bin.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    bin.flush()?;
+    Ok(())
+}
+
+/// Load a full optimiser state saved by [`save_train_state`].
+pub fn load_train_state(path: &Path, manifest: &Manifest) -> Result<TrainState> {
+    let header_path = path.with_extension("json");
+    let header = Json::parse(
+        &std::fs::read_to_string(&header_path)
+            .with_context(|| format!("reading {}", header_path.display()))?,
+    )?;
+    if header.get("format").as_str() != Some("a3po-opt-v1") {
+        bail!("bad train-state format (expected a3po-opt-v1)");
+    }
+    if header.get("preset").as_str() != Some(manifest.preset.name.as_str()) {
+        bail!(
+            "train state is for preset {:?}, manifest is {:?}",
+            header.get("preset"),
+            manifest.preset.name
+        );
+    }
+    let opt_step = header.get("opt_step").as_i64().unwrap_or(0) as i32;
+
+    let mut f = std::io::BufReader::new(std::fs::File::open(path.with_extension("bin"))?);
+    let mut read_group = |label: &str| -> Result<Vec<HostTensor>> {
+        let mut group = Vec::with_capacity(manifest.params.len());
+        for spec in &manifest.params {
+            if spec.dtype != Dtype::F32 {
+                bail!("train state only supports f32 params");
+            }
+            let n = spec.elements();
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)
+                .with_context(|| format!("reading {label} {}", spec.name))?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            group.push(HostTensor::f32(spec.shape.clone(), data));
+        }
+        Ok(group)
+    };
+    let params = read_group("param")?;
+    let adam_m = read_group("adam_m")?;
+    let adam_v = read_group("adam_v")?;
+    let mut extra = [0u8; 1];
+    if f.read(&mut extra)? != 0 {
+        bail!("train state has trailing data (param spec drift?)");
+    }
+    Ok(TrainState { opt_step, params, adam_m, adam_v })
 }
 
 /// Sanity helper for tests: total f32 elements a checkpoint should hold.

@@ -29,6 +29,7 @@ pub mod params;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod tensor;
+pub mod train;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -36,13 +37,17 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
-pub use backend::{Backend, DecodeSession, DecodeSessionFactory, ExecutableImpl};
+pub use backend::{
+    Backend, DecodeSession, DecodeSessionFactory, ExecutableImpl, TrainInputs, TrainSession,
+    TrainSessionFactory, TrainStepOutput,
+};
 pub use decode::Decoder;
 pub use executable::Executable;
 pub use manifest::{Dtype, ExecSpec, Manifest, PresetConfig, TensorSpec};
 pub use native::NativeBackend;
 pub use params::{ParamSnapshot, WeightStore};
 pub use tensor::HostTensor;
+pub use train::{TrainOutputs, TrainState};
 
 /// Everything loaded for one preset: manifest + all executables.
 pub struct Runtime {
@@ -53,6 +58,9 @@ pub struct Runtime {
     /// Incremental-decode support, if the backend has it (see
     /// [`Runtime::decoder`]).
     decode_factory: Option<Arc<dyn DecodeSessionFactory>>,
+    /// Stateful-train support, if the backend has it (see
+    /// [`Runtime::train_session_factory`]).
+    train_factory: Option<Arc<dyn TrainSessionFactory>>,
 }
 
 impl Runtime {
@@ -115,6 +123,7 @@ impl Runtime {
             manifest,
             executables,
             decode_factory: backend.decode_session_factory(),
+            train_factory: backend.train_session_factory(),
         })
     }
 
@@ -137,6 +146,12 @@ impl Runtime {
 
     pub fn has_exec(&self, name: &str) -> bool {
         self.executables.contains_key(name)
+    }
+
+    /// Stateful-train support, if the backend provides it. `None` means the
+    /// trainer must drive the positional `train_*` executables.
+    pub fn train_session_factory(&self) -> Option<Arc<dyn TrainSessionFactory>> {
+        self.train_factory.clone()
     }
 
     /// Run `init(seed)` and wrap the resulting parameters at version 0.

@@ -357,6 +357,14 @@ pub fn gelu_grad(x: f32) -> f32 {
 
 pub const LN_EPS: f32 = 1e-5;
 
+/// Re-zero `buf` to exactly `n` elements, keeping its allocation. The
+/// workspace idiom: `clear` drops the length without touching capacity, so
+/// after warm-up `resize` never reallocates.
+pub fn reset(buf: &mut Vec<f32>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0.0);
+}
+
 /// LayerNorm over `rows` rows of width `d`; returns `(y, mean, inv_std)`.
 /// The training path keeps mean/inv for its backward; decode ignores them.
 pub fn layernorm_stats(
@@ -366,10 +374,28 @@ pub fn layernorm_stats(
     rows: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (mut y, mut mean, mut inv) = (Vec::new(), Vec::new(), Vec::new());
+    layernorm_stats_into(x, scale, bias, rows, d, &mut y, &mut mean, &mut inv);
+    (y, mean, inv)
+}
+
+/// [`layernorm_stats`] writing into caller-owned buffers (resized here),
+/// so the train workspace reuses its allocations every step.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_stats_into(
+    x: &[f32],
+    scale: &[f32],
+    bias: &[f32],
+    rows: usize,
+    d: usize,
+    y: &mut Vec<f32>,
+    mean: &mut Vec<f32>,
+    inv: &mut Vec<f32>,
+) {
     debug_assert_eq!(x.len(), rows * d);
-    let mut y = vec![0.0f32; rows * d];
-    let mut inv = vec![0.0f32; rows];
-    let mut mean = vec![0.0f32; rows];
+    reset(y, rows * d);
+    reset(inv, rows);
+    reset(mean, rows);
     for r in 0..rows {
         let row = &x[r * d..(r + 1) * d];
         let mu: f32 = row.iter().sum::<f32>() / d as f32;
@@ -382,7 +408,6 @@ pub fn layernorm_stats(
             out[j] = (row[j] - mu) * iv * scale[j] + bias[j];
         }
     }
-    (y, mean, inv)
 }
 
 /// LayerNorm returning only the normalised output (the decode hot path).

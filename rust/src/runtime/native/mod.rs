@@ -12,13 +12,16 @@
 pub mod kernels;
 pub mod kv;
 pub mod model;
+pub mod train;
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::backend::{Backend, DecodeSessionFactory, ExecutableImpl};
+use super::backend::{
+    Backend, DecodeSessionFactory, ExecutableImpl, TrainInputs, TrainSessionFactory,
+};
 use super::manifest::{Dtype, ExecSpec, Manifest, PresetConfig, TensorSpec};
 use super::tensor::HostTensor;
 
@@ -315,6 +318,10 @@ impl Backend for NativeBackend {
             self.preset.seq_len(),
         )))
     }
+
+    fn train_session_factory(&self) -> Option<Arc<dyn TrainSessionFactory>> {
+        Some(Arc::new(train::NativeTrainFactory::new(self.preset.clone())))
+    }
 }
 
 /// The proximal-anchor modes of the fused loss (paper Eq. 2/3; mirrors
@@ -437,165 +444,65 @@ impl NativeExec {
         Ok(vec![HostTensor::f32(vec![b, s - 1], stats.logp)])
     }
 
+    /// Positional pretrain: clones params + both moment sets in, runs the
+    /// shared step math with a throwaway workspace, packs everything back
+    /// out. The session path ([`train::NativeTrainSession`]) runs the same
+    /// math without any of the copies.
     fn run_pretrain(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let np = self.np();
-        let dims = &self.preset.dims;
-        let mut params = owned_f32(inputs, 0, np)?;
-        let mut adam_m = owned_f32(inputs, np, np)?;
-        let mut adam_v = owned_f32(inputs, 2 * np, np)?;
-        let step = inputs[3 * np].scalar_i32_value()?;
-        let tokens = inputs[3 * np + 1].as_i32()?;
-        let mask = inputs[3 * np + 2].as_f32()?;
-        let (b, s) = (self.preset.train_batch, self.preset.seq_len());
-
-        let p: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
-        let cache = model::forward(dims, &p, tokens, b, s);
-        let stats = model::sequence_logp(dims, &cache, tokens);
-        let denom = mask.iter().sum::<f32>().max(1.0);
-        let loss = -masked_sum(&stats.logp, mask) / denom;
-        let entropy = masked_sum(&stats.entropy, mask) / denom;
-
-        // d(-masked_mean(logp))/dlogp = -mask/denom.
-        let dlogp: Vec<f32> = mask.iter().map(|&mk| -mk / denom).collect();
-        let dlogits = model::dlogits_from_dlogp(dims, &cache, &stats, tokens, &dlogp);
-        let grads = model::backward(dims, &p, &cache, tokens, &dlogits);
-        drop(p);
-        let gnorm = model::adam_update(
-            &self.preset.adam,
-            self.preset.lr,
-            &mut params,
-            &mut adam_m,
-            &mut adam_v,
-            &grads,
-            step,
-        );
-        let metrics = [loss, entropy, 0.0, 0.0, 0.0, 0.0, gnorm, 0.0];
-        Ok(self.pack_state(params, adam_m, adam_v, step + 1, metrics))
-    }
-
-    fn run_train(&self, inputs: &[&HostTensor], mode: LossMode) -> Result<Vec<HostTensor>> {
-        let np = self.np();
-        let dims = &self.preset.dims;
         let mut params = owned_f32(inputs, 0, np)?;
         let mut adam_m = owned_f32(inputs, np, np)?;
         let mut adam_v = owned_f32(inputs, 2 * np, np)?;
         let mut step = inputs[3 * np].scalar_i32_value()?;
         let tokens = inputs[3 * np + 1].as_i32()?;
         let mask = inputs[3 * np + 2].as_f32()?;
-        let behav = inputs[3 * np + 3].as_f32()?;
-        let adv = inputs[3 * np + 4].as_f32()?;
-        let alpha = inputs[3 * np + 5].as_f32()?;
-        let prox_in = inputs[3 * np + 6].as_f32()?;
 
-        let (tb, s) = (self.preset.train_batch, self.preset.seq_len());
-        let t = s - 1;
-        let n_mb = self.preset.n_minibatch;
-        let mb = tb / n_mb;
-        let clip_eps = self.preset.clip_eps;
+        let mut ws = train::StepWorkspace::new(&self.preset.dims);
+        let metrics = train::pretrain_step_impl(
+            &self.preset,
+            &mut params,
+            &mut adam_m,
+            &mut adam_v,
+            &mut step,
+            tokens,
+            mask,
+            &mut ws,
+        );
+        Ok(self.pack_state(params, adam_m, adam_v, step, metrics))
+    }
 
-        let mut theta_out = vec![0.0f32; tb * t];
-        let mut losses = 0.0f64;
-        let mut ents = 0.0f64;
-        let mut ratios = 0.0f64;
-        let mut kls = 0.0f64;
-        let mut gnorms = 0.0f64;
-        let mut max_iw = f32::NEG_INFINITY;
-        let mut min_iw = f32::INFINITY;
-        let mut clip_total = 0.0f32;
+    /// Positional train step: same copy-in/copy-out framing as
+    /// [`Self::run_pretrain`], delegating the loss/backward/Adam loop to
+    /// [`train::train_step_impl`].
+    fn run_train(&self, inputs: &[&HostTensor], mode: LossMode) -> Result<Vec<HostTensor>> {
+        let np = self.np();
+        let mut params = owned_f32(inputs, 0, np)?;
+        let mut adam_m = owned_f32(inputs, np, np)?;
+        let mut adam_v = owned_f32(inputs, 2 * np, np)?;
+        let mut step = inputs[3 * np].scalar_i32_value()?;
+        let batch = TrainInputs {
+            tokens: inputs[3 * np + 1].as_i32()?,
+            mask: inputs[3 * np + 2].as_f32()?,
+            behav_logp: inputs[3 * np + 3].as_f32()?,
+            adv: inputs[3 * np + 4].as_f32()?,
+            alpha: inputs[3 * np + 5].as_f32()?,
+            prox_logp: Some(inputs[3 * np + 6].as_f32()?),
+        };
 
-        for i in 0..n_mb {
-            let (r0, r1) = (i * mb, (i + 1) * mb);
-            let tok_mb = &tokens[r0 * s..r1 * s];
-            let mask_mb = &mask[r0 * t..r1 * t];
-            let behav_mb = &behav[r0 * t..r1 * t];
-            let adv_mb = &adv[r0 * t..r1 * t];
-            let alpha_mb = &alpha[r0..r1];
-            let prox_mb = &prox_in[r0 * t..r1 * t];
-
-            let p: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
-            let cache = model::forward(dims, &p, tok_mb, mb, s);
-            let stats = model::sequence_logp(dims, &cache, tok_mb);
-            theta_out[r0 * t..r1 * t].copy_from_slice(&stats.logp);
-
-            let denom = mask_mb.iter().sum::<f32>().max(1.0);
-            let mut obj_sum = 0.0f32;
-            let mut ent_sum = 0.0f32;
-            let mut ratio_sum = 0.0f32;
-            let mut kl_sum = 0.0f32;
-            let mut clip_sum = 0.0f32;
-            let mut mb_max_iw = f32::NEG_INFINITY;
-            let mut mb_min_iw = f32::INFINITY;
-            let mut dlogp = vec![0.0f32; mb * t];
-            for row in 0..mb {
-                let a = alpha_mb[row];
-                for ti in 0..t {
-                    let idx = row * t + ti;
-                    let mk = mask_mb[idx];
-                    let theta = stats.logp[idx];
-                    let bh = behav_mb[idx];
-                    // The anchor is detached in every mode (paper Eq. 3):
-                    // the objective's only gradient path is θ in the ratio.
-                    let prox = match mode {
-                        LossMode::Coupled => bh,
-                        LossMode::Frozen => prox_mb[idx],
-                        LossMode::Interp => a * bh + (1.0 - a) * theta,
-                    };
-                    let iw = (prox - bh).exp();
-                    let ratio = (theta - prox).exp();
-                    let av = adv_mb[idx];
-                    let unclipped = ratio * av;
-                    let clipped_term = ratio.clamp(1.0 - clip_eps, 1.0 + clip_eps) * av;
-                    let is_clipped = if unclipped > clipped_term { 1.0f32 } else { 0.0 };
-                    let obj = iw * unclipped.min(clipped_term);
-                    if mk > 0.0 {
-                        obj_sum += obj * mk;
-                        ent_sum += stats.entropy[idx] * mk;
-                        ratio_sum += ratio * mk;
-                        kl_sum += (bh - theta) * mk;
-                        clip_sum += is_clipped * mk;
-                        mb_max_iw = mb_max_iw.max(iw);
-                        mb_min_iw = mb_min_iw.min(iw);
-                        // loss = -sum(obj*mask)/denom; unclipped branch only.
-                        dlogp[idx] = -mk * iw * av * ratio * (1.0 - is_clipped) / denom;
-                    }
-                }
-            }
-
-            let dlogits = model::dlogits_from_dlogp(dims, &cache, &stats, tok_mb, &dlogp);
-            let grads = model::backward(dims, &p, &cache, tok_mb, &dlogits);
-            drop(p);
-            let gnorm = model::adam_update(
-                &self.preset.adam,
-                self.preset.rl_lr,
-                &mut params,
-                &mut adam_m,
-                &mut adam_v,
-                &grads,
-                step,
-            );
-            step += 1;
-
-            losses += (-obj_sum / denom) as f64;
-            ents += (ent_sum / denom) as f64;
-            ratios += (ratio_sum / denom) as f64;
-            kls += (kl_sum / denom) as f64;
-            gnorms += gnorm as f64;
-            max_iw = max_iw.max(mb_max_iw);
-            min_iw = min_iw.min(mb_min_iw);
-            clip_total += clip_sum;
-        }
-
-        let inv = 1.0 / n_mb as f64;
-        let metrics = [
-            (losses * inv) as f32,
-            (ents * inv) as f32,
-            max_iw,
-            min_iw,
-            clip_total,
-            (ratios * inv) as f32,
-            (gnorms * inv) as f32,
-            (kls * inv) as f32,
-        ];
+        let (tb, t) = (self.preset.train_batch, self.preset.seq_len() - 1);
+        let mut ws = train::StepWorkspace::new(&self.preset.dims);
+        let mut theta_out = Vec::new();
+        let metrics = train::train_step_impl(
+            &self.preset,
+            mode,
+            &mut params,
+            &mut adam_m,
+            &mut adam_v,
+            &mut step,
+            &batch,
+            &mut ws,
+            &mut theta_out,
+        );
         let mut out = self.pack_state(params, adam_m, adam_v, step, metrics);
         out.push(HostTensor::f32(vec![tb, t], theta_out));
         Ok(out)

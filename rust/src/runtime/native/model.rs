@@ -12,8 +12,7 @@
 #![allow(clippy::needless_range_loop)]
 
 use super::kernels::{
-    self, attention_backward, attention_forward, gelu, gelu_grad, matmul, matmul_a_bt_acc,
-    matmul_at_b_acc,
+    self, attention_backward, attention_forward, gelu, gelu_grad, matmul_a_bt_acc, matmul_at_b_acc,
 };
 use crate::runtime::manifest::{Dtype, TensorSpec};
 use crate::runtime::tensor::HostTensor;
@@ -148,13 +147,24 @@ pub struct LnCache {
     y: Vec<f32>,
 }
 
-fn layernorm(x: &[f32], scale: &[f32], bias: &[f32], rows: usize, d: usize) -> LnCache {
-    let (y, mean, inv) = kernels::layernorm_stats(x, scale, bias, rows, d);
-    LnCache { x: x.to_vec(), inv, mean, y }
+impl LnCache {
+    fn empty() -> LnCache {
+        LnCache { x: Vec::new(), inv: Vec::new(), mean: Vec::new(), y: Vec::new() }
+    }
 }
 
-/// Returns `dx`; accumulates `dscale`/`dbias`.
-fn layernorm_backward(
+/// LayerNorm into a reused cache: the copy of `x` and the stats buffers
+/// keep their allocations across steps.
+fn layernorm_into(x: &[f32], scale: &[f32], bias: &[f32], rows: usize, d: usize, c: &mut LnCache) {
+    c.x.clear();
+    c.x.extend_from_slice(x);
+    kernels::layernorm_stats_into(x, scale, bias, rows, d, &mut c.y, &mut c.mean, &mut c.inv);
+}
+
+/// Backward of [`layernorm_into`]: writes `dx` into a reused buffer and
+/// accumulates `dscale`/`dbias`.
+#[allow(clippy::too_many_arguments)]
+fn layernorm_backward_into(
     cache: &LnCache,
     scale: &[f32],
     dy: &[f32],
@@ -162,8 +172,9 @@ fn layernorm_backward(
     d: usize,
     dscale: &mut [f32],
     dbias: &mut [f32],
-) -> Vec<f32> {
-    let mut dx = vec![0.0f32; rows * d];
+    dx: &mut Vec<f32>,
+) {
+    kernels::reset(dx, rows * d);
     for r in 0..rows {
         let x = &cache.x[r * d..(r + 1) * d];
         let dyr = &dy[r * d..(r + 1) * d];
@@ -187,7 +198,6 @@ fn layernorm_backward(
             out[j] = iv * (dxhat - m1 - xhat * m2);
         }
     }
-    dx
 }
 
 // ---------------------------------------------------------------------------
@@ -211,26 +221,87 @@ pub(crate) struct LayerCache {
     mlp_act: Vec<f32>,
 }
 
+impl LayerCache {
+    fn empty() -> LayerCache {
+        LayerCache {
+            ln1: LnCache::empty(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            probs: Vec::new(),
+            ctx: Vec::new(),
+            ln2: LnCache::empty(),
+            mlp_pre: Vec::new(),
+            mlp_act: Vec::new(),
+        }
+    }
+}
+
 pub struct Cache {
     b: usize,
     s: usize,
+    /// Residual stream `[b, s, d]` after the last layer (pre-lnf).
+    x: Vec<f32>,
     pub(crate) layers: Vec<LayerCache>,
     lnf: LnCache,
     /// Logits `[b, s, v]`.
     pub logits: Vec<f32>,
+    /// Scratch shared by the attention/MLP output projections.
+    tmp: Vec<f32>,
+}
+
+impl Cache {
+    /// An empty workspace for `dims`: every buffer grows on first use and
+    /// keeps its allocation across [`forward_into`] calls.
+    pub fn empty(dims: &Dims) -> Cache {
+        Cache {
+            b: 0,
+            s: 0,
+            x: Vec::new(),
+            layers: (0..dims.n_layers).map(|_| LayerCache::empty()).collect(),
+            lnf: LnCache::empty(),
+            logits: Vec::new(),
+            tmp: Vec::new(),
+        }
+    }
 }
 
 /// Full forward pass over a `[b, s]` token window.
 pub fn forward(dims: &Dims, p: &[&[f32]], tokens: &[i32], b: usize, s: usize) -> Cache {
+    let mut cache = Cache::empty(dims);
+    forward_into(dims, p, tokens, b, s, &mut cache);
+    cache
+}
+
+/// [`forward`] into a reused [`Cache`]: after the first call no buffer
+/// reallocates (same geometry), and the math is bit-identical to the
+/// allocating path (`matmul` is itself zero-then-accumulate).
+fn matmul_into(out: &mut Vec<f32>, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    kernels::reset(out, m * n);
+    kernels::matmul_acc(out, a, b, m, k, n);
+}
+
+pub fn forward_into(
+    dims: &Dims,
+    p: &[&[f32]],
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    cache: &mut Cache,
+) {
     let (d, v, f, h, hd) = (dims.d_model, dims.vocab, dims.d_ff, dims.n_heads, dims.head_dim());
     assert!(s <= dims.max_seq, "seq {s} exceeds max_seq {}", dims.max_seq);
     assert_eq!(tokens.len(), b * s);
+    assert_eq!(cache.layers.len(), dims.n_layers, "cache built for different dims");
     let rows = b * s;
+    cache.b = b;
+    cache.s = s;
+    let Cache { x, layers, lnf, logits, tmp, .. } = cache;
 
     // Embedding + positional.
     let embed = p[0];
     let pos_embed = p[1];
-    let mut x = vec![0.0f32; rows * d];
+    kernels::reset(x, rows * d);
     for bi in 0..b {
         for i in 0..s {
             let tok = tokens[bi * s + i] as usize;
@@ -243,49 +314,46 @@ pub fn forward(dims: &Dims, p: &[&[f32]], tokens: &[i32], b: usize, s: usize) ->
             }
         }
     }
-    let mut layers = Vec::with_capacity(dims.n_layers);
-    for layer in 0..dims.n_layers {
+    for (layer, lc) in layers.iter_mut().enumerate() {
         let base = dims.layer_base(layer);
-        let ln1 = layernorm(&x, p[base + L_LN1S], p[base + L_LN1B], rows, d);
-        let q = matmul(&ln1.y, p[base + L_WQ], rows, d, d);
-        let k = matmul(&ln1.y, p[base + L_WK], rows, d, d);
-        let vv = matmul(&ln1.y, p[base + L_WV], rows, d, d);
+        layernorm_into(x, p[base + L_LN1S], p[base + L_LN1B], rows, d, &mut lc.ln1);
+        matmul_into(&mut lc.q, &lc.ln1.y, p[base + L_WQ], rows, d, d);
+        matmul_into(&mut lc.k, &lc.ln1.y, p[base + L_WK], rows, d, d);
+        matmul_into(&mut lc.v, &lc.ln1.y, p[base + L_WV], rows, d, d);
 
         // Causal multi-head attention (row-parallel kernel).
-        let mut probs = vec![0.0f32; b * h * s * s];
-        let mut ctx = vec![0.0f32; rows * d];
-        attention_forward(b, s, h, hd, &q, &k, &vv, &mut probs, &mut ctx);
-        let attn_out = matmul(&ctx, p[base + L_WO], rows, d, d);
+        kernels::reset(&mut lc.probs, b * h * s * s);
+        kernels::reset(&mut lc.ctx, rows * d);
+        attention_forward(b, s, h, hd, &lc.q, &lc.k, &lc.v, &mut lc.probs, &mut lc.ctx);
+        matmul_into(tmp, &lc.ctx, p[base + L_WO], rows, d, d);
         for j in 0..rows * d {
-            x[j] += attn_out[j];
+            x[j] += tmp[j];
         }
 
-        let ln2 = layernorm(&x, p[base + L_LN2S], p[base + L_LN2B], rows, d);
-        let mut mlp_pre = matmul(&ln2.y, p[base + L_W1], rows, d, f);
+        layernorm_into(x, p[base + L_LN2S], p[base + L_LN2B], rows, d, &mut lc.ln2);
+        matmul_into(&mut lc.mlp_pre, &lc.ln2.y, p[base + L_W1], rows, d, f);
         let b1 = p[base + L_B1];
         for r in 0..rows {
-            let row = &mut mlp_pre[r * f..(r + 1) * f];
+            let row = &mut lc.mlp_pre[r * f..(r + 1) * f];
             for j in 0..f {
                 row[j] += b1[j];
             }
         }
-        let mlp_act: Vec<f32> = mlp_pre.iter().map(|&z| gelu(z)).collect();
-        let mlp_out = matmul(&mlp_act, p[base + L_W2], rows, f, d);
+        lc.mlp_act.clear();
+        lc.mlp_act.extend(lc.mlp_pre.iter().map(|&z| gelu(z)));
+        matmul_into(tmp, &lc.mlp_act, p[base + L_W2], rows, f, d);
         let b2 = p[base + L_B2];
         for r in 0..rows {
             let xr = &mut x[r * d..(r + 1) * d];
-            let mr = &mlp_out[r * d..(r + 1) * d];
+            let mr = &tmp[r * d..(r + 1) * d];
             for j in 0..d {
                 xr[j] += mr[j] + b2[j];
             }
         }
-
-        layers.push(LayerCache { ln1, q, k, v: vv, probs, ctx, ln2, mlp_pre, mlp_act });
     }
 
-    let lnf = layernorm(&x, p[dims.lnf_scale_idx()], p[dims.lnf_scale_idx() + 1], rows, d);
-    let logits = matmul(&lnf.y, p[dims.unembed_idx()], rows, d, v);
-    Cache { b, s, layers, lnf, logits }
+    layernorm_into(x, p[dims.lnf_scale_idx()], p[dims.lnf_scale_idx() + 1], rows, d, lnf);
+    matmul_into(logits, &lnf.y, p[dims.unembed_idx()], rows, d, v);
 }
 
 // ---------------------------------------------------------------------------
@@ -300,13 +368,27 @@ pub struct SeqStats {
     pub probs: Vec<f32>,
 }
 
+impl SeqStats {
+    pub fn empty() -> SeqStats {
+        SeqStats { logp: Vec::new(), entropy: Vec::new(), probs: Vec::new() }
+    }
+}
+
 /// Score positions `0..s-1`: position t predicts `tokens[:, t+1]`.
 pub fn sequence_logp(dims: &Dims, cache: &Cache, tokens: &[i32]) -> SeqStats {
+    let mut stats = SeqStats::empty();
+    sequence_logp_into(dims, cache, tokens, &mut stats);
+    stats
+}
+
+/// [`sequence_logp`] into a reused [`SeqStats`].
+pub fn sequence_logp_into(dims: &Dims, cache: &Cache, tokens: &[i32], stats: &mut SeqStats) {
     let (b, s, v) = (cache.b, cache.s, dims.vocab);
     let t = s - 1;
-    let mut logp = vec![0.0f32; b * t];
-    let mut entropy = vec![0.0f32; b * t];
-    let mut probs = vec![0.0f32; b * t * v];
+    kernels::reset(&mut stats.logp, b * t);
+    kernels::reset(&mut stats.entropy, b * t);
+    kernels::reset(&mut stats.probs, b * t * v);
+    let SeqStats { logp, entropy, probs } = stats;
     for bi in 0..b {
         for ti in 0..t {
             let z = &cache.logits[(bi * s + ti) * v..(bi * s + ti + 1) * v];
@@ -330,7 +412,6 @@ pub fn sequence_logp(dims: &Dims, cache: &Cache, tokens: &[i32]) -> SeqStats {
             entropy[bi * t + ti] = ent;
         }
     }
-    SeqStats { logp, entropy, probs }
 }
 
 /// Expand a per-position log-prob gradient into a logits gradient:
@@ -343,10 +424,25 @@ pub fn dlogits_from_dlogp(
     tokens: &[i32],
     dlogp: &[f32],
 ) -> Vec<f32> {
+    let mut dlogits = Vec::new();
+    dlogits_from_dlogp_into(dims, cache, stats, tokens, dlogp, &mut dlogits);
+    dlogits
+}
+
+/// [`dlogits_from_dlogp`] into a reused buffer (re-zeroed here — the loop
+/// skips masked positions and the unscored last position).
+pub fn dlogits_from_dlogp_into(
+    dims: &Dims,
+    cache: &Cache,
+    stats: &SeqStats,
+    tokens: &[i32],
+    dlogp: &[f32],
+    dlogits: &mut Vec<f32>,
+) {
     let (b, s, v) = (cache.b, cache.s, dims.vocab);
     let t = s - 1;
     assert_eq!(dlogp.len(), b * t);
-    let mut dlogits = vec![0.0f32; b * s * v];
+    kernels::reset(dlogits, b * s * v);
     for bi in 0..b {
         for ti in 0..t {
             let g = dlogp[bi * t + ti];
@@ -362,11 +458,32 @@ pub fn dlogits_from_dlogp(
             out[target] += g;
         }
     }
-    dlogits
 }
 
 // ---------------------------------------------------------------------------
 // Backward
+
+/// Reused scratch for [`backward_into`]: the residual-stream gradient, one
+/// activation-width buffer, and the attention gradient buffers — sized on
+/// first use, reused every step.
+#[derive(Default)]
+pub struct BackwardWs {
+    dxf: Vec<f32>,
+    dx: Vec<f32>,
+    dres: Vec<f32>,
+    dact: Vec<f32>,
+    dh: Vec<f32>,
+    dctx: Vec<f32>,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+}
+
+impl BackwardWs {
+    pub fn new() -> BackwardWs {
+        BackwardWs::default()
+    }
+}
 
 /// Backprop `dlogits [b, s, v]` through the cached forward pass; returns
 /// parameter gradients in manifest order.
@@ -377,23 +494,44 @@ pub fn backward(
     tokens: &[i32],
     dlogits: &[f32],
 ) -> Vec<Vec<f32>> {
+    let specs = dims.param_specs();
+    let mut grads: Vec<Vec<f32>> = specs.iter().map(|sp| vec![0.0f32; sp.elements()]).collect();
+    let mut ws = BackwardWs::new();
+    backward_into(dims, p, cache, tokens, dlogits, &mut grads, &mut ws);
+    grads
+}
+
+/// [`backward`] into caller-owned gradient tensors (re-zeroed here) and a
+/// reused [`BackwardWs`]. Accumulation order matches the allocating path
+/// exactly, so results are bit-identical.
+pub fn backward_into(
+    dims: &Dims,
+    p: &[&[f32]],
+    cache: &Cache,
+    tokens: &[i32],
+    dlogits: &[f32],
+    grads: &mut [Vec<f32>],
+    ws: &mut BackwardWs,
+) {
     let (d, v, f, h, hd) = (dims.d_model, dims.vocab, dims.d_ff, dims.n_heads, dims.head_dim());
     let (b, s) = (cache.b, cache.s);
     let rows = b * s;
-    let specs = dims.param_specs();
-    let mut grads: Vec<Vec<f32>> = specs.iter().map(|sp| vec![0.0f32; sp.elements()]).collect();
+    debug_assert_eq!(grads.len(), dims.n_params());
+    for g in grads.iter_mut() {
+        g.fill(0.0);
+    }
 
     // Unembed + final LN.
     let unembed = dims.unembed_idx();
     matmul_at_b_acc(&mut grads[unembed], &cache.lnf.y, dlogits, rows, d, v);
-    let mut dxf = vec![0.0f32; rows * d];
-    matmul_a_bt_acc(&mut dxf, dlogits, p[unembed], rows, v, d);
+    kernels::reset(&mut ws.dxf, rows * d);
+    matmul_a_bt_acc(&mut ws.dxf, dlogits, p[unembed], rows, v, d);
     let lnf_s = dims.lnf_scale_idx();
-    let (gs, rest) = grads.split_at_mut(lnf_s + 1);
-    let mut dx = {
+    {
+        let (gs, rest) = grads.split_at_mut(lnf_s + 1);
         let (dscale, dbias) = (gs.last_mut().unwrap(), &mut rest[0]);
-        layernorm_backward(&cache.lnf, p[lnf_s], &dxf, rows, d, dscale, dbias)
-    };
+        layernorm_backward_into(&cache.lnf, p[lnf_s], &ws.dxf, rows, d, dscale, dbias, &mut ws.dx);
+    }
 
     for layer in (0..dims.n_layers).rev() {
         let base = dims.layer_base(layer);
@@ -401,71 +539,76 @@ pub fn backward(
 
         // --- MLP: x2 = x1 + gelu(ln2(x1)·w1 + b1)·w2 + b2 ----------------
         {
-            let mut dact = vec![0.0f32; rows * f];
-            matmul_a_bt_acc(&mut dact, &dx, p[base + L_W2], rows, d, f);
-            matmul_at_b_acc(&mut grads[base + L_W2], &lc.mlp_act, &dx, rows, f, d);
+            kernels::reset(&mut ws.dact, rows * f);
+            matmul_a_bt_acc(&mut ws.dact, &ws.dx, p[base + L_W2], rows, d, f);
+            matmul_at_b_acc(&mut grads[base + L_W2], &lc.mlp_act, &ws.dx, rows, f, d);
             {
                 let db2 = &mut grads[base + L_B2];
                 for r in 0..rows {
-                    let dr = &dx[r * d..(r + 1) * d];
+                    let dr = &ws.dx[r * d..(r + 1) * d];
                     for j in 0..d {
                         db2[j] += dr[j];
                     }
                 }
             }
-            let mut dpre = dact;
+            // dact becomes dpre in place (the allocating path moved it).
             for i in 0..rows * f {
-                dpre[i] *= gelu_grad(lc.mlp_pre[i]);
+                ws.dact[i] *= gelu_grad(lc.mlp_pre[i]);
             }
             {
                 let db1 = &mut grads[base + L_B1];
                 for r in 0..rows {
-                    let dr = &dpre[r * f..(r + 1) * f];
+                    let dr = &ws.dact[r * f..(r + 1) * f];
                     for j in 0..f {
                         db1[j] += dr[j];
                     }
                 }
             }
-            matmul_at_b_acc(&mut grads[base + L_W1], &lc.ln2.y, &dpre, rows, d, f);
-            let mut dh2 = vec![0.0f32; rows * d];
-            matmul_a_bt_acc(&mut dh2, &dpre, p[base + L_W1], rows, f, d);
+            matmul_at_b_acc(&mut grads[base + L_W1], &lc.ln2.y, &ws.dact, rows, d, f);
+            kernels::reset(&mut ws.dh, rows * d);
+            matmul_a_bt_acc(&mut ws.dh, &ws.dact, p[base + L_W1], rows, f, d);
             let (gs, gb) = {
                 let (a, bpart) = grads.split_at_mut(base + L_LN2B);
                 (&mut a[base + L_LN2S], &mut bpart[0])
             };
-            let dres = layernorm_backward(&lc.ln2, p[base + L_LN2S], &dh2, rows, d, gs, gb);
+            layernorm_backward_into(
+                &lc.ln2, p[base + L_LN2S], &ws.dh, rows, d, gs, gb, &mut ws.dres,
+            );
             for i in 0..rows * d {
-                dx[i] += dres[i];
+                ws.dx[i] += ws.dres[i];
             }
         }
 
         // --- Attention: x1 = x0 + (softmax(q·kᵀ)·v)·wo -------------------
         {
-            let mut dctx = vec![0.0f32; rows * d];
-            matmul_a_bt_acc(&mut dctx, &dx, p[base + L_WO], rows, d, d);
-            matmul_at_b_acc(&mut grads[base + L_WO], &lc.ctx, &dx, rows, d, d);
+            kernels::reset(&mut ws.dctx, rows * d);
+            matmul_a_bt_acc(&mut ws.dctx, &ws.dx, p[base + L_WO], rows, d, d);
+            matmul_at_b_acc(&mut grads[base + L_WO], &lc.ctx, &ws.dx, rows, d, d);
 
-            let mut dq = vec![0.0f32; rows * d];
-            let mut dk = vec![0.0f32; rows * d];
-            let mut dv = vec![0.0f32; rows * d];
+            kernels::reset(&mut ws.dq, rows * d);
+            kernels::reset(&mut ws.dk, rows * d);
+            kernels::reset(&mut ws.dv, rows * d);
             attention_backward(
-                b, s, h, hd, &lc.probs, &lc.q, &lc.k, &lc.v, &dctx, &mut dq, &mut dk, &mut dv,
+                b, s, h, hd, &lc.probs, &lc.q, &lc.k, &lc.v, &ws.dctx, &mut ws.dq, &mut ws.dk,
+                &mut ws.dv,
             );
 
-            matmul_at_b_acc(&mut grads[base + L_WQ], &lc.ln1.y, &dq, rows, d, d);
-            matmul_at_b_acc(&mut grads[base + L_WK], &lc.ln1.y, &dk, rows, d, d);
-            matmul_at_b_acc(&mut grads[base + L_WV], &lc.ln1.y, &dv, rows, d, d);
-            let mut dh1 = vec![0.0f32; rows * d];
-            matmul_a_bt_acc(&mut dh1, &dq, p[base + L_WQ], rows, d, d);
-            matmul_a_bt_acc(&mut dh1, &dk, p[base + L_WK], rows, d, d);
-            matmul_a_bt_acc(&mut dh1, &dv, p[base + L_WV], rows, d, d);
+            matmul_at_b_acc(&mut grads[base + L_WQ], &lc.ln1.y, &ws.dq, rows, d, d);
+            matmul_at_b_acc(&mut grads[base + L_WK], &lc.ln1.y, &ws.dk, rows, d, d);
+            matmul_at_b_acc(&mut grads[base + L_WV], &lc.ln1.y, &ws.dv, rows, d, d);
+            kernels::reset(&mut ws.dh, rows * d);
+            matmul_a_bt_acc(&mut ws.dh, &ws.dq, p[base + L_WQ], rows, d, d);
+            matmul_a_bt_acc(&mut ws.dh, &ws.dk, p[base + L_WK], rows, d, d);
+            matmul_a_bt_acc(&mut ws.dh, &ws.dv, p[base + L_WV], rows, d, d);
             let (gs, gb) = {
                 let (a, bpart) = grads.split_at_mut(base + L_LN1B);
                 (&mut a[base + L_LN1S], &mut bpart[0])
             };
-            let dres = layernorm_backward(&lc.ln1, p[base + L_LN1S], &dh1, rows, d, gs, gb);
+            layernorm_backward_into(
+                &lc.ln1, p[base + L_LN1S], &ws.dh, rows, d, gs, gb, &mut ws.dres,
+            );
             for i in 0..rows * d {
-                dx[i] += dres[i];
+                ws.dx[i] += ws.dres[i];
             }
         }
     }
@@ -479,7 +622,7 @@ pub fn backward(
         for bi in 0..b {
             for i in 0..s {
                 let tok = tokens[bi * s + i] as usize;
-                let dr = &dx[(bi * s + i) * d..(bi * s + i + 1) * d];
+                let dr = &ws.dx[(bi * s + i) * d..(bi * s + i + 1) * d];
                 let er = &mut gembed[tok * d..(tok + 1) * d];
                 let pr = &mut gpos[i * d..(i + 1) * d];
                 for j in 0..d {
@@ -489,7 +632,6 @@ pub fn backward(
             }
         }
     }
-    grads
 }
 
 // ---------------------------------------------------------------------------

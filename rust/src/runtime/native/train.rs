@@ -1,0 +1,383 @@
+//! Stateful train sessions for the native backend, plus the step math
+//! shared with the positional `train_*`/`pretrain` executables.
+//!
+//! [`train_step_impl`]/[`pretrain_step_impl`] are the single source of truth
+//! for the fused A-3PO loss (paper Eq. 2/3), the backward pass, and the Adam
+//! update. The positional executables in [`super`] call them with freshly
+//! cloned state and a throwaway [`StepWorkspace`] (the historical cost
+//! profile); [`NativeTrainSession`] calls them with state and workspace it
+//! owns across steps — identical math, no per-step parameter/moment copies
+//! and no activation reallocation.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::backend::{TrainInputs, TrainSession, TrainSessionFactory, TrainStepOutput};
+use crate::runtime::params::ParamSnapshot;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::train::TrainState;
+
+use super::kernels;
+use super::model::{self, BackwardWs, Cache, Dims, SeqStats};
+use super::{masked_sum, LossMode, NativePreset, N_METRICS};
+
+/// Every activation, gradient, and scratch buffer one train step needs,
+/// sized on first use from the preset geometry and reused afterwards.
+pub struct StepWorkspace {
+    cache: Cache,
+    stats: SeqStats,
+    /// Parameter gradients in manifest order (re-zeroed each backward).
+    grads: Vec<Vec<f32>>,
+    bws: BackwardWs,
+    dlogits: Vec<f32>,
+    dlogp: Vec<f32>,
+}
+
+impl StepWorkspace {
+    pub fn new(dims: &Dims) -> StepWorkspace {
+        StepWorkspace {
+            cache: Cache::empty(dims),
+            stats: SeqStats::empty(),
+            grads: dims.param_specs().iter().map(|sp| vec![0.0f32; sp.elements()]).collect(),
+            bws: BackwardWs::new(),
+            dlogits: Vec::new(),
+            dlogp: Vec::new(),
+        }
+    }
+}
+
+/// One RL step over the full train batch: `n_minibatch` sequential
+/// forward/backward/Adam passes mutating `params`/`adam_m`/`adam_v`/`step`
+/// in place. `theta_out` receives the θ log-probs `[tb, t]`. The caller
+/// validates input lengths (and that `Frozen` mode has `prox_logp`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn train_step_impl(
+    preset: &NativePreset,
+    mode: LossMode,
+    params: &mut [Vec<f32>],
+    adam_m: &mut [Vec<f32>],
+    adam_v: &mut [Vec<f32>],
+    step: &mut i32,
+    inputs: &TrainInputs<'_>,
+    ws: &mut StepWorkspace,
+    theta_out: &mut Vec<f32>,
+) -> [f32; N_METRICS] {
+    let dims = &preset.dims;
+    let (tb, s) = (preset.train_batch, preset.seq_len());
+    let t = s - 1;
+    let n_mb = preset.n_minibatch;
+    let mb = tb / n_mb;
+    let clip_eps = preset.clip_eps;
+
+    kernels::reset(theta_out, tb * t);
+    let mut losses = 0.0f64;
+    let mut ents = 0.0f64;
+    let mut ratios = 0.0f64;
+    let mut kls = 0.0f64;
+    let mut gnorms = 0.0f64;
+    let mut max_iw = f32::NEG_INFINITY;
+    let mut min_iw = f32::INFINITY;
+    let mut clip_total = 0.0f32;
+
+    for i in 0..n_mb {
+        let (r0, r1) = (i * mb, (i + 1) * mb);
+        let tok_mb = &inputs.tokens[r0 * s..r1 * s];
+        let mask_mb = &inputs.mask[r0 * t..r1 * t];
+        let behav_mb = &inputs.behav_logp[r0 * t..r1 * t];
+        let adv_mb = &inputs.adv[r0 * t..r1 * t];
+        let alpha_mb = &inputs.alpha[r0..r1];
+        let prox_mb = inputs.prox_logp.map(|p| &p[r0 * t..r1 * t]);
+
+        let p: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+        model::forward_into(dims, &p, tok_mb, mb, s, &mut ws.cache);
+        model::sequence_logp_into(dims, &ws.cache, tok_mb, &mut ws.stats);
+        theta_out[r0 * t..r1 * t].copy_from_slice(&ws.stats.logp);
+
+        let denom = mask_mb.iter().sum::<f32>().max(1.0);
+        let mut obj_sum = 0.0f32;
+        let mut ent_sum = 0.0f32;
+        let mut ratio_sum = 0.0f32;
+        let mut kl_sum = 0.0f32;
+        let mut clip_sum = 0.0f32;
+        let mut mb_max_iw = f32::NEG_INFINITY;
+        let mut mb_min_iw = f32::INFINITY;
+        kernels::reset(&mut ws.dlogp, mb * t);
+        for row in 0..mb {
+            let a = alpha_mb[row];
+            for ti in 0..t {
+                let idx = row * t + ti;
+                let mk = mask_mb[idx];
+                let theta = ws.stats.logp[idx];
+                let bh = behav_mb[idx];
+                // The anchor is detached in every mode (paper Eq. 3):
+                // the objective's only gradient path is θ in the ratio.
+                let prox = match mode {
+                    LossMode::Coupled => bh,
+                    LossMode::Frozen => prox_mb.expect("frozen mode needs prox_logp")[idx],
+                    LossMode::Interp => a * bh + (1.0 - a) * theta,
+                };
+                let iw = (prox - bh).exp();
+                let ratio = (theta - prox).exp();
+                let av = adv_mb[idx];
+                let unclipped = ratio * av;
+                let clipped_term = ratio.clamp(1.0 - clip_eps, 1.0 + clip_eps) * av;
+                let is_clipped = if unclipped > clipped_term { 1.0f32 } else { 0.0 };
+                let obj = iw * unclipped.min(clipped_term);
+                if mk > 0.0 {
+                    obj_sum += obj * mk;
+                    ent_sum += ws.stats.entropy[idx] * mk;
+                    ratio_sum += ratio * mk;
+                    kl_sum += (bh - theta) * mk;
+                    clip_sum += is_clipped * mk;
+                    mb_max_iw = mb_max_iw.max(iw);
+                    mb_min_iw = mb_min_iw.min(iw);
+                    // loss = -sum(obj*mask)/denom; unclipped branch only.
+                    ws.dlogp[idx] = -mk * iw * av * ratio * (1.0 - is_clipped) / denom;
+                }
+            }
+        }
+
+        model::dlogits_from_dlogp_into(
+            dims,
+            &ws.cache,
+            &ws.stats,
+            tok_mb,
+            &ws.dlogp,
+            &mut ws.dlogits,
+        );
+        model::backward_into(dims, &p, &ws.cache, tok_mb, &ws.dlogits, &mut ws.grads, &mut ws.bws);
+        drop(p);
+        let gnorm = model::adam_update(
+            &preset.adam,
+            preset.rl_lr,
+            params,
+            adam_m,
+            adam_v,
+            &ws.grads,
+            *step,
+        );
+        *step += 1;
+
+        losses += (-obj_sum / denom) as f64;
+        ents += (ent_sum / denom) as f64;
+        ratios += (ratio_sum / denom) as f64;
+        kls += (kl_sum / denom) as f64;
+        gnorms += gnorm as f64;
+        max_iw = max_iw.max(mb_max_iw);
+        min_iw = min_iw.min(mb_min_iw);
+        clip_total += clip_sum;
+    }
+
+    let inv = 1.0 / n_mb as f64;
+    [
+        (losses * inv) as f32,
+        (ents * inv) as f32,
+        max_iw,
+        min_iw,
+        clip_total,
+        (ratios * inv) as f32,
+        (gnorms * inv) as f32,
+        (kls * inv) as f32,
+    ]
+}
+
+/// One supervised warm-up step over the full train batch (single pass, no
+/// minibatching — matches the positional `pretrain` executable).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pretrain_step_impl(
+    preset: &NativePreset,
+    params: &mut [Vec<f32>],
+    adam_m: &mut [Vec<f32>],
+    adam_v: &mut [Vec<f32>],
+    step: &mut i32,
+    tokens: &[i32],
+    mask: &[f32],
+    ws: &mut StepWorkspace,
+) -> [f32; N_METRICS] {
+    let dims = &preset.dims;
+    let (b, s) = (preset.train_batch, preset.seq_len());
+
+    let p: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+    model::forward_into(dims, &p, tokens, b, s, &mut ws.cache);
+    model::sequence_logp_into(dims, &ws.cache, tokens, &mut ws.stats);
+    let denom = mask.iter().sum::<f32>().max(1.0);
+    let loss = -masked_sum(&ws.stats.logp, mask) / denom;
+    let entropy = masked_sum(&ws.stats.entropy, mask) / denom;
+
+    // d(-masked_mean(logp))/dlogp = -mask/denom.
+    ws.dlogp.clear();
+    ws.dlogp.extend(mask.iter().map(|&mk| -mk / denom));
+    model::dlogits_from_dlogp_into(dims, &ws.cache, &ws.stats, tokens, &ws.dlogp, &mut ws.dlogits);
+    model::backward_into(dims, &p, &ws.cache, tokens, &ws.dlogits, &mut ws.grads, &mut ws.bws);
+    drop(p);
+    let gnorm =
+        model::adam_update(&preset.adam, preset.lr, params, adam_m, adam_v, &ws.grads, *step);
+    *step += 1;
+    [loss, entropy, 0.0, 0.0, 0.0, 0.0, gnorm, 0.0]
+}
+
+/// The native backend's [`TrainSession`]: owns parameters, Adam moments,
+/// the step counter, and a [`StepWorkspace`], all mutated in place.
+pub struct NativeTrainSession {
+    preset: NativePreset,
+    mode: LossMode,
+    params: Vec<Vec<f32>>,
+    adam_m: Vec<Vec<f32>>,
+    adam_v: Vec<Vec<f32>>,
+    opt_step: i32,
+    ws: StepWorkspace,
+    theta_buf: Vec<f32>,
+}
+
+impl NativeTrainSession {
+    fn pack(&self, group: &[Vec<f32>]) -> Vec<HostTensor> {
+        self.preset
+            .dims
+            .param_specs()
+            .iter()
+            .zip(group)
+            .map(|(spec, data)| HostTensor::f32(spec.shape.clone(), data.clone()))
+            .collect()
+    }
+}
+
+impl TrainSession for NativeTrainSession {
+    fn opt_step(&self) -> i32 {
+        self.opt_step
+    }
+
+    fn train_step(&mut self, inputs: &TrainInputs<'_>) -> Result<TrainStepOutput> {
+        let (tb, s) = (self.preset.train_batch, self.preset.seq_len());
+        let t = s - 1;
+        if inputs.tokens.len() != tb * s {
+            bail!("tokens: {} elements, expected [{tb}, {s}]", inputs.tokens.len());
+        }
+        for (name, buf) in [
+            ("mask", inputs.mask),
+            ("behav_logp", inputs.behav_logp),
+            ("adv", inputs.adv),
+        ] {
+            if buf.len() != tb * t {
+                bail!("{name}: {} elements, expected [{tb}, {t}]", buf.len());
+            }
+        }
+        if inputs.alpha.len() != tb {
+            bail!("alpha: {} elements, expected [{tb}]", inputs.alpha.len());
+        }
+        match inputs.prox_logp {
+            Some(p) if p.len() != tb * t => {
+                bail!("prox_logp: {} elements, expected [{tb}, {t}]", p.len())
+            }
+            None if self.mode == LossMode::Frozen => {
+                bail!("frozen-anchor mode requires prox_logp")
+            }
+            _ => {}
+        }
+        let metrics = train_step_impl(
+            &self.preset,
+            self.mode,
+            &mut self.params,
+            &mut self.adam_m,
+            &mut self.adam_v,
+            &mut self.opt_step,
+            inputs,
+            &mut self.ws,
+            &mut self.theta_buf,
+        );
+        Ok(TrainStepOutput {
+            metrics: metrics.to_vec(),
+            theta_logp: Some(self.theta_buf.clone()),
+        })
+    }
+
+    fn pretrain_step(&mut self, tokens: &[i32], mask: &[f32]) -> Result<TrainStepOutput> {
+        let (tb, s) = (self.preset.train_batch, self.preset.seq_len());
+        let t = s - 1;
+        if tokens.len() != tb * s {
+            bail!("tokens: {} elements, expected [{tb}, {s}]", tokens.len());
+        }
+        if mask.len() != tb * t {
+            bail!("mask: {} elements, expected [{tb}, {t}]", mask.len());
+        }
+        let metrics = pretrain_step_impl(
+            &self.preset,
+            &mut self.params,
+            &mut self.adam_m,
+            &mut self.adam_v,
+            &mut self.opt_step,
+            tokens,
+            mask,
+            &mut self.ws,
+        );
+        Ok(TrainStepOutput { metrics: metrics.to_vec(), theta_logp: None })
+    }
+
+    fn snapshot_params(&self) -> Result<Vec<HostTensor>> {
+        Ok(self.pack(&self.params))
+    }
+
+    fn export_state(&self) -> Result<TrainState> {
+        Ok(TrainState {
+            opt_step: self.opt_step,
+            params: self.pack(&self.params),
+            adam_m: self.pack(&self.adam_m),
+            adam_v: self.pack(&self.adam_v),
+        })
+    }
+}
+
+/// Creates [`NativeTrainSession`]s, keyed by train-executable name so the
+/// runtime stays decoupled from `crate::config::Method`.
+pub struct NativeTrainFactory {
+    preset: NativePreset,
+}
+
+impl NativeTrainFactory {
+    pub fn new(preset: NativePreset) -> NativeTrainFactory {
+        NativeTrainFactory { preset }
+    }
+}
+
+impl TrainSessionFactory for NativeTrainFactory {
+    fn start(
+        &self,
+        train_exec: &str,
+        initial: &Arc<ParamSnapshot>,
+    ) -> Result<Box<dyn TrainSession>> {
+        let mode = match train_exec {
+            "train_sync" => LossMode::Coupled,
+            "train_recompute" => LossMode::Frozen,
+            "train_loglinear" => LossMode::Interp,
+            other => bail!(
+                "native train sessions exist for train_sync|train_recompute|train_loglinear, \
+                 not {other:?}"
+            ),
+        };
+        let specs = self.preset.dims.param_specs();
+        if initial.params.len() != specs.len() {
+            bail!(
+                "initial snapshot has {} tensors, preset {} expects {}",
+                initial.params.len(),
+                self.preset.name,
+                specs.len()
+            );
+        }
+        let mut params = Vec::with_capacity(specs.len());
+        for (tensor, spec) in initial.params.iter().zip(&specs) {
+            tensor.check(spec)?;
+            params.push(tensor.as_f32()?.to_vec());
+        }
+        let zeros: Vec<Vec<f32>> = specs.iter().map(|sp| vec![0.0f32; sp.elements()]).collect();
+        Ok(Box::new(NativeTrainSession {
+            mode,
+            params,
+            adam_m: zeros.clone(),
+            adam_v: zeros,
+            opt_step: 0,
+            ws: StepWorkspace::new(&self.preset.dims),
+            theta_buf: Vec::new(),
+            preset: self.preset.clone(),
+        }))
+    }
+}

@@ -1,0 +1,169 @@
+//! Shared training-path types: the exportable optimiser state and the
+//! spec-driven unpacker for positional train-executable outputs.
+//!
+//! Train executables return `params… m.… v.… step metrics [theta_logp]` in
+//! manifest order. Historically the trainer unpacked that with arithmetic on
+//! `outs.len()` and bare `split_off` calls; [`TrainOutputs::unpack`] instead
+//! classifies every output by its [`TensorSpec::name`] against the
+//! [`ExecSpec`], so a missing or extra tensor fails with a named error
+//! instead of silently shifting the split points.
+
+use anyhow::{bail, Result};
+
+use super::manifest::ExecSpec;
+use super::tensor::HostTensor;
+
+/// The full optimiser state of one training run, exportable from either
+/// train path (session [`super::backend::TrainSession::export_state`] or
+/// legacy positional tensors) for checkpointing. Tensors are in manifest
+/// parameter order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    pub opt_step: i32,
+    pub params: Vec<HostTensor>,
+    pub adam_m: Vec<HostTensor>,
+    pub adam_v: Vec<HostTensor>,
+}
+
+/// Named outputs of one positional train/pretrain executable call.
+#[derive(Debug)]
+pub struct TrainOutputs {
+    pub params: Vec<HostTensor>,
+    pub adam_m: Vec<HostTensor>,
+    pub adam_v: Vec<HostTensor>,
+    /// Optimiser step counter as reported by the executable.
+    pub opt_step: i32,
+    /// Metrics vector (layout [`crate::metrics::TRAIN_METRIC_NAMES`]).
+    pub metrics: HostTensor,
+    /// θ log-probs `[train_batch, gen_len]` — train executables only;
+    /// `pretrain` has no use for them.
+    pub theta_logp: Option<HostTensor>,
+}
+
+impl TrainOutputs {
+    /// Classify `outs` by the output names in `spec`: `"step"`, `"metrics"`
+    /// and `"theta_logp"` are singletons, `"m."`/`"v."` prefixes are Adam
+    /// moments, everything else is a parameter tensor. (Parameter names —
+    /// `embed`, `layerN.*`, `lnf_*`, … — never start with `m.`/`v.`.)
+    pub fn unpack(spec: &ExecSpec, outs: Vec<HostTensor>, n_params: usize) -> Result<TrainOutputs> {
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, spec declares {}",
+                spec.name,
+                outs.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut params = Vec::with_capacity(n_params);
+        let mut adam_m = Vec::with_capacity(n_params);
+        let mut adam_v = Vec::with_capacity(n_params);
+        let mut opt_step: Option<i32> = None;
+        let mut metrics: Option<HostTensor> = None;
+        let mut theta_logp: Option<HostTensor> = None;
+        for (t, ospec) in outs.into_iter().zip(&spec.outputs) {
+            match ospec.name.as_str() {
+                "step" => opt_step = Some(t.scalar_i32_value()?),
+                "metrics" => metrics = Some(t),
+                "theta_logp" => theta_logp = Some(t),
+                name if name.starts_with("m.") => adam_m.push(t),
+                name if name.starts_with("v.") => adam_v.push(t),
+                _ => params.push(t),
+            }
+        }
+        if params.len() != n_params || adam_m.len() != n_params || adam_v.len() != n_params {
+            bail!(
+                "{}: output classes params/m/v counted {}/{}/{}, expected {} each",
+                spec.name,
+                params.len(),
+                adam_m.len(),
+                adam_v.len(),
+                n_params
+            );
+        }
+        let Some(opt_step) = opt_step else {
+            bail!("{}: no output named \"step\"", spec.name);
+        };
+        let Some(metrics) = metrics else {
+            bail!("{}: no output named \"metrics\"", spec.name);
+        };
+        Ok(TrainOutputs { params, adam_m, adam_v, opt_step, metrics, theta_logp })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Dtype, TensorSpec};
+
+    fn t(name: &str, dtype: Dtype) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: vec![2], dtype }
+    }
+
+    fn spec(outputs: Vec<TensorSpec>) -> ExecSpec {
+        ExecSpec {
+            name: "train_test".into(),
+            file: "none".into(),
+            inputs: vec![],
+            outputs,
+            hlo_bytes: 0,
+        }
+    }
+
+    fn f(v: f32) -> HostTensor {
+        HostTensor::f32(vec![2], vec![v, v])
+    }
+
+    #[test]
+    fn unpack_classifies_by_name() {
+        let s = spec(vec![
+            t("embed", Dtype::F32),
+            t("m.embed", Dtype::F32),
+            t("v.embed", Dtype::F32),
+            TensorSpec { name: "step".into(), shape: vec![], dtype: Dtype::I32 },
+            t("metrics", Dtype::F32),
+            t("theta_logp", Dtype::F32),
+        ]);
+        let outs = vec![f(1.0), f(2.0), f(3.0), HostTensor::scalar_i32(7), f(4.0), f(5.0)];
+        let u = TrainOutputs::unpack(&s, outs, 1).unwrap();
+        assert_eq!(u.params, vec![f(1.0)]);
+        assert_eq!(u.adam_m, vec![f(2.0)]);
+        assert_eq!(u.adam_v, vec![f(3.0)]);
+        assert_eq!(u.opt_step, 7);
+        assert_eq!(u.metrics, f(4.0));
+        assert_eq!(u.theta_logp, Some(f(5.0)));
+    }
+
+    #[test]
+    fn unpack_rejects_wrong_arity() {
+        let s = spec(vec![t("embed", Dtype::F32)]);
+        let e = TrainOutputs::unpack(&s, vec![], 1).unwrap_err();
+        assert!(e.to_string().contains("got 0 outputs"), "{e}");
+    }
+
+    #[test]
+    fn unpack_rejects_missing_named_outputs() {
+        // No "step"/"metrics" in the spec: count mismatch or named error.
+        let s = spec(vec![
+            t("embed", Dtype::F32),
+            t("m.embed", Dtype::F32),
+            t("v.embed", Dtype::F32),
+            t("metrics", Dtype::F32),
+        ]);
+        let outs = vec![f(1.0), f(2.0), f(3.0), f(4.0)];
+        let e = TrainOutputs::unpack(&s, outs, 1).unwrap_err();
+        assert!(e.to_string().contains("no output named \"step\""), "{e}");
+    }
+
+    #[test]
+    fn unpack_rejects_param_count_mismatch() {
+        let s = spec(vec![
+            t("embed", Dtype::F32),
+            t("m.embed", Dtype::F32),
+            TensorSpec { name: "step".into(), shape: vec![], dtype: Dtype::I32 },
+            t("metrics", Dtype::F32),
+        ]);
+        let outs = vec![f(1.0), f(2.0), HostTensor::scalar_i32(1), f(3.0)];
+        let e = TrainOutputs::unpack(&s, outs, 1).unwrap_err();
+        assert!(e.to_string().contains("params/m/v"), "{e}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Golden parity: the stateful train-session path and the positional
+//! executable path must run *identical* math. Both paths funnel into the
+//! same native step kernels, so this pins them bit-for-bit: same metrics,
+//! same published parameters, same optimiser state, for every method, over
+//! several steps from the same initialisation and the same batches.
+//!
+//! Also covers the `a3po-opt-v1` train-state checkpoint round-trip.
+
+use a3po::config::Method;
+use a3po::coordinator::batch::TrainBatch;
+use a3po::coordinator::trainer::Trainer;
+use a3po::metrics::TrainMetrics;
+use a3po::runtime::{checkpoint, Runtime, WeightStore};
+use a3po::util::rng::Pcg64;
+
+const EXECS: &[&str] =
+    &["init", "pretrain", "prox_forward", "train_sync", "train_recompute", "train_loglinear"];
+
+/// Deterministic synthetic batch: random tokens in-vocab, the last
+/// `gen_len`-ish positions masked (like real episodes), smooth log-probs
+/// and advantages, per-row alpha in [0, 1).
+fn synthetic_batch(rng: &mut Pcg64, b: usize, s: usize, vocab: usize) -> TrainBatch {
+    let t = s - 1;
+    let tokens = (0..b * s).map(|_| rng.below(vocab as u64) as i32).collect();
+    let mask = (0..b * t).map(|i| if i % t >= t - 8 { 1.0 } else { 0.0 }).collect();
+    let behav_logp = (0..b * t).map(|_| -0.1 - 2.0 * rng.next_f32()).collect();
+    let adv = (0..b * t).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+    let alpha = (0..b).map(|_| rng.next_f32()).collect();
+    TrainBatch {
+        tokens,
+        mask,
+        behav_logp,
+        adv,
+        alpha,
+        staleness: vec![0; b],
+        mean_staleness: 0.0,
+        mean_alpha: 0.0,
+        mean_reward: 0.0,
+        mean_reward_exact: 0.0,
+    }
+}
+
+fn assert_metrics_eq(a: &TrainMetrics, b: &TrainMetrics, ctx: &str) {
+    let pairs = [
+        (a.loss, b.loss, "loss"),
+        (a.entropy, b.entropy, "entropy"),
+        (a.max_is_weight, b.max_is_weight, "max_is_weight"),
+        (a.min_is_weight, b.min_is_weight, "min_is_weight"),
+        (a.clipped_tokens, b.clipped_tokens, "clipped_tokens"),
+        (a.mean_ratio, b.mean_ratio, "mean_ratio"),
+        (a.grad_norm, b.grad_norm, "grad_norm"),
+        (a.approx_kl, b.approx_kl, "approx_kl"),
+    ];
+    for (x, y, name) in pairs {
+        assert!((x - y).abs() <= 1e-6, "{ctx}: {name} diverged: legacy {x} vs session {y}");
+    }
+}
+
+fn parity_for(method: Method) {
+    std::env::set_var("A3PO_QUIET", "1");
+    let rt = Runtime::native("tiny", Some(EXECS)).expect("native tiny runtime");
+    let geo = rt.manifest.preset.clone();
+    let init = rt.init_params(7).expect("init");
+
+    let mut legacy =
+        Trainer::new_without_sessions(&rt, method, init.clone(), WeightStore::new(init.clone()))
+            .expect("legacy trainer");
+    let mut session = Trainer::new(&rt, method, init.clone(), WeightStore::new(init))
+        .expect("session trainer");
+    assert!(!legacy.session_active(), "new_without_sessions must pin the positional path");
+    assert!(session.session_active(), "native backend must offer train sessions");
+
+    let mut rng = Pcg64::from_seed(0xA3);
+
+    // Warm-start parity (exercises satellite-fixed pretrain unpacking too).
+    let pre = synthetic_batch(&mut rng, geo.train_batch, geo.seq_len, geo.vocab);
+    for i in 0..2 {
+        let ml = legacy.pretrain_step(&pre.tokens, &pre.mask).expect("legacy pretrain");
+        let ms = session.pretrain_step(&pre.tokens, &pre.mask).expect("session pretrain");
+        assert_metrics_eq(&ml, &ms, &format!("{method:?} pretrain {i}"));
+        assert_eq!(
+            legacy.snapshot().params,
+            session.snapshot().params,
+            "{method:?} pretrain {i}: published params diverged"
+        );
+    }
+
+    // Three RL steps, identical batches down both paths.
+    for step in 0..3 {
+        let batch = synthetic_batch(&mut rng, geo.train_batch, geo.seq_len, geo.vocab);
+        let (ml, _) = legacy.step(batch.clone()).expect("legacy step");
+        let (ms, _) = session.step(batch).expect("session step");
+        assert!(ml.loss.is_finite() && ml.grad_norm.is_finite(), "non-finite metrics");
+        assert_metrics_eq(&ml, &ms, &format!("{method:?} step {step}"));
+        assert_eq!(legacy.snapshot().version, session.snapshot().version);
+        assert_eq!(
+            legacy.snapshot().params,
+            session.snapshot().params,
+            "{method:?} step {step}: published params diverged"
+        );
+    }
+
+    // Full optimiser state (params + moments + counter) must agree too.
+    assert_eq!(legacy.opt_step(), session.opt_step());
+    assert_eq!(legacy.opt_step(), 2 + 3 * geo.n_minibatch as i32);
+    assert_eq!(
+        legacy.export_state().expect("legacy state"),
+        session.export_state().expect("session state"),
+        "{method:?}: exported optimiser state diverged"
+    );
+}
+
+#[test]
+fn sync_paths_agree() {
+    parity_for(Method::Sync);
+}
+
+#[test]
+fn recompute_paths_agree() {
+    parity_for(Method::Recompute);
+}
+
+#[test]
+fn loglinear_paths_agree() {
+    parity_for(Method::Loglinear);
+}
+
+#[test]
+fn train_state_round_trips_through_checkpoint() {
+    std::env::set_var("A3PO_QUIET", "1");
+    let rt = Runtime::native("tiny", Some(EXECS)).expect("native tiny runtime");
+    let geo = rt.manifest.preset.clone();
+    let init = rt.init_params(3).expect("init");
+    let mut trainer =
+        Trainer::new(&rt, Method::Loglinear, init.clone(), WeightStore::new(init))
+            .expect("trainer");
+
+    let mut rng = Pcg64::from_seed(9);
+    let batch = synthetic_batch(&mut rng, geo.train_batch, geo.seq_len, geo.vocab);
+    trainer.step(batch).expect("step");
+
+    let state = trainer.export_state().expect("export");
+    assert_eq!(state.opt_step, trainer.opt_step());
+
+    let base = std::env::temp_dir().join(format!("a3po-opt-ckpt-{}", std::process::id()));
+    checkpoint::save_train_state(&base, &rt.manifest, &state).expect("save");
+    let loaded = checkpoint::load_train_state(&base, &rt.manifest).expect("load");
+    assert_eq!(loaded, state, "train state did not round-trip bit-identically");
+    let _ = std::fs::remove_file(base.with_extension("json"));
+    let _ = std::fs::remove_file(base.with_extension("bin"));
+}
