@@ -5,9 +5,17 @@
 //! buffer push/pop, tokenizer encode/decode, JSON serialisation, literal
 //! packing, the shared threaded kernels, and KV-cache decode sessions.
 //!
+//! The blocked-GEMM section measures the packed microkernels against a
+//! faithful replica of the pre-blocking naive kernel on the acceptance
+//! shapes (rows=256, d=256, vocab- and d_ff-sized n) and writes the
+//! machine-readable `BENCH_kernels.json` (GFLOP/s per path + speedups).
+//!
 //!   cargo bench --bench micro_hotpath
+//!   cargo bench --bench micro_hotpath -- --out BENCH_kernels.json
 
-use a3po::bench::bench;
+use std::path::PathBuf;
+
+use a3po::bench::{bench, write_bench_json};
 use a3po::buffer::{Episode, EpisodeBuffer};
 use a3po::config::{AlphaSchedule, StalenessPolicy};
 use a3po::coordinator::advantage::grpo_group_advantages;
@@ -17,6 +25,7 @@ use a3po::env::{tokenizer, Problem};
 use a3po::runtime::native::kernels;
 use a3po::runtime::{HostTensor, PresetConfig, Runtime};
 use a3po::sampler::{log_softmax, sample, SamplerConfig};
+use a3po::util::cli::Args;
 use a3po::util::json::Json;
 use a3po::util::rng::Pcg64;
 
@@ -51,7 +60,59 @@ fn episode(rng: &mut Pcg64, version: u64, t: usize, s: usize) -> Episode {
     }
 }
 
-fn main() {
+/// Faithful replica of the kernel this PR replaced: scalar triple loop
+/// with the `av == 0.0` skip branch (which blocked autovectorization),
+/// rows fanned out as one boxed job per row chunk through the pool — the
+/// "before" side of the BENCH_kernels.json comparison.
+#[allow(clippy::manual_div_ceil)] // usize::div_ceil needs rustc >= 1.73
+fn naive_matmul_old(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threaded: bool,
+) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    let do_rows = |cc: &mut [f32], i0: usize| {
+        for (ri, crow) in cc.chunks_mut(n).enumerate() {
+            let i = i0 + ri;
+            for p in 0..k {
+                let av = a[i * k + p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    };
+    if !threaded || kernels::pool().workers() < 2 {
+        do_rows(&mut c, 0);
+        return c;
+    }
+    let workers = kernels::pool().workers();
+    let rows_per_job = ((m + workers * 4 - 1) / (workers * 4)).max(1);
+    let dr = &do_rows;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (ci, chunk) in c.chunks_mut(rows_per_job * n).enumerate() {
+        jobs.push(Box::new(move || dr(chunk, ci * rows_per_job)));
+    }
+    kernels::pool().run(jobs);
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let parsed = Args::new(
+        "micro_hotpath",
+        "coordinator hot-path micro-benchmarks + blocked-GEMM GFLOP/s comparison",
+    )
+    .opt("out", "BENCH_kernels.json", "machine-readable kernel-bench output path")
+    .flag("bench", "(ignored; passed by cargo bench)")
+    .parse();
+
     let mut rng = Pcg64::from_seed(0);
     let g = geo();
     let (s, t) = (g.seq_len, g.seq_len - 1);
@@ -161,4 +222,75 @@ fn main() {
         }
         std::hint::black_box(session.logits()[0]);
     });
+
+    // Blocked GEMM vs the pre-blocking naive kernel on the acceptance
+    // shapes: rows=256 x d=256 against a vocab-sized and a d_ff-sized n.
+    println!("\n== Blocked GEMM vs naive baseline (GFLOP/s) ==\n");
+    let threads = kernels::pool().workers();
+    let mut shape_rows: Vec<Json> = Vec::new();
+    let mut min_speedup = f64::INFINITY;
+    for (m, kd, n) in [(256usize, 256usize, 64usize), (256, 256, 1024)] {
+        let flops = 2.0 * (m * kd * n) as f64;
+        let gflops = |mean_ns: f64| flops / mean_ns.max(1e-9);
+        let iters = if n >= 512 { 8 } else { 40 };
+        let a: Vec<f32> = (0..m * kd).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..kd * n).map(|_| rng.next_f32() - 0.5).collect();
+
+        // Cross-check the baseline replica against the shipped kernel
+        // before timing anything.
+        let c_old = naive_matmul_old(&a, &b, m, kd, n, false);
+        let c_new = kernels::matmul(&a, &b, m, kd, n);
+        for (x, y) in c_old.iter().zip(&c_new) {
+            assert!((x - y).abs() < 1e-2, "baseline replica diverged: {x} vs {y}");
+        }
+
+        let old_thr = bench(&format!("naive matmul {m}x{kd}x{n} ({threads} thr)"), iters, || {
+            std::hint::black_box(naive_matmul_old(&a, &b, m, kd, n, true));
+        });
+        let new_thr = bench(&format!("blocked matmul {m}x{kd}x{n} ({threads} thr)"), iters, || {
+            std::hint::black_box(kernels::matmul(&a, &b, m, kd, n));
+        });
+        kernels::set_force_serial(true);
+        let old_ser = bench(&format!("naive matmul {m}x{kd}x{n} (serial)"), iters, || {
+            std::hint::black_box(naive_matmul_old(&a, &b, m, kd, n, false));
+        });
+        let new_ser = bench(&format!("blocked matmul {m}x{kd}x{n} (serial)"), iters, || {
+            std::hint::black_box(kernels::matmul(&a, &b, m, kd, n));
+        });
+        kernels::set_force_serial(false);
+
+        let speedup_thr = gflops(new_thr.mean_ns) / gflops(old_thr.mean_ns);
+        let speedup_ser = gflops(new_ser.mean_ns) / gflops(old_ser.mean_ns);
+        min_speedup = min_speedup.min(speedup_thr);
+        println!(
+            "  {m}x{kd}x{n}: blocked {:.2} GFLOP/s vs naive {:.2} GFLOP/s threaded \
+             ({speedup_thr:.2}x); {:.2} vs {:.2} serial ({speedup_ser:.2}x)\n",
+            gflops(new_thr.mean_ns),
+            gflops(old_thr.mean_ns),
+            gflops(new_ser.mean_ns),
+            gflops(old_ser.mean_ns),
+        );
+        shape_rows.push(Json::obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("k", Json::Num(kd as f64)),
+            ("n", Json::Num(n as f64)),
+            ("naive_threaded_gflops", Json::Num(gflops(old_thr.mean_ns))),
+            ("naive_serial_gflops", Json::Num(gflops(old_ser.mean_ns))),
+            ("blocked_threaded_gflops", Json::Num(gflops(new_thr.mean_ns))),
+            ("blocked_serial_gflops", Json::Num(gflops(new_ser.mean_ns))),
+            ("speedup_blocked_vs_naive_threaded", Json::Num(speedup_thr)),
+            ("speedup_blocked_vs_naive_serial", Json::Num(speedup_ser)),
+        ]));
+    }
+    println!("min blocked-vs-naive speedup: {min_speedup:.2}x (target >= 3x)");
+    write_bench_json(
+        &PathBuf::from(parsed.str("out")),
+        &Json::obj(vec![
+            ("kernel_threads", Json::Num(threads as f64)),
+            ("shapes", Json::Arr(shape_rows)),
+            ("min_speedup_vs_naive", Json::Num(min_speedup)),
+            ("target_speedup_vs_naive", Json::Num(3.0)),
+        ]),
+    )?;
+    Ok(())
 }

@@ -25,7 +25,8 @@ use a3po::bench::write_bench_json;
 use a3po::config::Method;
 use a3po::coordinator::batch::TrainBatch;
 use a3po::coordinator::Trainer;
-use a3po::runtime::native::kernels;
+use a3po::runtime::native::train::train_step_gemm_flops;
+use a3po::runtime::native::{kernels, preset as native_preset};
 use a3po::runtime::{PresetConfig, Runtime, WeightStore};
 use a3po::util::cli::Args;
 use a3po::util::json::Json;
@@ -169,6 +170,10 @@ fn main() -> anyhow::Result<()> {
         r => r,
     };
     let threads = kernels::pool().workers();
+    // Dense-GEMM work per step (see `train_step_gemm_flops`): steps/sec
+    // times this gives the GFLOP/s each path sustains in the matmuls.
+    let step_gflop =
+        native_preset(&preset).map(|p| train_step_gemm_flops(&p) as f64 / 1e9).unwrap_or(0.0);
 
     println!("\n== Train step throughput: {} (train_loglinear) ==", preset);
     println!(
@@ -191,9 +196,13 @@ fn main() -> anyhow::Result<()> {
         let m = res?;
         let sps = m.steps as f64 / m.secs.max(1e-12);
         println!(
-            "{label:<16} {:>4} steps in {:>8.3}s = {sps:>8.2} steps/s  \
+            "{label:<16} {:>4} steps in {:>8.3}s = {sps:>8.2} steps/s = {:>7.2} GFLOP/s  \
              ({:>9.0} allocs/step, {:>12.0} bytes/step)",
-            m.steps, m.secs, m.allocs_per_step, m.alloc_bytes_per_step
+            m.steps,
+            m.secs,
+            sps * step_gflop,
+            m.allocs_per_step,
+            m.alloc_bytes_per_step
         );
         measured.push((label, m));
     }
@@ -217,6 +226,7 @@ fn main() -> anyhow::Result<()> {
         ("param_count", Json::Num(geo.param_count as f64)),
         ("kernel_threads", Json::Num(threads as f64)),
         ("reps", Json::Num(reps as f64)),
+        ("dense_gflop_per_step", Json::Num(step_gflop)),
         ("speedup_session_vs_legacy", Json::Num(speedup_vs_legacy)),
         ("speedup_threaded_vs_serial_session", Json::Num(speedup_threads)),
         ("alloc_ratio_session_vs_legacy", Json::Num(alloc_ratio)),
@@ -230,6 +240,10 @@ fn main() -> anyhow::Result<()> {
                     ("steps", Json::Num(m.steps as f64)),
                     ("secs", Json::Num(m.secs)),
                     ("steps_per_sec", Json::Num(m.steps as f64 / m.secs.max(1e-12))),
+                    (
+                        "dense_gflops_per_sec",
+                        Json::Num(step_gflop * m.steps as f64 / m.secs.max(1e-12)),
+                    ),
                     ("allocs_per_step", Json::Num(m.allocs_per_step)),
                     ("alloc_bytes_per_step", Json::Num(m.alloc_bytes_per_step)),
                 ]),

@@ -1,13 +1,43 @@
-//! Shared dense-math kernels for the native backend, with a small
-//! `std::thread` worker pool that parallelises matmul/attention over rows.
+//! Shared dense-math kernels for the native backend: cache-blocked,
+//! register-tiled GEMM microkernels plus a small `std::thread` worker pool
+//! with low-overhead chunk dispatch.
 //!
 //! Every kernel here is used by *both* halves of the system: the
 //! incremental decode sessions (`super::kv`) and the train/prox
-//! forward-backward paths (`super::model`). Parallel execution never
-//! changes results: work is split by output rows and each output element
-//! accumulates in exactly the same scalar order as the serial loop, so
-//! threaded and single-threaded runs are bit-identical (the decode-parity
-//! tests rely on this).
+//! forward-backward paths (`super::model`).
+//!
+//! # GEMM blocking scheme
+//!
+//! The matmul family packs `b` into contiguous [`NR`]-wide column panels
+//! (zero-padded at a ragged right edge), splits `k` into [`KC`]-sized
+//! blocks, and computes [`MR`]`x`[`NR`] output tiles in a fixed-size
+//! register accumulator with branch-free FMA-shaped inner loops the
+//! compiler can autovectorize. There is no `NC` blocking: each `k` block
+//! sweeps all column panels (the widest operand here, `d_ff`/`vocab`, fits
+//! comfortably in L2 once packed).
+//!
+//! # Determinism contract
+//!
+//! Every output element accumulates in an order that is a pure function of
+//! the blocking — within each `KC` block, strictly ascending `p`, into a
+//! private register sum that is then added to `c` block by block — and
+//! *never* a function of the thread count, the chunk partition, or the row
+//! tile an element lands in (padding lanes multiply into separate lanes and
+//! are discarded). The scalar small-operand path replays the identical
+//! per-element operation sequence. Threaded, serial, packed, unpacked, and
+//! any-`A3PO_THREADS` runs are therefore bit-identical; the decode/train
+//! parity suites and `tests/kernel_parity.rs` pin this.
+//!
+//! # Dispatch
+//!
+//! A run is a shared atomic chunk counter over pre-partitioned row ranges:
+//! workers (and the calling thread — it runs chunks instead of idling on
+//! the completion latch) claim chunk indices with one `fetch_add` each, so
+//! there is no per-job heap allocation and no channel. The legacy
+//! `Vec<Box<dyn FnOnce>>` batch API ([`WorkerPool::run`]) remains for
+//! irregular job shapes, now feeding the same shared queue: jobs are
+//! enqueued under one short-lived lock and workers block on a condvar (not
+//! on a channel-receiver mutex), so dequeues never serialise.
 //!
 //! Pool sizing: `A3PO_THREADS` overrides; the default is
 //! `available_parallelism` capped at [`MAX_THREADS`]. Kernels fall back to
@@ -19,9 +49,11 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 
+use std::cell::RefCell;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Hard cap on pool size (beyond this, the tiny matmuls here stop scaling).
 pub const MAX_THREADS: usize = 16;
@@ -47,6 +79,136 @@ pub fn force_serial() -> bool {
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// One counter-claimed chunked run (see [`run_chunks`]). Workers claim chunk
+/// indices with a single `fetch_add`; no allocation happens per chunk.
+struct RunTask {
+    next: AtomicUsize,
+    n_chunks: usize,
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+    /// The chunk body with its borrow lifetime erased. Only dereferenced
+    /// for claimed indices `< n_chunks`, all of which complete before
+    /// [`run_chunks`] returns — so every call happens while the original
+    /// closure is alive.
+    func: *const (dyn Fn(usize) + Sync),
+}
+
+// SAFETY: `func` is only called between enqueue and latch-release inside
+// `run_chunks`, while the pointee is borrowed by the blocked caller; all
+// other fields are Sync synchronisation primitives.
+unsafe impl Send for RunTask {}
+unsafe impl Sync for RunTask {}
+
+impl RunTask {
+    fn is_exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.n_chunks
+    }
+
+    /// Claim and run chunks until none remain. Called by workers *and* by
+    /// the submitting thread.
+    fn work(&self) {
+        loop {
+            let idx = self.next.fetch_add(1, Ordering::Relaxed);
+            if idx >= self.n_chunks {
+                return;
+            }
+            // SAFETY: see the `func` field invariant above.
+            let func = unsafe { &*self.func };
+            if catch_unwind(AssertUnwindSafe(|| func(idx))).is_err() {
+                self.panicked.store(true, Ordering::SeqCst);
+            }
+            let mut g = self.remaining.lock().unwrap();
+            *g -= 1;
+            if *g == 0 {
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Queue entries: boxed one-shot jobs (the legacy batch API) or shared
+/// chunk-claiming tasks.
+enum Work {
+    Job(Job),
+    Task(Arc<RunTask>),
+}
+
+struct QueueState {
+    items: VecDeque<Work>,
+    shutdown: bool,
+}
+
+struct Shared {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+enum WorkItem {
+    Job(Job),
+    Task(Arc<RunTask>),
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    enum Take {
+        PopExhausted,
+        Task(Arc<RunTask>),
+        Job,
+        Empty,
+    }
+    loop {
+        let item = {
+            let mut g = shared.q.lock().unwrap();
+            loop {
+                let take = match g.items.front() {
+                    Some(Work::Task(t)) => {
+                        if t.is_exhausted() {
+                            Take::PopExhausted
+                        } else {
+                            // Leave the task at the front so every idle
+                            // worker keeps helping until it is exhausted.
+                            Take::Task(t.clone())
+                        }
+                    }
+                    Some(Work::Job(_)) => Take::Job,
+                    None => Take::Empty,
+                };
+                match take {
+                    Take::PopExhausted => {
+                        g.items.pop_front();
+                    }
+                    Take::Task(t) => break Some(WorkItem::Task(t)),
+                    Take::Job => {
+                        if let Some(Work::Job(job)) = g.items.pop_front() {
+                            break Some(WorkItem::Job(job));
+                        }
+                    }
+                    Take::Empty => {
+                        if g.shutdown {
+                            break None;
+                        }
+                        g = shared.cv.wait(g).unwrap();
+                    }
+                }
+            }
+        };
+        match item {
+            Some(WorkItem::Task(t)) => t.work(),
+            Some(WorkItem::Job(job)) => job(),
+            None => return,
+        }
+    }
+}
+
+/// Completion is signalled from a `Drop` guard so a panicking job still
+/// releases the caller instead of deadlocking `Latch::wait`.
 struct Latch {
     remaining: Mutex<usize>,
     cv: Condvar,
@@ -70,8 +232,6 @@ impl Latch {
     }
 }
 
-/// Completion is signalled from a `Drop` guard so a panicking job still
-/// releases the caller instead of deadlocking `Latch::wait`.
 struct DoneGuard {
     latch: Arc<Latch>,
 }
@@ -82,45 +242,60 @@ impl Drop for DoneGuard {
     }
 }
 
-/// A fixed set of persistent worker threads fed through one shared channel.
+/// A fixed set of persistent worker threads over one shared work queue.
 pub struct WorkerPool {
     workers: usize,
-    tx: Option<Mutex<mpsc::Sender<Job>>>,
+    shared: Option<Arc<Shared>>,
 }
 
 impl WorkerPool {
     fn new(workers: usize) -> WorkerPool {
         if workers <= 1 {
-            return WorkerPool { workers: 1, tx: None };
+            return WorkerPool { workers: 1, shared: None };
         }
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState { items: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
         for i in 0..workers {
-            let rx = rx.clone();
+            let shared = shared.clone();
             std::thread::Builder::new()
                 .name(format!("a3po-kernel-{i}"))
-                .spawn(move || loop {
-                    let msg = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match msg {
-                        Ok(job) => job(),
-                        Err(_) => return,
-                    }
-                })
+                .spawn(move || worker_loop(shared))
                 .expect("spawning kernel worker");
         }
-        WorkerPool { workers, tx: Some(Mutex::new(tx)) }
+        WorkerPool { workers, shared: Some(shared) }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
 
+    fn push_task(&self, task: Arc<RunTask>) {
+        let shared = self.shared.as_ref().expect("push_task on a serial pool");
+        {
+            let mut g = shared.q.lock().unwrap();
+            g.items.push_back(Work::Task(task));
+        }
+        shared.cv.notify_all();
+    }
+
+    /// Drop a finished task that no worker happened to pop yet.
+    fn remove_task(&self, task: &Arc<RunTask>) {
+        let shared = self.shared.as_ref().expect("remove_task on a serial pool");
+        let mut g = shared.q.lock().unwrap();
+        g.items.retain(|w| !matches!(w, Work::Task(t) if Arc::ptr_eq(t, task)));
+    }
+
     /// Run a batch of jobs, blocking until every one has finished. Jobs may
     /// borrow from the caller's stack: the blocking wait is what makes the
     /// internal lifetime erasure sound. Panics if any job panicked.
+    ///
+    /// Jobs are appended to the shared queue under one short-lived lock and
+    /// picked up by condvar-blocked workers, so N jobs are in flight
+    /// concurrently as soon as N workers wake (the old channel path sent
+    /// while holding a sender mutex and workers blocked in `recv` holding
+    /// the receiver mutex, serialising every hand-off).
     pub fn run<'a>(&self, mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
         match jobs.len() {
             0 => return,
@@ -130,8 +305,8 @@ impl WorkerPool {
             }
             _ => {}
         }
-        let tx = match &self.tx {
-            Some(tx) if !force_serial() => tx,
+        let shared = match &self.shared {
+            Some(shared) if !force_serial() => shared,
             _ => {
                 for job in jobs {
                     job();
@@ -145,7 +320,7 @@ impl WorkerPool {
             panicked: AtomicBool::new(false),
         });
         {
-            let tx = tx.lock().unwrap();
+            let mut g = shared.q.lock().unwrap();
             for job in jobs {
                 // SAFETY: `run` blocks on the latch until every submitted
                 // job has completed (the Drop guard fires even on panic), so
@@ -159,19 +334,31 @@ impl WorkerPool {
                     >(job)
                 };
                 let latch = latch.clone();
-                tx.send(Box::new(move || {
+                g.items.push_back(Work::Job(Box::new(move || {
                     let guard = DoneGuard { latch };
                     if catch_unwind(AssertUnwindSafe(job)).is_err() {
                         guard.latch.panicked.store(true, Ordering::SeqCst);
                     }
                     drop(guard);
-                }))
-                .expect("kernel pool channel closed");
+                })));
             }
         }
+        shared.cv.notify_all();
         latch.wait();
         if latch.panicked.load(Ordering::SeqCst) {
             panic!("a kernel worker job panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            {
+                let mut g = shared.q.lock().unwrap();
+                g.shutdown = true;
+            }
+            shared.cv.notify_all();
         }
     }
 }
@@ -191,151 +378,449 @@ pub fn pool() -> &'static WorkerPool {
     })
 }
 
-/// Should an op of `work` multiply-adds with `rows` splittable rows fan out?
-fn parallel_ok(rows: usize, work: usize) -> bool {
-    rows >= 2 && work >= PAR_MIN_WORK && pool().workers() >= 2 && !force_serial()
-}
-
-/// Rows per job when splitting `rows` across the pool.
-#[allow(clippy::manual_div_ceil)] // usize::div_ceil needs rustc >= 1.73
-fn rows_per_job(rows: usize) -> usize {
-    let parts = pool().workers().max(1);
-    ((rows + parts - 1) / parts).max(1)
-}
-
-// ---------------------------------------------------------------------------
-// Matmul family (row-major; identical accumulation order serial/parallel)
-
-/// c[m,n] += a[m,k] · b[k,n]
-pub fn matmul_acc<'a>(c: &'a mut [f32], a: &'a [f32], b: &'a [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    if !parallel_ok(m, m * k * n) {
-        matmul_acc_chunk(c, a, b, k, n);
+/// Run `f(0..n_chunks)` with chunks claimed off a shared atomic counter by
+/// the pool workers *and* the calling thread. Chunk bodies must write only
+/// disjoint state (the kernels slice disjoint output rows). Blocks until
+/// every chunk has run; panics if any chunk panicked. Results must not
+/// depend on which thread runs which chunk — the kernels guarantee this by
+/// making accumulation order a pure function of the blocking.
+pub fn run_chunks(n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n_chunks == 0 {
         return;
     }
-    let rows = rows_per_job(m);
-    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::new();
-    for (ci, cc) in c.chunks_mut(rows * n).enumerate() {
-        let r0 = ci * rows;
-        let r1 = r0 + cc.len() / n;
-        let ac = &a[r0 * k..r1 * k];
-        jobs.push(Box::new(move || matmul_acc_chunk(cc, ac, b, k, n)));
+    // `force_serial()` before `pool()`: serial benches and one-shot tests
+    // must not spawn the worker threads as a side effect of the check.
+    if n_chunks == 1 || force_serial() || pool().workers() <= 1 {
+        for i in 0..n_chunks {
+            f(i);
+        }
+        return;
     }
-    pool().run(jobs);
+    // SAFETY: the borrow of `f` is erased, but `run_chunks` blocks on the
+    // latch until every claimed chunk has finished, and workers never call
+    // the closure for indices >= n_chunks — so no call outlives `f`.
+    let func = unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+    };
+    let task = Arc::new(RunTask {
+        next: AtomicUsize::new(0),
+        n_chunks,
+        remaining: Mutex::new(n_chunks),
+        cv: Condvar::new(),
+        panicked: AtomicBool::new(false),
+        func,
+    });
+    pool().push_task(task.clone());
+    // The caller claims chunks too instead of idling on the latch.
+    task.work();
+    task.wait();
+    pool().remove_task(&task);
+    if task.panicked.load(Ordering::SeqCst) {
+        panic!("a kernel worker job panicked");
+    }
 }
 
-fn matmul_acc_chunk(c: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
-    let m = c.len() / n;
-    for i in 0..m {
-        let crow = &mut c[i * n..(i + 1) * n];
-        for p in 0..k {
-            let av = a[i * k + p];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
+/// Should an op of `work` multiply-adds with `rows` splittable rows fan out?
+fn parallel_ok(rows: usize, work: usize) -> bool {
+    // `force_serial()` before `pool()` so forced-serial callers never spawn
+    // the worker threads as a side effect of asking.
+    rows >= 2 && work >= PAR_MIN_WORK && !force_serial() && pool().workers() >= 2
+}
+
+/// Raw mutable base pointer, `Send + Sync` so disjoint row ranges of one
+/// output buffer can be sliced per-chunk inside a `Fn(usize)` closure.
+/// Soundness: every user derives non-overlapping slices from it.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+// ---------------------------------------------------------------------------
+// Blocked GEMM microkernels
+
+/// Register-tile rows: the microkernel accumulates an `MR x NR` output tile.
+pub const MR: usize = 4;
+/// Register-tile columns (8 f32 lanes — two SSE registers or one AVX).
+pub const NR: usize = 8;
+/// k-dimension cache block: one packed `B` panel column (`KC·NR` floats)
+/// plus the `A` micropanel (`MR·KC` floats, on the stack) stay L1-resident.
+pub const KC: usize = 256;
+
+/// Below this many multiply-adds the pack pass costs more than blocking
+/// saves; a scalar path that replays the identical per-element operation
+/// order runs instead (results are bit-identical either way).
+const SMALL_GEMM_WORK: usize = 1 << 13;
+
+#[allow(clippy::manual_div_ceil)] // usize::div_ceil needs rustc >= 1.73
+fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// How the `a` operand is laid out.
+#[derive(Clone, Copy)]
+enum AMode {
+    /// `a` is `[m, k]` row-major: element `(i, p)` at `a[i*k + p]`.
+    Rows,
+    /// `a` is `[k, m]` (the `aᵀ·b` gradient variant): `(i, p)` at `a[p*m + i]`.
+    Cols,
+}
+
+/// Reusable per-thread pack scratch: one buffer per caller thread, grown
+/// once and reused across layers, steps, and sessions.
+thread_local! {
+    static PACK_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Pack `b` into `[k-block][column-panel][p][lane]` order: for each `KC`
+/// block, `NR`-wide column panels stored contiguously with ascending `p`
+/// inside, zero-padded at a ragged right edge. `bt = true` reads `b` as the
+/// `[n, k]` transposed operand of the `a·bᵀ` variant.
+fn pack_b_into(dst: &mut Vec<f32>, b: &[f32], k: usize, n: usize, bt: bool) {
+    let n_panels = div_ceil(n, NR);
+    let kblocks = div_ceil(k, KC);
+    dst.clear();
+    dst.resize(k * n_panels * NR, 0.0);
+    for kb in 0..kblocks {
+        let p0 = kb * KC;
+        let kcl = KC.min(k - p0);
+        let base = kb * KC * n_panels * NR;
+        for jp in 0..n_panels {
+            let j0 = jp * NR;
+            let jn = NR.min(n - j0);
+            let panel = &mut dst[base + jp * kcl * NR..base + (jp + 1) * kcl * NR];
+            for p in 0..kcl {
+                let row = &mut panel[p * NR..(p + 1) * NR];
+                if bt {
+                    for r in 0..jn {
+                        row[r] = b[(j0 + r) * k + (p0 + p)];
+                    }
+                } else {
+                    row[..jn].copy_from_slice(&b[(p0 + p) * n + j0..(p0 + p) * n + j0 + jn]);
+                }
+                // row[jn..] stays zero: padding lanes accumulate garbage-free
+                // into discarded lanes and never touch real output.
             }
         }
     }
+}
+
+/// The blocked compute over output rows `i0..i0 + rows` (`c` holds exactly
+/// those rows). `set` overwrites `c` on the first `k` block instead of
+/// accumulating; `fused` applies `pre += bias; act = gelu(pre)` once each
+/// row's accumulation is complete.
+fn gemm_rows(
+    c: &mut [f32],
+    a: &[f32],
+    amode: AMode,
+    packed: &[f32],
+    i0: usize,
+    rows: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    set: bool,
+    mut fused: Option<(&mut [f32], &[f32])>,
+) {
+    let n_panels = div_ceil(n, NR);
+    let kblocks = div_ceil(k, KC);
+    let mut apack = [0.0f32; MR * KC];
+    let mut ib = 0;
+    while ib < rows {
+        let mr = MR.min(rows - ib);
+        for kb in 0..kblocks {
+            let p0 = kb * KC;
+            let kcl = KC.min(k - p0);
+            // Pack the A micropanel for this row block x k block.
+            for r in 0..mr {
+                let gi = i0 + ib + r;
+                match amode {
+                    AMode::Rows => {
+                        apack[r * KC..r * KC + kcl]
+                            .copy_from_slice(&a[gi * k + p0..gi * k + p0 + kcl]);
+                    }
+                    AMode::Cols => {
+                        for p in 0..kcl {
+                            apack[r * KC + p] = a[(p0 + p) * m + gi];
+                        }
+                    }
+                }
+            }
+            let first = kb == 0;
+            let block_base = kb * KC * n_panels * NR;
+            for jp in 0..n_panels {
+                let j0 = jp * NR;
+                let jn = NR.min(n - j0);
+                let panel = &packed[block_base + jp * kcl * NR..block_base + (jp + 1) * kcl * NR];
+                // MR x NR register tile; fixed-trip inner loop, no branches.
+                let mut acc = [[0.0f32; NR]; MR];
+                for p in 0..kcl {
+                    let brow = &panel[p * NR..(p + 1) * NR];
+                    for r in 0..mr {
+                        let av = apack[r * KC + p];
+                        let arow = &mut acc[r];
+                        for j in 0..NR {
+                            arow[j] += av * brow[j];
+                        }
+                    }
+                }
+                for r in 0..mr {
+                    let crow = &mut c[(ib + r) * n + j0..(ib + r) * n + j0 + jn];
+                    if set && first {
+                        crow.copy_from_slice(&acc[r][..jn]);
+                    } else {
+                        for j in 0..jn {
+                            crow[j] += acc[r][j];
+                        }
+                    }
+                }
+            }
+        }
+        if let Some((act, bias)) = fused.as_mut() {
+            for r in 0..mr {
+                let crow = &mut c[(ib + r) * n..(ib + r) * n + n];
+                let arow = &mut act[(ib + r) * n..(ib + r) * n + n];
+                for j in 0..n {
+                    let v = crow[j] + bias[j];
+                    crow[j] = v;
+                    arow[j] = gelu(v);
+                }
+            }
+        }
+        ib += MR;
+    }
+}
+
+/// Scalar path for operands too small to amortise packing. Replays the
+/// blocked path's exact per-element operation sequence (same `KC` blocks,
+/// same ascending-`p` register sums, same write-back), so results are
+/// bit-identical to [`gemm_rows`] — path choice can never change output.
+fn gemm_small(
+    c: &mut [f32],
+    a: &[f32],
+    amode: AMode,
+    b: &[f32],
+    bt: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+    set: bool,
+    mut fused: Option<(&mut [f32], &[f32])>,
+) {
+    let kblocks = div_ceil(k, KC);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            for kb in 0..kblocks {
+                let p0 = kb * KC;
+                let kcl = KC.min(k - p0);
+                let mut acc = 0.0f32;
+                for p in 0..kcl {
+                    let av = match amode {
+                        AMode::Rows => a[i * k + p0 + p],
+                        AMode::Cols => a[(p0 + p) * m + i],
+                    };
+                    let bv = if bt { b[j * k + p0 + p] } else { b[(p0 + p) * n + j] };
+                    acc += av * bv;
+                }
+                if set && kb == 0 {
+                    crow[j] = acc;
+                } else {
+                    crow[j] += acc;
+                }
+            }
+        }
+        if let Some((act, bias)) = fused.as_mut() {
+            for j in 0..n {
+                let v = crow[j] + bias[j];
+                crow[j] = v;
+                act[i * n + j] = gelu(v);
+            }
+        }
+    }
+}
+
+/// Blocked GEMM over a pre-packed `b`, row-parallel when worthwhile.
+fn gemm_packed(
+    c: &mut [f32],
+    a: &[f32],
+    amode: AMode,
+    packed: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    set: bool,
+    fused: Option<(&mut [f32], &[f32])>,
+) {
+    let blocks = div_ceil(m, MR);
+    if blocks < 2 || !parallel_ok(m, m * k * n) {
+        gemm_rows(c, a, amode, packed, 0, m, m, k, n, set, fused);
+        return;
+    }
+    // Chunk in whole MR-row blocks, a few chunks per worker so the atomic
+    // claim loop load-balances ragged finish times.
+    let bpc = div_ceil(blocks, pool().workers() * 4).max(1);
+    let n_chunks = div_ceil(blocks, bpc);
+    if n_chunks < 2 {
+        gemm_rows(c, a, amode, packed, 0, m, m, k, n, set, fused);
+        return;
+    }
+    let cptr = SendPtr(c.as_mut_ptr());
+    let (act_ptr, bias): (Option<SendPtr>, Option<&[f32]>) = match fused {
+        Some((act, bias)) => (Some(SendPtr(act.as_mut_ptr())), Some(bias)),
+        None => (None, None),
+    };
+    run_chunks(n_chunks, &|ci: usize| {
+        let i0 = ci * bpc * MR;
+        let i1 = m.min(i0 + bpc * MR);
+        let rows = i1 - i0;
+        // SAFETY: chunks cover disjoint row ranges of `c` (and `act`), so
+        // the per-chunk mutable slices never alias.
+        let cc = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), rows * n) };
+        let fc = match (act_ptr, bias) {
+            (Some(ap), Some(bs)) => Some((
+                unsafe { std::slice::from_raw_parts_mut(ap.0.add(i0 * n), rows * n) },
+                bs,
+            )),
+            _ => None,
+        };
+        gemm_rows(cc, a, amode, packed, i0, rows, m, k, n, set, fc);
+    });
+}
+
+/// Entry point for unpacked operands: small ops take the scalar path, the
+/// rest pack `b` into per-thread reusable scratch and run blocked.
+fn gemm(
+    c: &mut [f32],
+    a: &[f32],
+    amode: AMode,
+    b: &[f32],
+    bt: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+    set: bool,
+    fused: Option<(&mut [f32], &[f32])>,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    if m * k * n < SMALL_GEMM_WORK {
+        gemm_small(c, a, amode, b, bt, m, k, n, set, fused);
+        return;
+    }
+    PACK_SCRATCH.with(|s| {
+        let mut buf = s.borrow_mut();
+        pack_b_into(&mut buf, b, k, n, bt);
+        gemm_packed(c, a, amode, &buf, m, k, n, set, fused);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Matmul family (row-major; bit-identical across thread counts and paths)
+
+/// c[m,n] += a[m,k] · b[k,n]
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    gemm(c, a, AMode::Rows, b, false, m, k, n, false, None);
+}
+
+/// c[m,n] = a[m,k] · b[k,n] — overwrite variant: no zeroing pass over `c`
+/// (callers drop one full memory sweep per projection vs reset + acc).
+pub fn matmul_set(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    gemm(c, a, AMode::Rows, b, false, m, k, n, true, None);
 }
 
 /// c[m,n] = a[m,k] · b[k,n]
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0.0f32; m * n];
-    matmul_acc(&mut c, a, b, m, k, n);
+    matmul_set(&mut c, a, b, m, k, n);
     c
 }
 
-/// c[m,n] += aᵀ · b where a is [k,m] and b is [k,n] (weight gradients).
-pub fn matmul_at_b_acc<'a>(
-    c: &'a mut [f32],
-    a: &'a [f32],
-    b: &'a [f32],
-    k: usize,
-    m: usize,
-    n: usize,
-) {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    if !parallel_ok(m, m * k * n) {
-        matmul_at_b_chunk(c, a, b, k, m, n, 0);
-        return;
-    }
-    let rows = rows_per_job(m);
-    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::new();
-    for (ci, cc) in c.chunks_mut(rows * n).enumerate() {
-        let i0 = ci * rows;
-        jobs.push(Box::new(move || matmul_at_b_chunk(cc, a, b, k, m, n, i0)));
-    }
-    pool().run(jobs);
-}
-
-/// The `i0`-offset chunk of aᵀ·b: fills `c` rows `i0..i0 + c.len()/n`.
-/// Keeps the serial p-outer order so per-element accumulation matches.
-fn matmul_at_b_chunk(c: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize, i0: usize) {
-    let rows = c.len() / n;
-    for p in 0..k {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for i in 0..rows {
-            let av = arow[i0 + i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
-}
-
-/// c[m,n] += a · bᵀ where a is [m,k] and b is [n,k] (input gradients).
-pub fn matmul_a_bt_acc<'a>(
-    c: &'a mut [f32],
-    a: &'a [f32],
-    b: &'a [f32],
+/// Fused MLP up-projection epilogue: `pre[m,n] = a·b + bias` and
+/// `act = gelu(pre)` written in the same pass over the output tile, so the
+/// pre-activation buffer is swept once instead of three times.
+pub fn matmul_set_bias_gelu(
+    pre: &mut [f32],
+    act: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
     m: usize,
     k: usize,
     n: usize,
 ) {
     debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), m * n);
-    if !parallel_ok(m, m * k * n) {
-        matmul_a_bt_chunk(c, a, b, k, n);
-        return;
-    }
-    let rows = rows_per_job(m);
-    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::new();
-    for (ci, cc) in c.chunks_mut(rows * n).enumerate() {
-        let r0 = ci * rows;
-        let r1 = r0 + cc.len() / n;
-        let ac = &a[r0 * k..r1 * k];
-        jobs.push(Box::new(move || matmul_a_bt_chunk(cc, ac, b, k, n)));
-    }
-    pool().run(jobs);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(act.len(), m * n);
+    debug_assert_eq!(bias.len(), n);
+    gemm(pre, a, AMode::Rows, b, false, m, k, n, true, Some((act, bias)));
 }
 
-fn matmul_a_bt_chunk(c: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
-    let m = c.len() / n;
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
-            }
-            crow[j] += acc;
-        }
+/// c[m,n] += aᵀ · b where a is [k,m] and b is [k,n] (weight gradients).
+pub fn matmul_at_b_acc(c: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    gemm(c, a, AMode::Cols, b, false, m, k, n, false, None);
+}
+
+/// c[m,n] += a · bᵀ where a is [m,k] and b is [n,k] (input gradients).
+pub fn matmul_a_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    gemm(c, a, AMode::Rows, b, true, m, k, n, false, None);
+}
+
+/// A `[k, n]` weight matrix pre-packed into the blocked panel layout, for
+/// callers whose `b` operand is frozen across many GEMMs — decode sessions
+/// pack each layer's weights once per snapshot and reuse them every token.
+pub struct PackedB {
+    data: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+impl PackedB {
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB {
+        debug_assert_eq!(b.len(), k * n);
+        let mut data = Vec::new();
+        pack_b_into(&mut data, b, k, n, false);
+        PackedB { data, k, n }
     }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// `c[m, n] = a[m, k] · b` against a pre-packed `b`: skips the pack pass,
+/// same blocked arithmetic — results match [`matmul_set`] bit-for-bit.
+pub fn matmul_set_packed(c: &mut [f32], a: &[f32], b: &PackedB, m: usize) {
+    debug_assert_eq!(a.len(), m * b.k);
+    debug_assert_eq!(c.len(), m * b.n);
+    gemm_packed(c, a, AMode::Rows, &b.data, m, b.k, b.n, true, None);
+}
+
+/// [`matmul_set_bias_gelu`] against a pre-packed `b`.
+pub fn matmul_set_bias_gelu_packed(
+    pre: &mut [f32],
+    act: &mut [f32],
+    a: &[f32],
+    b: &PackedB,
+    bias: &[f32],
+    m: usize,
+) {
+    debug_assert_eq!(a.len(), m * b.k);
+    debug_assert_eq!(pre.len(), m * b.n);
+    debug_assert_eq!(act.len(), m * b.n);
+    debug_assert_eq!(bias.len(), b.n);
+    gemm_packed(pre, a, AMode::Rows, &b.data, m, b.k, b.n, true, Some((act, bias)));
 }
 
 // ---------------------------------------------------------------------------
@@ -422,16 +907,16 @@ pub fn layernorm_rows(x: &[f32], scale: &[f32], bias: &[f32], rows: usize, d: us
 /// with per-head column blocks; fills `probs` `[b, h, s, s]` and
 /// accumulates into `ctx` `[b, s, d]` (callers pass zeroed buffers).
 /// Parallel over batch rows: each row's output block is independent.
-pub fn attention_forward<'a>(
+pub fn attention_forward(
     b: usize,
     s: usize,
     h: usize,
     hd: usize,
-    q: &'a [f32],
-    k: &'a [f32],
-    v: &'a [f32],
-    probs: &'a mut [f32],
-    ctx: &'a mut [f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &mut [f32],
+    ctx: &mut [f32],
 ) {
     let d = h * hd;
     debug_assert_eq!(probs.len(), b * h * s * s);
@@ -451,14 +936,24 @@ pub fn attention_forward<'a>(
         }
         return;
     }
-    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::with_capacity(b);
-    for (bi, (pc, cc)) in probs.chunks_mut(h * s * s).zip(ctx.chunks_mut(s * d)).enumerate() {
-        let qc = &q[bi * s * d..(bi + 1) * s * d];
-        let kc = &k[bi * s * d..(bi + 1) * s * d];
-        let vc = &v[bi * s * d..(bi + 1) * s * d];
-        jobs.push(Box::new(move || attention_forward_row(s, h, hd, qc, kc, vc, pc, cc)));
-    }
-    pool().run(jobs);
+    let pp = SendPtr(probs.as_mut_ptr());
+    let cp = SendPtr(ctx.as_mut_ptr());
+    run_chunks(b, &|bi: usize| {
+        // SAFETY: chunk `bi` touches only batch row `bi`'s disjoint slices.
+        let probs =
+            unsafe { std::slice::from_raw_parts_mut(pp.0.add(bi * h * s * s), h * s * s) };
+        let ctx = unsafe { std::slice::from_raw_parts_mut(cp.0.add(bi * s * d), s * d) };
+        attention_forward_row(
+            s,
+            h,
+            hd,
+            &q[bi * s * d..(bi + 1) * s * d],
+            &k[bi * s * d..(bi + 1) * s * d],
+            &v[bi * s * d..(bi + 1) * s * d],
+            probs,
+            ctx,
+        );
+    });
 }
 
 /// One batch row of causal attention (`q`/`k`/`v` row-local `[s, d]`).
@@ -513,19 +1008,19 @@ fn attention_forward_row(
 /// Backward of [`attention_forward`]: given `dctx` `[b, s, d]` and the
 /// forward's `probs`/`q`/`k`/`v`, accumulates into `dq`/`dk`/`dv`
 /// (zeroed by the caller). Parallel over batch rows.
-pub fn attention_backward<'a>(
+pub fn attention_backward(
     b: usize,
     s: usize,
     h: usize,
     hd: usize,
-    probs: &'a [f32],
-    q: &'a [f32],
-    k: &'a [f32],
-    v: &'a [f32],
-    dctx: &'a [f32],
-    dq: &'a mut [f32],
-    dk: &'a mut [f32],
-    dv: &'a mut [f32],
+    probs: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dctx: &[f32],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
 ) {
     let d = h * hd;
     if !parallel_ok(b, 2 * b * h * s * s * hd) {
@@ -546,23 +1041,28 @@ pub fn attention_backward<'a>(
         }
         return;
     }
-    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::with_capacity(b);
-    let iter = dq
-        .chunks_mut(s * d)
-        .zip(dk.chunks_mut(s * d))
-        .zip(dv.chunks_mut(s * d))
-        .enumerate();
-    for (bi, ((dqc, dkc), dvc)) in iter {
-        let pc = &probs[bi * h * s * s..(bi + 1) * h * s * s];
-        let qc = &q[bi * s * d..(bi + 1) * s * d];
-        let kc = &k[bi * s * d..(bi + 1) * s * d];
-        let vc = &v[bi * s * d..(bi + 1) * s * d];
-        let dc = &dctx[bi * s * d..(bi + 1) * s * d];
-        jobs.push(Box::new(move || {
-            attention_backward_row(s, h, hd, pc, qc, kc, vc, dc, dqc, dkc, dvc)
-        }));
-    }
-    pool().run(jobs);
+    let qp = SendPtr(dq.as_mut_ptr());
+    let kp = SendPtr(dk.as_mut_ptr());
+    let vp = SendPtr(dv.as_mut_ptr());
+    run_chunks(b, &|bi: usize| {
+        // SAFETY: chunk `bi` touches only batch row `bi`'s disjoint slices.
+        let dqc = unsafe { std::slice::from_raw_parts_mut(qp.0.add(bi * s * d), s * d) };
+        let dkc = unsafe { std::slice::from_raw_parts_mut(kp.0.add(bi * s * d), s * d) };
+        let dvc = unsafe { std::slice::from_raw_parts_mut(vp.0.add(bi * s * d), s * d) };
+        attention_backward_row(
+            s,
+            h,
+            hd,
+            &probs[bi * h * s * s..(bi + 1) * h * s * s],
+            &q[bi * s * d..(bi + 1) * s * d],
+            &k[bi * s * d..(bi + 1) * s * d],
+            &v[bi * s * d..(bi + 1) * s * d],
+            &dctx[bi * s * d..(bi + 1) * s * d],
+            dqc,
+            dkc,
+            dvc,
+        );
+    });
 }
 
 fn attention_backward_row(
@@ -624,16 +1124,16 @@ fn attention_backward_row(
 /// at position `pos` attends over its `pos + 1` cached keys. `q` is
 /// `[rows, d]`; `kcache`/`vcache` are `[rows, cap, d]`; accumulates into
 /// `ctx` `[rows, d]` (zeroed by the caller). Parallel over rows.
-pub fn attention_decode_step<'a>(
+pub fn attention_decode_step(
     rows: usize,
     cap: usize,
     pos: usize,
     h: usize,
     hd: usize,
-    q: &'a [f32],
-    kcache: &'a [f32],
-    vcache: &'a [f32],
-    ctx: &'a mut [f32],
+    q: &[f32],
+    kcache: &[f32],
+    vcache: &[f32],
+    ctx: &mut [f32],
 ) {
     let d = h * hd;
     debug_assert!(pos < cap);
@@ -655,30 +1155,21 @@ pub fn attention_decode_step<'a>(
         }
         return;
     }
-    let per = rows_per_job(rows);
-    let mut jobs: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::new();
-    for (ci, cc) in ctx.chunks_mut(per * d).enumerate() {
-        let r0 = ci * per;
-        let nr = cc.len() / d;
-        let qc = &q[r0 * d..(r0 + nr) * d];
-        let kc = &kcache[r0 * cap * d..(r0 + nr) * cap * d];
-        let vc = &vcache[r0 * cap * d..(r0 + nr) * cap * d];
-        jobs.push(Box::new(move || {
-            for r in 0..nr {
-                attention_decode_row(
-                    cap,
-                    pos,
-                    h,
-                    hd,
-                    &qc[r * d..(r + 1) * d],
-                    &kc[r * cap * d..(r + 1) * cap * d],
-                    &vc[r * cap * d..(r + 1) * cap * d],
-                    &mut cc[r * d..(r + 1) * d],
-                );
-            }
-        }));
-    }
-    pool().run(jobs);
+    let cp = SendPtr(ctx.as_mut_ptr());
+    run_chunks(rows, &|r: usize| {
+        // SAFETY: chunk `r` writes only row `r`'s disjoint ctx slice.
+        let crow = unsafe { std::slice::from_raw_parts_mut(cp.0.add(r * d), d) };
+        attention_decode_row(
+            cap,
+            pos,
+            h,
+            hd,
+            &q[r * d..(r + 1) * d],
+            &kcache[r * cap * d..(r + 1) * cap * d],
+            &vcache[r * cap * d..(r + 1) * cap * d],
+            crow,
+        );
+    });
 }
 
 /// One row of decode attention (`q` `[d]`, caches `[cap, d]`, `ctx` `[d]`).
@@ -734,6 +1225,14 @@ mod tests {
     use super::*;
     use crate::util::rng::Pcg64;
 
+    /// Serialises tests that toggle or depend on the process-global
+    /// `force_serial` flag (unit tests in this binary run concurrently).
+    static SERIAL_GUARD: Mutex<()> = Mutex::new(());
+
+    fn serial_guard() -> std::sync::MutexGuard<'static, ()> {
+        SERIAL_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
         (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
     }
@@ -787,13 +1286,70 @@ mod tests {
         assert!(res.is_err());
     }
 
+    /// Satellite regression: with >= 2 workers, N queued jobs must be *in
+    /// flight simultaneously* — the old channel path blocked every worker on
+    /// the shared receiver mutex during `recv`, serialising hand-offs.
+    #[test]
+    fn pool_jobs_make_progress_concurrently() {
+        let _g = serial_guard();
+        set_force_serial(false);
+        if pool().workers() < 2 {
+            return; // nothing to prove on a serial pool
+        }
+        let arrived = AtomicUsize::new(0);
+        let t0 = std::time::Instant::now();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for _ in 0..2 {
+            jobs.push(Box::new(|| {
+                arrived.fetch_add(1, Ordering::SeqCst);
+                // Each job waits (bounded) for the other: only concurrent
+                // execution lets both exit.
+                while arrived.load(Ordering::SeqCst) < 2 {
+                    assert!(
+                        t0.elapsed() < std::time::Duration::from_secs(30),
+                        "queued jobs never ran concurrently"
+                    );
+                    std::thread::yield_now();
+                }
+            }));
+        }
+        pool().run(jobs);
+        assert_eq!(arrived.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn run_chunks_covers_every_index_exactly_once() {
+        let counts: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        run_chunks(97, &|i: usize| {
+            counts[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "chunk {i} ran a wrong number of times");
+        }
+    }
+
+    #[test]
+    fn run_chunks_propagates_panics() {
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_chunks(8, &|i: usize| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+    }
+
     #[test]
     fn matmul_matches_naive_and_is_thread_invariant() {
+        let _g = serial_guard();
         let mut rng = Pcg64::from_seed(1);
-        // Large enough to cross the parallel threshold on multicore hosts.
-        let (m, k, n) = (96, 64, 48);
+        // Large enough to cross both the small-GEMM and parallel thresholds
+        // on multicore hosts, with ragged tails in every dimension.
+        let (m, k, n) = (97, 67, 51);
         let a = randv(&mut rng, m * k);
         let b = randv(&mut rng, k * n);
+        set_force_serial(false);
         let c = matmul(&a, &b, m, k, n);
         let reference = naive_matmul(&a, &b, m, k, n);
         for (x, y) in c.iter().zip(&reference) {
@@ -803,6 +1359,59 @@ mod tests {
         let c_serial = matmul(&a, &b, m, k, n);
         set_force_serial(false);
         assert_eq!(c, c_serial, "threaded matmul must be bit-identical to serial");
+    }
+
+    #[test]
+    fn matmul_set_overwrites_garbage_and_matches_acc_from_zero() {
+        let mut rng = Pcg64::from_seed(7);
+        let (m, k, n) = (33, 40, 21);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut c_set = vec![f32::NAN; m * n]; // must be fully overwritten
+        matmul_set(&mut c_set, &a, &b, m, k, n);
+        let mut c_acc = vec![0.0f32; m * n];
+        matmul_acc(&mut c_acc, &a, &b, m, k, n);
+        assert_eq!(c_set, c_acc, "set variant must equal acc-from-zero bit-for-bit");
+    }
+
+    #[test]
+    fn fused_bias_gelu_matches_unfused() {
+        let mut rng = Pcg64::from_seed(8);
+        let (m, k, n) = (26, 35, 29);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bias = randv(&mut rng, n);
+        let mut pre = vec![0.0f32; m * n];
+        let mut act = vec![0.0f32; m * n];
+        matmul_set_bias_gelu(&mut pre, &mut act, &a, &b, &bias, m, k, n);
+
+        let mut expect_pre = matmul(&a, &b, m, k, n);
+        for r in 0..m {
+            for j in 0..n {
+                expect_pre[r * n + j] += bias[j];
+            }
+        }
+        let expect_act: Vec<f32> = expect_pre.iter().map(|&z| gelu(z)).collect();
+        assert_eq!(pre, expect_pre, "fused pre-activation diverged");
+        assert_eq!(act, expect_act, "fused activation diverged");
+    }
+
+    #[test]
+    fn packed_matmul_matches_unpacked_bitwise() {
+        let mut rng = Pcg64::from_seed(9);
+        // One shape under the small-GEMM threshold, one over it: the packed
+        // entry always runs blocked, and must still match both.
+        for (m, k, n) in [(3usize, 19usize, 11usize), (70, 64, 50)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let unpacked = matmul(&a, &b, m, k, n);
+            let packed = PackedB::pack(&b, k, n);
+            assert_eq!(packed.k(), k);
+            assert_eq!(packed.n(), n);
+            let mut c = vec![f32::NAN; m * n];
+            matmul_set_packed(&mut c, &a, &packed, m);
+            assert_eq!(c, unpacked, "packed path diverged at {m}x{k}x{n}");
+        }
     }
 
     #[test]

@@ -10,6 +10,13 @@
 //! kernels, same scalar accumulation order), so session logits are
 //! bit-identical to the `decode` executable's at the same position; the
 //! `decode_parity` integration tests pin this within 1e-4.
+//!
+//! Because a session's weights are frozen to one snapshot, every layer's
+//! projection matrices (and the unembed) are packed into the blocked GEMM
+//! panel layout **once at session start** and reused every token — the
+//! per-step matmuls skip the pack pass entirely. Step scratch lives in a
+//! [`StepBuffers`] workspace sized on first use and recycled per token, so
+//! the steady-state decode loop performs no heap allocation.
 
 #![allow(clippy::needless_range_loop)]
 
@@ -56,6 +63,36 @@ impl DecodeSessionFactory for NativeDecodeFactory {
     }
 }
 
+/// One layer's projection weights, pre-packed into the blocked GEMM panel
+/// layout (the session's snapshot is immutable, so packing happens once).
+struct LayerWeights {
+    wq: kernels::PackedB,
+    wk: kernels::PackedB,
+    wv: kernels::PackedB,
+    wo: kernels::PackedB,
+    w1: kernels::PackedB,
+    w2: kernels::PackedB,
+}
+
+/// Per-step scratch, sized on first use and reused every token.
+#[derive(Default)]
+struct StepBuffers {
+    /// Residual stream for the new position `[rows, d]`.
+    x: Vec<f32>,
+    /// LayerNorm output (reused sequentially for ln1 / ln2 / lnf).
+    ln_y: Vec<f32>,
+    ln_mean: Vec<f32>,
+    ln_inv: Vec<f32>,
+    q: Vec<f32>,
+    knew: Vec<f32>,
+    vnew: Vec<f32>,
+    ctx: Vec<f32>,
+    /// Output projection scratch (reused for the wo and w2 projections).
+    proj: Vec<f32>,
+    mlp_pre: Vec<f32>,
+    mlp_act: Vec<f32>,
+}
+
 /// One live KV-cache decode session (weights pinned to one snapshot).
 pub struct NativeDecodeSession {
     dims: Dims,
@@ -72,6 +109,12 @@ pub struct NativeDecodeSession {
     vcache: Vec<Vec<f32>>,
     /// Next-token logits `[rows, vocab]` for position `len`.
     logits: Vec<f32>,
+    /// Per-layer weights packed once for the blocked GEMM fast path.
+    packed: Vec<LayerWeights>,
+    /// The `[d, vocab]` unembedding, packed once.
+    unembed: kernels::PackedB,
+    /// Reused per-step scratch.
+    bufs: StepBuffers,
 }
 
 impl NativeDecodeSession {
@@ -116,9 +159,9 @@ impl NativeDecodeSession {
             );
         }
 
-        let (d, v) = (dims.d_model, dims.vocab);
+        let (d, v, f) = (dims.d_model, dims.vocab, dims.d_ff);
         let cap = window;
-        let (kcache, vcache, logits) = {
+        let (kcache, vcache, logits, packed, unembed) = {
             let p: Vec<&[f32]> =
                 snapshot.params.iter().map(|t| t.as_f32()).collect::<Result<Vec<_>>>()?;
             // Batched prefill: one full forward over the prompt window seeds
@@ -148,7 +191,23 @@ impl NativeDecodeSession {
                 let src = (r * prompt_len + prompt_len - 1) * v;
                 logits[r * v..(r + 1) * v].copy_from_slice(&cache.logits[src..src + v]);
             }
-            (kcache, vcache, logits)
+            // Pack every per-step weight operand once; steps reuse the
+            // panels for the whole session (results stay bit-identical to
+            // the unpacked kernels — same blocked accumulation order).
+            let mut packed = Vec::with_capacity(dims.n_layers);
+            for layer in 0..dims.n_layers {
+                let base = dims.layer_base(layer);
+                packed.push(LayerWeights {
+                    wq: kernels::PackedB::pack(p[base + L_WQ], d, d),
+                    wk: kernels::PackedB::pack(p[base + L_WK], d, d),
+                    wv: kernels::PackedB::pack(p[base + L_WV], d, d),
+                    wo: kernels::PackedB::pack(p[base + L_WO], d, d),
+                    w1: kernels::PackedB::pack(p[base + L_W1], d, f),
+                    w2: kernels::PackedB::pack(p[base + L_W2], f, d),
+                });
+            }
+            let unembed = kernels::PackedB::pack(p[dims.unembed_idx()], d, v);
+            (kcache, vcache, logits, packed, unembed)
         };
         Ok(NativeDecodeSession {
             dims,
@@ -159,6 +218,9 @@ impl NativeDecodeSession {
             kcache,
             vcache,
             logits,
+            packed,
+            unembed,
+            bufs: StepBuffers::default(),
         })
     }
 
@@ -178,18 +240,34 @@ impl NativeDecodeSession {
         if self.len + 1 >= self.cap {
             bail!("decode window exhausted at {} of {} tokens", self.len, self.cap);
         }
-        let dims = &self.dims;
+        // Borrow-split: caches, scratch, and packed weights are disjoint
+        // fields, so the per-layer loop can hold &mut to several at once.
+        let NativeDecodeSession {
+            dims,
+            snapshot,
+            len,
+            cap,
+            kcache,
+            vcache,
+            logits,
+            packed,
+            unembed,
+            bufs,
+            ..
+        } = self;
         let (d, v, f, h, hd) =
             (dims.d_model, dims.vocab, dims.d_ff, dims.n_heads, dims.head_dim());
-        let pos = self.len;
-        let cap = self.cap;
+        let pos = *len;
+        let cap = *cap;
         let p: Vec<&[f32]> =
-            self.snapshot.params.iter().map(|t| t.as_f32()).collect::<Result<Vec<_>>>()?;
+            snapshot.params.iter().map(|t| t.as_f32()).collect::<Result<Vec<_>>>()?;
+        let StepBuffers { x, ln_y, ln_mean, ln_inv, q, knew, vnew, ctx, proj, mlp_pre, mlp_act } =
+            bufs;
 
         // Embedding + positional for the one new token per row.
         let embed = p[0];
         let pos_embed = p[1];
-        let mut x = vec![0.0f32; rows * d];
+        x.resize(rows * d, 0.0);
         for r in 0..rows {
             let tok = new_tokens[r];
             if tok < 0 || tok as usize >= v {
@@ -203,70 +281,96 @@ impl NativeDecodeSession {
             }
         }
 
-        for layer in 0..dims.n_layers {
+        for (layer, lw) in packed.iter().enumerate() {
             let base = dims.layer_base(layer);
-            let ln1 = kernels::layernorm_rows(&x, p[base + L_LN1S], p[base + L_LN1B], rows, d);
-            let q = kernels::matmul(&ln1, p[base + L_WQ], rows, d, d);
-            let knew = kernels::matmul(&ln1, p[base + L_WK], rows, d, d);
-            let vnew = kernels::matmul(&ln1, p[base + L_WV], rows, d, d);
+            kernels::layernorm_stats_into(
+                x,
+                p[base + L_LN1S],
+                p[base + L_LN1B],
+                rows,
+                d,
+                ln_y,
+                ln_mean,
+                ln_inv,
+            );
+            q.resize(rows * d, 0.0);
+            knew.resize(rows * d, 0.0);
+            vnew.resize(rows * d, 0.0);
+            kernels::matmul_set_packed(q, ln_y, &lw.wq, rows);
+            kernels::matmul_set_packed(knew, ln_y, &lw.wk, rows);
+            kernels::matmul_set_packed(vnew, ln_y, &lw.wv, rows);
             {
-                let kc = &mut self.kcache[layer];
-                let vc = &mut self.vcache[layer];
+                let kc = &mut kcache[layer];
+                let vc = &mut vcache[layer];
                 for r in 0..rows {
                     let at = (r * cap + pos) * d;
                     kc[at..at + d].copy_from_slice(&knew[r * d..(r + 1) * d]);
                     vc[at..at + d].copy_from_slice(&vnew[r * d..(r + 1) * d]);
                 }
             }
-            let mut ctx = vec![0.0f32; rows * d];
+            kernels::reset(ctx, rows * d);
             kernels::attention_decode_step(
                 rows,
                 cap,
                 pos,
                 h,
                 hd,
-                &q,
-                &self.kcache[layer],
-                &self.vcache[layer],
-                &mut ctx,
+                q,
+                &kcache[layer],
+                &vcache[layer],
+                ctx,
             );
-            let attn_out = kernels::matmul(&ctx, p[base + L_WO], rows, d, d);
+            proj.resize(rows * d, 0.0);
+            kernels::matmul_set_packed(proj, ctx, &lw.wo, rows);
             for j in 0..rows * d {
-                x[j] += attn_out[j];
+                x[j] += proj[j];
             }
 
-            let ln2 = kernels::layernorm_rows(&x, p[base + L_LN2S], p[base + L_LN2B], rows, d);
-            let mut mlp_pre = kernels::matmul(&ln2, p[base + L_W1], rows, d, f);
-            let b1 = p[base + L_B1];
-            for r in 0..rows {
-                let row = &mut mlp_pre[r * f..(r + 1) * f];
-                for j in 0..f {
-                    row[j] += b1[j];
-                }
-            }
-            let mlp_act: Vec<f32> = mlp_pre.iter().map(|&z| kernels::gelu(z)).collect();
-            let mlp_out = kernels::matmul(&mlp_act, p[base + L_W2], rows, f, d);
+            kernels::layernorm_stats_into(
+                x,
+                p[base + L_LN2S],
+                p[base + L_LN2B],
+                rows,
+                d,
+                ln_y,
+                ln_mean,
+                ln_inv,
+            );
+            mlp_pre.resize(rows * f, 0.0);
+            mlp_act.resize(rows * f, 0.0);
+            kernels::matmul_set_bias_gelu_packed(
+                mlp_pre,
+                mlp_act,
+                ln_y,
+                &lw.w1,
+                p[base + L_B1],
+                rows,
+            );
+            proj.resize(rows * d, 0.0);
+            kernels::matmul_set_packed(proj, mlp_act, &lw.w2, rows);
             let b2 = p[base + L_B2];
             for r in 0..rows {
                 let xr = &mut x[r * d..(r + 1) * d];
-                let mr = &mlp_out[r * d..(r + 1) * d];
+                let mr = &proj[r * d..(r + 1) * d];
                 for j in 0..d {
                     xr[j] += mr[j] + b2[j];
                 }
             }
         }
 
-        let lnf = kernels::layernorm_rows(
-            &x,
+        kernels::layernorm_stats_into(
+            x,
             p[dims.lnf_scale_idx()],
             p[dims.lnf_scale_idx() + 1],
             rows,
             d,
+            ln_y,
+            ln_mean,
+            ln_inv,
         );
-        let logits = kernels::matmul(&lnf, p[dims.unembed_idx()], rows, d, v);
-        drop(p);
-        self.logits = logits;
-        self.len += 1;
+        logits.resize(rows * v, 0.0);
+        kernels::matmul_set_packed(logits, ln_y, unembed, rows);
+        *len += 1;
         Ok(())
     }
 }

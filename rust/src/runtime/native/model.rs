@@ -12,7 +12,7 @@
 #![allow(clippy::needless_range_loop)]
 
 use super::kernels::{
-    self, attention_backward, attention_forward, gelu, gelu_grad, matmul_a_bt_acc, matmul_at_b_acc,
+    self, attention_backward, attention_forward, gelu_grad, matmul_a_bt_acc, matmul_at_b_acc,
 };
 use crate::runtime::manifest::{Dtype, TensorSpec};
 use crate::runtime::tensor::HostTensor;
@@ -103,6 +103,18 @@ impl Dims {
 
     pub(crate) fn unembed_idx(&self) -> usize {
         self.lnf_scale_idx() + 2
+    }
+
+    /// Dense-GEMM FLOPs (counting `2·m·k·n` per matmul) of one forward pass
+    /// over `rows` token positions: the q/k/v/o projections, the MLP pair,
+    /// and the unembedding. Attention score/context products and
+    /// element-wise work are excluded — benches use this as the GFLOP/s
+    /// denominator, so the convention just needs to be stated and stable.
+    pub fn forward_gemm_flops(&self, rows: usize) -> u64 {
+        let (d, f, v) = (self.d_model as u64, self.d_ff as u64, self.vocab as u64);
+        let rows = rows as u64;
+        let per_layer = 4 * 2 * rows * d * d + 2 * 2 * rows * d * f;
+        self.n_layers as u64 * per_layer + 2 * rows * d * v
     }
 }
 
@@ -275,10 +287,12 @@ pub fn forward(dims: &Dims, p: &[&[f32]], tokens: &[i32], b: usize, s: usize) ->
 
 /// [`forward`] into a reused [`Cache`]: after the first call no buffer
 /// reallocates (same geometry), and the math is bit-identical to the
-/// allocating path (`matmul` is itself zero-then-accumulate).
+/// allocating path (`matmul` itself runs the overwrite kernel). The
+/// `resize` only fills on first use; warm buffers skip the zeroing sweep
+/// entirely — `matmul_set` overwrites every element.
 fn matmul_into(out: &mut Vec<f32>, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    kernels::reset(out, m * n);
-    kernels::matmul_acc(out, a, b, m, k, n);
+    out.resize(m * n, 0.0);
+    kernels::matmul_set(out, a, b, m, k, n);
 }
 
 pub fn forward_into(
@@ -331,16 +345,20 @@ pub fn forward_into(
         }
 
         layernorm_into(x, p[base + L_LN2S], p[base + L_LN2B], rows, d, &mut lc.ln2);
-        matmul_into(&mut lc.mlp_pre, &lc.ln2.y, p[base + L_W1], rows, d, f);
-        let b1 = p[base + L_B1];
-        for r in 0..rows {
-            let row = &mut lc.mlp_pre[r * f..(r + 1) * f];
-            for j in 0..f {
-                row[j] += b1[j];
-            }
-        }
-        lc.mlp_act.clear();
-        lc.mlp_act.extend(lc.mlp_pre.iter().map(|&z| gelu(z)));
+        // MLP up-projection with bias + GELU fused into the matmul epilogue:
+        // one pass over the [rows, f] pre-activation instead of three.
+        lc.mlp_pre.resize(rows * f, 0.0);
+        lc.mlp_act.resize(rows * f, 0.0);
+        kernels::matmul_set_bias_gelu(
+            &mut lc.mlp_pre,
+            &mut lc.mlp_act,
+            &lc.ln2.y,
+            p[base + L_W1],
+            p[base + L_B1],
+            rows,
+            d,
+            f,
+        );
         matmul_into(tmp, &lc.mlp_act, p[base + L_W2], rows, f, d);
         let b2 = p[base + L_B2];
         for r in 0..rows {

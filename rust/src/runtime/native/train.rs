@@ -47,6 +47,15 @@ impl StepWorkspace {
     }
 }
 
+/// Dense-GEMM FLOPs of one full train step (all `n_minibatch` passes over
+/// the `[train_batch, seq_len]` window): the forward's GEMMs plus the
+/// backward's two gradient GEMMs per forward GEMM — the 3x rule of thumb.
+/// Benches divide this by measured step time for GFLOP/s.
+pub fn train_step_gemm_flops(preset: &NativePreset) -> u64 {
+    let rows = preset.train_batch * preset.seq_len();
+    3 * preset.dims.forward_gemm_flops(rows)
+}
+
 /// One RL step over the full train batch: `n_minibatch` sequential
 /// forward/backward/Adam passes mutating `params`/`adam_m`/`adam_v`/`step`
 /// in place. `theta_out` receives the θ log-probs `[tb, t]`. The caller

@@ -1,0 +1,258 @@
+//! Property tests pinning the blocked GEMM kernels against a naive f64
+//! reference, and the determinism contract: results are bit-identical
+//! across `set_force_serial` on/off in-process and across
+//! `A3PO_THREADS=1` vs `A3PO_THREADS=4` out-of-process (the pool reads the
+//! variable once at startup, so the cross-thread-count check re-runs this
+//! test binary as a child with the variable set).
+
+use std::sync::Mutex;
+
+use a3po::runtime::native::kernels::{
+    self, matmul, matmul_a_bt_acc, matmul_acc, matmul_at_b_acc, matmul_set, matmul_set_bias_gelu,
+    set_force_serial,
+};
+use a3po::util::rng::Pcg64;
+
+/// Serialises tests that toggle the process-global force-serial flag.
+static SERIAL_GUARD: Mutex<()> = Mutex::new(());
+
+fn serial_guard() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Inputs scaled to ±0.25 keep f32 accumulation error well under the 1e-5
+/// pin even at the largest k used here (the checks stay deterministic:
+/// fixed seeds, fixed shapes).
+fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() * 0.5 - 0.25).collect()
+}
+
+/// Random shapes with ragged tails in every dimension (not multiples of the
+/// MR/NR/KC tiles), k values crossing the KC=256 block boundary, and both
+/// sides of the small-GEMM cutoff.
+fn shapes() -> Vec<(usize, usize, usize)> {
+    let mut rng = Pcg64::from_seed(41);
+    let mut out = vec![
+        (1, 1, 1),
+        (kernels::MR + 1, kernels::KC + 3, kernels::NR + 5),
+        (2 * kernels::MR, 2 * kernels::KC, 2 * kernels::NR),
+        (37, 300, 23),
+        (64, 513, 31),
+    ];
+    for _ in 0..10 {
+        out.push((
+            1 + rng.below(40) as usize,
+            1 + rng.below(400) as usize,
+            1 + rng.below(48) as usize,
+        ));
+    }
+    out
+}
+
+fn ref_ab(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+            }
+            c[i * n + j] = acc as f32;
+        }
+    }
+    c
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str, shape: (usize, usize, usize)) {
+    assert_eq!(got.len(), want.len());
+    for (idx, (x, y)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-5,
+            "{what} {shape:?} diverges from naive reference at {idx}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn blocked_ab_matches_naive_reference() {
+    let mut rng = Pcg64::from_seed(11);
+    for (m, k, n) in shapes() {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let c = matmul(&a, &b, m, k, n);
+        assert_close(&c, &ref_ab(&a, &b, m, k, n), "a·b", (m, k, n));
+    }
+}
+
+#[test]
+fn blocked_at_b_matches_naive_reference() {
+    let mut rng = Pcg64::from_seed(12);
+    for (m, k, n) in shapes() {
+        // a is [k, m]; reference via explicit transpose.
+        let a = randv(&mut rng, k * m);
+        let b = randv(&mut rng, k * n);
+        let mut c = vec![0.0f32; m * n];
+        matmul_at_b_acc(&mut c, &a, &b, k, m, n);
+        let mut at = vec![0.0f32; m * k];
+        for p in 0..k {
+            for i in 0..m {
+                at[i * k + p] = a[p * m + i];
+            }
+        }
+        assert_close(&c, &ref_ab(&at, &b, m, k, n), "aᵀ·b", (m, k, n));
+    }
+}
+
+#[test]
+fn blocked_a_bt_matches_naive_reference() {
+    let mut rng = Pcg64::from_seed(13);
+    for (m, k, n) in shapes() {
+        // b is [n, k]; reference via explicit transpose.
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, n * k);
+        let mut c = vec![0.0f32; m * n];
+        matmul_a_bt_acc(&mut c, &a, &b, m, k, n);
+        let mut bt = vec![0.0f32; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                bt[p * n + j] = b[j * k + p];
+            }
+        }
+        assert_close(&c, &ref_ab(&a, &bt, m, k, n), "a·bᵀ", (m, k, n));
+    }
+}
+
+#[test]
+fn all_variants_bit_identical_serial_vs_threaded() {
+    let _g = serial_guard();
+    let mut rng = Pcg64::from_seed(14);
+    for (m, k, n) in shapes() {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let a_t = randv(&mut rng, k * m);
+        let b_t = randv(&mut rng, n * k);
+
+        let mut results: Vec<Vec<Vec<f32>>> = Vec::new();
+        for serial in [false, true] {
+            set_force_serial(serial);
+            let ab = matmul(&a, &b, m, k, n);
+            let mut atb = vec![0.0f32; m * n];
+            matmul_at_b_acc(&mut atb, &a_t, &b, k, m, n);
+            let mut abt = vec![0.0f32; m * n];
+            matmul_a_bt_acc(&mut abt, &a, &b_t, m, k, n);
+            results.push(vec![ab, atb, abt]);
+        }
+        set_force_serial(false);
+        for (v, name) in ["a·b", "aᵀ·b", "a·bᵀ"].iter().enumerate() {
+            assert_eq!(
+                results[0][v], results[1][v],
+                "{name} at {:?} not bit-identical across force_serial",
+                (m, k, n)
+            );
+        }
+    }
+}
+
+#[test]
+fn set_variant_bit_identical_to_acc_from_zero() {
+    let mut rng = Pcg64::from_seed(15);
+    for (m, k, n) in shapes() {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut c_set = vec![f32::NAN; m * n];
+        matmul_set(&mut c_set, &a, &b, m, k, n);
+        let mut c_acc = vec![0.0f32; m * n];
+        matmul_acc(&mut c_acc, &a, &b, m, k, n);
+        assert_eq!(c_set, c_acc, "set vs acc-from-zero at {:?}", (m, k, n));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-process bit-equality: the pool sizes itself from A3PO_THREADS once
+// at first use, so different thread counts need separate processes.
+
+/// FNV-1a over the raw bit patterns of every result the kernel suite
+/// produces — any accumulation-order difference changes this value.
+fn gemm_checksum() -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let mut fold = |buf: &[f32]| {
+        for &x in buf {
+            h = (h ^ x.to_bits() as u64).wrapping_mul(FNV_PRIME);
+        }
+    };
+    let mut rng = Pcg64::from_seed(16);
+    // Shapes chosen to exercise the parallel path (above the ~128k
+    // multiply-add serial cutoff) as well as ragged serial ops.
+    for (m, k, n) in [(96, 128, 64), (256, 256, 64), (33, 300, 21), (5, 7, 3)] {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let a_t = randv(&mut rng, k * m);
+        let b_t = randv(&mut rng, n * k);
+        let bias = randv(&mut rng, n);
+        fold(&matmul(&a, &b, m, k, n));
+        let mut atb = vec![0.0f32; m * n];
+        matmul_at_b_acc(&mut atb, &a_t, &b, k, m, n);
+        fold(&atb);
+        let mut abt = vec![0.0f32; m * n];
+        matmul_a_bt_acc(&mut abt, &a, &b_t, m, k, n);
+        fold(&abt);
+        let mut pre = vec![0.0f32; m * n];
+        let mut act = vec![0.0f32; m * n];
+        matmul_set_bias_gelu(&mut pre, &mut act, &a, &b, &bias, m, k, n);
+        fold(&pre);
+        fold(&act);
+        let packed = kernels::PackedB::pack(&b, k, n);
+        let mut c = vec![0.0f32; m * n];
+        kernels::matmul_set_packed(&mut c, &a, &packed, m);
+        fold(&c);
+    }
+    h
+}
+
+/// Not an assertion by itself: prints the checksum marker the
+/// cross-thread-count test below scrapes from a child process. Running it
+/// standalone is harmless.
+#[test]
+fn helper_gemm_checksum_print() {
+    let _g = serial_guard();
+    set_force_serial(false);
+    println!("GEMM_CHECKSUM={:016x}", gemm_checksum());
+}
+
+#[test]
+fn bit_identical_across_a3po_threads_1_vs_4() {
+    let exe = std::env::current_exe().expect("test binary path");
+    let run_child = |threads: &str| -> u64 {
+        let out = std::process::Command::new(&exe)
+            .args(["helper_gemm_checksum_print", "--exact", "--nocapture", "--test-threads=1"])
+            .env("A3PO_THREADS", threads)
+            .output()
+            .expect("spawning checksum child");
+        assert!(
+            out.status.success(),
+            "child (A3PO_THREADS={threads}) failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        stdout
+            .lines()
+            .find_map(|l| {
+                l.trim()
+                    .strip_prefix("GEMM_CHECKSUM=")
+                    .and_then(|hex| u64::from_str_radix(hex, 16).ok())
+            })
+            .unwrap_or_else(|| panic!("no GEMM_CHECKSUM marker in child output:\n{stdout}"))
+    };
+    let c1 = run_child("1");
+    let c4 = run_child("4");
+    assert_eq!(c1, c4, "GEMM results differ between A3PO_THREADS=1 and A3PO_THREADS=4");
+    // And the ambient-threaded parent process agrees with both.
+    let local = {
+        let _g = serial_guard();
+        set_force_serial(false);
+        gemm_checksum()
+    };
+    assert_eq!(local, c1, "parent-process GEMM results differ from A3PO_THREADS=1 child");
+}
