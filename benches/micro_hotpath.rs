@@ -15,7 +15,7 @@
 
 use std::path::PathBuf;
 
-use a3po::bench::{bench, write_bench_json};
+use a3po::bench::{bench, kernel_info_json, write_bench_json};
 use a3po::buffer::{Episode, EpisodeBuffer};
 use a3po::config::{AlphaSchedule, StalenessPolicy};
 use a3po::coordinator::advantage::grpo_group_advantages;
@@ -223,12 +223,24 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(session.logits()[0]);
     });
 
-    // Blocked GEMM vs the pre-blocking naive kernel on the acceptance
-    // shapes: rows=256 x d=256 against a vocab-sized and a d_ff-sized n.
-    println!("\n== Blocked GEMM vs naive baseline (GFLOP/s) ==\n");
+    // Blocked GEMM (scalar tile and the dispatched SIMD tile) vs the
+    // pre-blocking naive kernel on the acceptance shapes: rows=256 x d=256
+    // against a vocab-sized and a d_ff-sized n.
+    println!("\n== Blocked GEMM: naive vs blocked-scalar vs dispatched tile (GFLOP/s) ==\n");
+    let info = kernels::kernel_info();
+    println!(
+        "kernel path: isa={} (simd_available={}), tile {}x{}x{}, {} threads\n",
+        info.isa.name(),
+        info.simd_available,
+        info.mr,
+        info.nr,
+        info.kc,
+        info.threads
+    );
     let threads = kernels::pool().workers();
     let mut shape_rows: Vec<Json> = Vec::new();
     let mut min_speedup = f64::INFINITY;
+    let mut min_speedup_simd = f64::INFINITY;
     for (m, kd, n) in [(256usize, 256usize, 64usize), (256, 256, 1024)] {
         let flops = 2.0 * (m * kd * n) as f64;
         let gflops = |mean_ns: f64| flops / mean_ns.max(1e-9);
@@ -236,25 +248,42 @@ fn main() -> anyhow::Result<()> {
         let a: Vec<f32> = (0..m * kd).map(|_| rng.next_f32() - 0.5).collect();
         let b: Vec<f32> = (0..kd * n).map(|_| rng.next_f32() - 0.5).collect();
 
-        // Cross-check the baseline replica against the shipped kernel
-        // before timing anything.
+        // Cross-check the baseline replica against the shipped kernel, and
+        // pin scalar-vs-dispatched bit-equality, before timing anything.
         let c_old = naive_matmul_old(&a, &b, m, kd, n, false);
         let c_new = kernels::matmul(&a, &b, m, kd, n);
         for (x, y) in c_old.iter().zip(&c_new) {
             assert!((x - y).abs() < 1e-2, "baseline replica diverged: {x} vs {y}");
         }
+        kernels::set_kernel_override(Some(kernels::KernelIsa::Scalar));
+        let c_scalar = kernels::matmul(&a, &b, m, kd, n);
+        kernels::set_kernel_override(None);
+        assert_eq!(c_scalar, c_new, "scalar vs dispatched tile diverged (must be bit-identical)");
 
         let old_thr = bench(&format!("naive matmul {m}x{kd}x{n} ({threads} thr)"), iters, || {
             std::hint::black_box(naive_matmul_old(&a, &b, m, kd, n, true));
         });
-        let new_thr = bench(&format!("blocked matmul {m}x{kd}x{n} ({threads} thr)"), iters, || {
+        kernels::set_kernel_override(Some(kernels::KernelIsa::Scalar));
+        let scl_thr =
+            bench(&format!("blocked-scalar matmul {m}x{kd}x{n} ({threads} thr)"), iters, || {
+                std::hint::black_box(kernels::matmul(&a, &b, m, kd, n));
+            });
+        kernels::set_kernel_override(None);
+        let lbl = format!("blocked-{} matmul {m}x{kd}x{n} ({threads} thr)", info.isa.name());
+        let new_thr = bench(&lbl, iters, || {
             std::hint::black_box(kernels::matmul(&a, &b, m, kd, n));
         });
         kernels::set_force_serial(true);
         let old_ser = bench(&format!("naive matmul {m}x{kd}x{n} (serial)"), iters, || {
             std::hint::black_box(naive_matmul_old(&a, &b, m, kd, n, false));
         });
-        let new_ser = bench(&format!("blocked matmul {m}x{kd}x{n} (serial)"), iters, || {
+        kernels::set_kernel_override(Some(kernels::KernelIsa::Scalar));
+        let scl_ser = bench(&format!("blocked-scalar matmul {m}x{kd}x{n} (serial)"), iters, || {
+            std::hint::black_box(kernels::matmul(&a, &b, m, kd, n));
+        });
+        kernels::set_kernel_override(None);
+        let lbl = format!("blocked-{} matmul {m}x{kd}x{n} (serial)", info.isa.name());
+        let new_ser = bench(&lbl, iters, || {
             std::hint::black_box(kernels::matmul(&a, &b, m, kd, n));
         });
         kernels::set_force_serial(false);
@@ -262,13 +291,24 @@ fn main() -> anyhow::Result<()> {
         let speedup_thr = gflops(new_thr.mean_ns) / gflops(old_thr.mean_ns);
         let speedup_ser = gflops(new_ser.mean_ns) / gflops(old_ser.mean_ns);
         min_speedup = min_speedup.min(speedup_thr);
+        let (simd_thr, simd_ser) = if info.simd_available {
+            let st = gflops(new_thr.mean_ns) / gflops(scl_thr.mean_ns);
+            let ss = gflops(new_ser.mean_ns) / gflops(scl_ser.mean_ns);
+            min_speedup_simd = min_speedup_simd.min(st);
+            (Json::Num(st), Json::Num(ss))
+        } else {
+            (Json::Null, Json::Null)
+        };
         println!(
-            "  {m}x{kd}x{n}: blocked {:.2} GFLOP/s vs naive {:.2} GFLOP/s threaded \
-             ({speedup_thr:.2}x); {:.2} vs {:.2} serial ({speedup_ser:.2}x)\n",
-            gflops(new_thr.mean_ns),
+            "  {m}x{kd}x{n} threaded: naive {:.2} | blocked-scalar {:.2} | {} {:.2} GFLOP/s \
+             ({speedup_thr:.2}x vs naive); serial: {:.2} | {:.2} | {:.2} ({speedup_ser:.2}x)\n",
             gflops(old_thr.mean_ns),
-            gflops(new_ser.mean_ns),
+            gflops(scl_thr.mean_ns),
+            info.isa.name(),
+            gflops(new_thr.mean_ns),
             gflops(old_ser.mean_ns),
+            gflops(scl_ser.mean_ns),
+            gflops(new_ser.mean_ns),
         );
         shape_rows.push(Json::obj(vec![
             ("m", Json::Num(m as f64)),
@@ -276,20 +316,106 @@ fn main() -> anyhow::Result<()> {
             ("n", Json::Num(n as f64)),
             ("naive_threaded_gflops", Json::Num(gflops(old_thr.mean_ns))),
             ("naive_serial_gflops", Json::Num(gflops(old_ser.mean_ns))),
+            ("blocked_scalar_threaded_gflops", Json::Num(gflops(scl_thr.mean_ns))),
+            ("blocked_scalar_serial_gflops", Json::Num(gflops(scl_ser.mean_ns))),
             ("blocked_threaded_gflops", Json::Num(gflops(new_thr.mean_ns))),
             ("blocked_serial_gflops", Json::Num(gflops(new_ser.mean_ns))),
             ("speedup_blocked_vs_naive_threaded", Json::Num(speedup_thr)),
             ("speedup_blocked_vs_naive_serial", Json::Num(speedup_ser)),
+            ("speedup_simd_vs_scalar_threaded", simd_thr),
+            ("speedup_simd_vs_scalar_serial", simd_ser),
         ]));
     }
+
+    // Fused q/k/v projection: three matmul_set calls vs one
+    // matmul_set_multi sharing the A micropanel pack (the model.rs shape).
+    println!("== Fused q/k/v projection: separate vs multi-B (GFLOP/s) ==\n");
+    let qkv = {
+        let (m, kd, n) = (256usize, 256usize, 256usize);
+        let flops = 3.0 * 2.0 * (m * kd * n) as f64;
+        let gflops = |mean_ns: f64| flops / mean_ns.max(1e-9);
+        let a: Vec<f32> = (0..m * kd).map(|_| rng.next_f32() - 0.5).collect();
+        let bs: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..kd * n).map(|_| rng.next_f32() - 0.5).collect()).collect();
+        let mut sep: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0f32; m * n]).collect();
+        let mut multi: Vec<Vec<f32>> = (0..3).map(|_| vec![f32::NAN; m * n]).collect();
+
+        // Correctness first: the fused path must match three singles
+        // bit-for-bit.
+        for (c, b) in sep.iter_mut().zip(bs.iter()) {
+            kernels::matmul_set(c, &a, b, m, kd, n);
+        }
+        {
+            let (c0, rest) = multi.split_first_mut().unwrap();
+            let (c1, rest) = rest.split_first_mut().unwrap();
+            let c2 = &mut rest[0];
+            kernels::matmul_set_multi(
+                [c0.as_mut_slice(), c1.as_mut_slice(), c2.as_mut_slice()],
+                &a,
+                [&bs[0], &bs[1], &bs[2]],
+                m,
+                kd,
+                n,
+            );
+        }
+        assert_eq!(sep, multi, "matmul_set_multi diverged from three matmul_set calls");
+
+        let sep_stats = bench(&format!("3x matmul_set {m}x{kd}x{n} (q/k/v)"), 20, || {
+            for (c, b) in sep.iter_mut().zip(bs.iter()) {
+                kernels::matmul_set(c, &a, b, m, kd, n);
+            }
+            std::hint::black_box(sep[0][0]);
+        });
+        let multi_stats = bench(&format!("matmul_set_multi {m}x{kd}x{n} (q/k/v)"), 20, || {
+            let (c0, rest) = multi.split_first_mut().unwrap();
+            let (c1, rest) = rest.split_first_mut().unwrap();
+            let c2 = &mut rest[0];
+            kernels::matmul_set_multi(
+                [c0.as_mut_slice(), c1.as_mut_slice(), c2.as_mut_slice()],
+                &a,
+                [&bs[0], &bs[1], &bs[2]],
+                m,
+                kd,
+                n,
+            );
+            std::hint::black_box(multi[0][0]);
+        });
+        let speedup = gflops(multi_stats.mean_ns) / gflops(sep_stats.mean_ns);
+        println!(
+            "  q/k/v {m}x{kd}x{n}: multi-B {:.2} GFLOP/s vs separate {:.2} GFLOP/s \
+             ({speedup:.2}x)\n",
+            gflops(multi_stats.mean_ns),
+            gflops(sep_stats.mean_ns),
+        );
+        Json::obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("k", Json::Num(kd as f64)),
+            ("n", Json::Num(n as f64)),
+            ("separate_gflops", Json::Num(gflops(sep_stats.mean_ns))),
+            ("multi_gflops", Json::Num(gflops(multi_stats.mean_ns))),
+            ("speedup_multi_vs_separate", Json::Num(speedup)),
+        ])
+    };
+
     println!("min blocked-vs-naive speedup: {min_speedup:.2}x (target >= 3x)");
+    let min_simd_json = if info.simd_available {
+        println!("min simd-vs-scalar speedup: {min_speedup_simd:.2}x (target >= 1.5x)");
+        Json::Num(min_speedup_simd)
+    } else {
+        println!("simd unavailable on this host: simd-vs-scalar comparison skipped");
+        Json::Null
+    };
     write_bench_json(
         &PathBuf::from(parsed.str("out")),
         &Json::obj(vec![
+            ("kernel", kernel_info_json()),
             ("kernel_threads", Json::Num(threads as f64)),
             ("shapes", Json::Arr(shape_rows)),
+            ("qkv", qkv),
             ("min_speedup_vs_naive", Json::Num(min_speedup)),
             ("target_speedup_vs_naive", Json::Num(3.0)),
+            ("min_speedup_simd_vs_scalar", min_simd_json),
+            ("target_speedup_simd_vs_scalar", Json::Num(1.5)),
         ]),
     )?;
     Ok(())

@@ -21,7 +21,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use a3po::bench::write_bench_json;
+use a3po::bench::{kernel_info_json, write_bench_json};
 use a3po::config::Method;
 use a3po::coordinator::batch::TrainBatch;
 use a3po::coordinator::Trainer;
@@ -224,6 +224,7 @@ fn main() -> anyhow::Result<()> {
         ("seq_len", Json::Num(geo.seq_len as f64)),
         ("n_minibatch", Json::Num(geo.n_minibatch as f64)),
         ("param_count", Json::Num(geo.param_count as f64)),
+        ("kernel", kernel_info_json()),
         ("kernel_threads", Json::Num(threads as f64)),
         ("reps", Json::Num(reps as f64)),
         ("dense_gflop_per_step", Json::Num(step_gflop)),

@@ -57,6 +57,22 @@ pub fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> BenchStats {
     stats
 }
 
+/// The selected kernel path (register-tile ISA, tile geometry, thread
+/// count) as bench-artifact metadata, so every `BENCH_*.json` number is
+/// attributable to a code path.
+pub fn kernel_info_json() -> Json {
+    let info = crate::runtime::native::kernels::kernel_info();
+    Json::obj(vec![
+        ("isa", Json::Str(info.isa.name().into())),
+        ("simd_available", Json::Bool(info.simd_available)),
+        ("forced_by_env", Json::Bool(info.forced_by_env)),
+        ("mr", Json::Num(info.mr as f64)),
+        ("nr", Json::Num(info.nr as f64)),
+        ("kc", Json::Num(info.kc as f64)),
+        ("threads", Json::Num(info.threads as f64)),
+    ])
+}
+
 /// Write a machine-readable bench artifact (e.g. `BENCH_decode.json`),
 /// creating parent directories as needed.
 pub fn write_bench_json(path: &Path, j: &Json) -> Result<()> {

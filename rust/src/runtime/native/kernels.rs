@@ -11,22 +11,43 @@
 //! The matmul family packs `b` into contiguous [`NR`]-wide column panels
 //! (zero-padded at a ragged right edge), splits `k` into [`KC`]-sized
 //! blocks, and computes [`MR`]`x`[`NR`] output tiles in a fixed-size
-//! register accumulator with branch-free FMA-shaped inner loops the
-//! compiler can autovectorize. There is no `NC` blocking: each `k` block
-//! sweeps all column panels (the widest operand here, `d_ff`/`vocab`, fits
-//! comfortably in L2 once packed).
+//! register accumulator. There is no `NC` blocking: each `k` block sweeps
+//! all column panels (the widest operand here, `d_ff`/`vocab`, fits
+//! comfortably in L2 once packed). The q/k/v projection triple runs through
+//! fused multi-`B` entry points ([`matmul_set_multi`],
+//! [`matmul_at_b_acc_multi`], [`matmul_set_packed_multi`]) that pack each
+//! shared `A` micropanel once and stream it through all three weight
+//! panels.
+//!
+//! # Register tiles and runtime ISA dispatch
+//!
+//! The `MR x NR` tile has two interchangeable implementations: a portable
+//! scalar tile with branch-free loops the compiler autovectorizes, and an
+//! explicit AVX2 tile (`std::arch`, 8 f32 lanes = the [`NR`] panel columns)
+//! selected once per process when `is_x86_feature_detected!` approves.
+//! `A3PO_KERNEL=scalar|simd` overrides the choice, and
+//! [`set_kernel_override`] does the same in-process (benches use it for
+//! side-by-side timing). The AVX2 tile deliberately uses separate multiply
+//! and add instructions rather than `vfmadd`: a fused multiply-add would
+//! skip the intermediate rounding the scalar tile performs and break
+//! scalar-vs-SIMD bit-equality — the speedup comes from lane width, not
+//! from fewer roundings.
 //!
 //! # Determinism contract
 //!
 //! Every output element accumulates in an order that is a pure function of
 //! the blocking — within each `KC` block, strictly ascending `p`, into a
 //! private register sum that is then added to `c` block by block — and
-//! *never* a function of the thread count, the chunk partition, or the row
-//! tile an element lands in (padding lanes multiply into separate lanes and
-//! are discarded). The scalar small-operand path replays the identical
-//! per-element operation sequence. Threaded, serial, packed, unpacked, and
-//! any-`A3PO_THREADS` runs are therefore bit-identical; the decode/train
-//! parity suites and `tests/kernel_parity.rs` pin this.
+//! *never* a function of the thread count, the chunk partition, the row
+//! tile an element lands in, or the selected register tile (padding lanes
+//! multiply into separate lanes and are discarded; the SIMD tile replays
+//! the scalar tile's per-lane operation sequence exactly). The scalar
+//! small-operand path replays the identical per-element operation sequence,
+//! and the multi-`B` path reuses only the `A` pack — each output's
+//! accumulation order is untouched. Threaded, serial, packed, unpacked,
+//! scalar, SIMD, fused-multi-`B`, and any-`A3PO_THREADS` runs are therefore
+//! bit-identical; the decode/train parity suites and
+//! `tests/kernel_parity.rs` pin this.
 //!
 //! # Dispatch
 //!
@@ -52,7 +73,7 @@
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Hard cap on pool size (beyond this, the tiny matmuls here stop scaling).
@@ -366,16 +387,18 @@ impl Drop for WorkerPool {
 /// The process-global kernel pool (created on first use).
 pub fn pool() -> &'static WorkerPool {
     static POOL: OnceLock<WorkerPool> = OnceLock::new();
-    POOL.get_or_init(|| {
-        let n = std::env::var("A3PO_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
-            .clamp(1, MAX_THREADS);
-        WorkerPool::new(n)
-    })
+    POOL.get_or_init(|| WorkerPool::new(configured_threads()))
+}
+
+/// The pool size this process uses, computed *without* constructing the
+/// pool — logging and bench-metadata callers must not spawn the worker
+/// threads as a side effect of asking.
+pub fn configured_threads() -> usize {
+    std::env::var("A3PO_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+        .clamp(1, MAX_THREADS)
 }
 
 /// Run `f(0..n_chunks)` with chunks claimed off a shared atomic counter by
@@ -457,6 +480,152 @@ fn div_ceil(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+// ---------------------------------------------------------------------------
+// Register-tile ISA selection (runtime dispatch)
+
+/// Which implementation of the `MR x NR` register tile executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Portable scalar tile (autovectorized by the compiler).
+    Scalar,
+    /// Explicit `std::arch` AVX2 tile (x86-64, runtime-detected).
+    Avx2,
+}
+
+impl KernelIsa {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2 => "avx2",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn simd_available_impl() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn simd_available_impl() -> bool {
+    false
+}
+
+/// Can this host execute the SIMD register tile? (`std` caches detection.)
+pub fn simd_available() -> bool {
+    simd_available_impl()
+}
+
+/// In-process override: 0 = follow `A3PO_KERNEL` / detection, 1 = scalar,
+/// 2 = SIMD-if-available.
+static KERNEL_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force a register tile in-process (process-global), mirroring
+/// [`set_force_serial`]: benches and parity tests toggle it to compare the
+/// scalar and SIMD tiles without re-execing. Results are bit-identical
+/// either way. `Some(Avx2)` on a host without AVX2 falls back to scalar.
+pub fn set_kernel_override(isa: Option<KernelIsa>) {
+    let v = match isa {
+        None => 0,
+        Some(KernelIsa::Scalar) => 1,
+        Some(KernelIsa::Avx2) => 2,
+    };
+    KERNEL_OVERRIDE.store(v, Ordering::SeqCst);
+}
+
+/// The `(isa, forced_by_env)` choice from `A3PO_KERNEL` / detection, read
+/// once per process (like `A3PO_THREADS`: per-process pinning is what makes
+/// the cross-process parity checks meaningful).
+fn env_choice() -> (KernelIsa, bool) {
+    static CHOICE: OnceLock<(KernelIsa, bool)> = OnceLock::new();
+    *CHOICE.get_or_init(|| {
+        let detected = if simd_available() { KernelIsa::Avx2 } else { KernelIsa::Scalar };
+        match std::env::var("A3PO_KERNEL").ok().as_deref() {
+            Some("scalar") => (KernelIsa::Scalar, true),
+            Some("simd") => {
+                if simd_available() {
+                    (KernelIsa::Avx2, true)
+                } else {
+                    eprintln!("a3po: A3PO_KERNEL=simd but this host lacks AVX2; using scalar");
+                    (KernelIsa::Scalar, true)
+                }
+            }
+            Some(other) => {
+                eprintln!(
+                    "a3po: unrecognised A3PO_KERNEL={other:?} (expected scalar|simd); \
+                     auto-detecting"
+                );
+                (detected, false)
+            }
+            None => (detected, false),
+        }
+    })
+}
+
+/// The register tile the next GEMM will run: in-process override first,
+/// then `A3PO_KERNEL`, then feature detection.
+pub fn active_isa() -> KernelIsa {
+    match KERNEL_OVERRIDE.load(Ordering::SeqCst) {
+        1 => KernelIsa::Scalar,
+        2 if simd_available() => KernelIsa::Avx2,
+        2 => KernelIsa::Scalar,
+        _ => env_choice().0,
+    }
+}
+
+/// Snapshot of the selected kernel path, for startup logging and bench
+/// artifact metadata.
+#[derive(Clone, Debug)]
+pub struct KernelInfo {
+    pub isa: KernelIsa,
+    pub simd_available: bool,
+    /// True when `A3PO_KERNEL` (not auto-detection) picked the tile.
+    pub forced_by_env: bool,
+    pub mr: usize,
+    pub nr: usize,
+    pub kc: usize,
+    pub threads: usize,
+}
+
+pub fn kernel_info() -> KernelInfo {
+    let (_, forced_by_env) = env_choice();
+    KernelInfo {
+        isa: active_isa(),
+        simd_available: simd_available(),
+        forced_by_env,
+        mr: MR,
+        nr: NR,
+        kc: KC,
+        threads: configured_threads(),
+    }
+}
+
+/// Log the selected kernel path once per process (stderr; `A3PO_QUIET`
+/// suppresses it). Called at native backend construction so every train or
+/// decode run states which code path produced its numbers.
+pub fn log_kernel_path_once() {
+    static LOGGED: AtomicBool = AtomicBool::new(false);
+    if LOGGED.swap(true, Ordering::SeqCst) || std::env::var_os("A3PO_QUIET").is_some() {
+        return;
+    }
+    let info = kernel_info();
+    let how = if info.forced_by_env {
+        "A3PO_KERNEL"
+    } else if info.simd_available {
+        "detected"
+    } else {
+        "no simd on this host"
+    };
+    eprintln!(
+        "a3po kernels: isa={} ({how}), tile {}x{}x{} (MRxNRxKC), {} threads",
+        info.isa.name(),
+        info.mr,
+        info.nr,
+        info.kc,
+        info.threads
+    );
+}
+
 /// How the `a` operand is laid out.
 #[derive(Clone, Copy)]
 enum AMode {
@@ -478,9 +647,19 @@ thread_local! {
 /// `[n, k]` transposed operand of the `a·bᵀ` variant.
 fn pack_b_into(dst: &mut Vec<f32>, b: &[f32], k: usize, n: usize, bt: bool) {
     let n_panels = div_ceil(n, NR);
-    let kblocks = div_ceil(k, KC);
     dst.clear();
     dst.resize(k * n_panels * NR, 0.0);
+    pack_b_panels(dst, b, k, n, bt);
+}
+
+/// Pack into a pre-zeroed `k * div_ceil(n, NR) * NR` slice (see
+/// [`pack_b_into`] for the layout). Ragged-edge padding lanes are *left*
+/// untouched, so the caller must hand in zeroed memory — this is what lets
+/// the multi-`B` path pack several operands back-to-back in one scratch
+/// buffer.
+fn pack_b_panels(dst: &mut [f32], b: &[f32], k: usize, n: usize, bt: bool) {
+    let n_panels = div_ceil(n, NR);
+    let kblocks = div_ceil(k, KC);
     for kb in 0..kblocks {
         let p0 = kb * KC;
         let kcl = KC.min(k - p0);
@@ -505,6 +684,110 @@ fn pack_b_into(dst: &mut Vec<f32>, b: &[f32], k: usize, n: usize, bt: bool) {
     }
 }
 
+/// The portable scalar `MR x NR` register tile: branch-free fixed-trip
+/// loops the compiler autovectorizes. Each `p` step does one rounded
+/// multiply then one rounded add per output lane; the AVX2 tile replays
+/// exactly this per-lane operation sequence, so the two are bit-identical.
+#[inline(always)]
+fn tile_scalar(
+    acc: &mut [[f32; NR]; MR],
+    apack: &[f32; MR * KC],
+    panel: &[f32],
+    kcl: usize,
+    mr: usize,
+) {
+    for p in 0..kcl {
+        let brow = &panel[p * NR..(p + 1) * NR];
+        for r in 0..mr {
+            let av = apack[r * KC + p];
+            let arow = &mut acc[r];
+            for j in 0..NR {
+                arow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Explicit AVX2 register tile (selected at runtime; never reached on other
+/// architectures).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{KC, MR, NR};
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+
+    // The lane layout below hardcodes the tile geometry.
+    const _: () = assert!(MR == 4 && NR == 8, "the AVX2 tile is written for a 4x8 f32 tile");
+
+    /// AVX2 `MR x NR` tile: lane `j` of each 256-bit accumulator is panel
+    /// column `j`, and each `p` step performs one rounded multiply
+    /// (`vmulps`) then one rounded add (`vaddps`) per lane — deliberately
+    /// *not* `vfmadd`: fusing would skip the intermediate rounding the
+    /// scalar tile performs and break the scalar ≡ SIMD bit-equality
+    /// contract. The win is eight lanes per instruction, not fewer
+    /// roundings.
+    ///
+    /// All `MR` rows are computed unconditionally — on a ragged last row
+    /// block the caller zero-fills `apack` rows `mr..MR`, so the extra rows
+    /// accumulate zeros into registers whose write-back the caller skips.
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available (`is_x86_feature_detected!("avx2")`), `panel`
+    /// must hold at least `kcl * NR` floats, and `kcl <= KC`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile(
+        acc: &mut [[f32; NR]; MR],
+        apack: &[f32; MR * KC],
+        panel: &[f32],
+        kcl: usize,
+    ) {
+        debug_assert!(kcl <= KC);
+        debug_assert!(panel.len() >= kcl * NR);
+        let mut v0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut v1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut v2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut v3 = _mm256_loadu_ps(acc[3].as_ptr());
+        let pp = panel.as_ptr();
+        let ap = apack.as_ptr();
+        for p in 0..kcl {
+            let bv = _mm256_loadu_ps(pp.add(p * NR));
+            v0 = _mm256_add_ps(v0, _mm256_mul_ps(_mm256_set1_ps(*ap.add(p)), bv));
+            v1 = _mm256_add_ps(v1, _mm256_mul_ps(_mm256_set1_ps(*ap.add(KC + p)), bv));
+            v2 = _mm256_add_ps(v2, _mm256_mul_ps(_mm256_set1_ps(*ap.add(2 * KC + p)), bv));
+            v3 = _mm256_add_ps(v3, _mm256_mul_ps(_mm256_set1_ps(*ap.add(3 * KC + p)), bv));
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), v0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), v1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), v2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), v3);
+    }
+}
+
+/// Run the selected register tile for one panel:
+/// `acc[r][j] += sum_p apack[r*KC + p] * panel[p*NR + j]`.
+#[inline(always)]
+fn run_tile(
+    acc: &mut [[f32; NR]; MR],
+    apack: &[f32; MR * KC],
+    panel: &[f32],
+    kcl: usize,
+    mr: usize,
+    isa: KernelIsa,
+) {
+    match isa {
+        // SAFETY: `Avx2` is only selected after feature detection succeeded
+        // (see `active_isa`), and the callers zero-fill `apack` rows
+        // `mr..MR` so the full-height tile reads no stale values.
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => unsafe { avx2::tile(acc, apack, panel, kcl) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => tile_scalar(acc, apack, panel, kcl, mr),
+        KernelIsa::Scalar => tile_scalar(acc, apack, panel, kcl, mr),
+    }
+}
+
 /// The blocked compute over output rows `i0..i0 + rows` (`c` holds exactly
 /// those rows). `set` overwrites `c` on the first `k` block instead of
 /// accumulating; `fused` applies `pre += bias; act = gelu(pre)` once each
@@ -520,6 +803,7 @@ fn gemm_rows(
     k: usize,
     n: usize,
     set: bool,
+    isa: KernelIsa,
     mut fused: Option<(&mut [f32], &[f32])>,
 ) {
     let n_panels = div_ceil(n, NR);
@@ -546,24 +830,20 @@ fn gemm_rows(
                     }
                 }
             }
+            // Rows `mr..MR` may hold a previous block's values; zero them so
+            // the full-height SIMD tile multiplies zeros into its discarded
+            // rows (only the final ragged row block ever pays this).
+            for r in mr..MR {
+                apack[r * KC..r * KC + kcl].fill(0.0);
+            }
             let first = kb == 0;
             let block_base = kb * KC * n_panels * NR;
             for jp in 0..n_panels {
                 let j0 = jp * NR;
                 let jn = NR.min(n - j0);
                 let panel = &packed[block_base + jp * kcl * NR..block_base + (jp + 1) * kcl * NR];
-                // MR x NR register tile; fixed-trip inner loop, no branches.
                 let mut acc = [[0.0f32; NR]; MR];
-                for p in 0..kcl {
-                    let brow = &panel[p * NR..(p + 1) * NR];
-                    for r in 0..mr {
-                        let av = apack[r * KC + p];
-                        let arow = &mut acc[r];
-                        for j in 0..NR {
-                            arow[j] += av * brow[j];
-                        }
-                    }
-                }
+                run_tile(&mut acc, &apack, panel, kcl, mr, isa);
                 for r in 0..mr {
                     let crow = &mut c[(ib + r) * n + j0..(ib + r) * n + j0 + jn];
                     if set && first {
@@ -652,9 +932,10 @@ fn gemm_packed(
     set: bool,
     fused: Option<(&mut [f32], &[f32])>,
 ) {
+    let isa = active_isa();
     let blocks = div_ceil(m, MR);
     if blocks < 2 || !parallel_ok(m, m * k * n) {
-        gemm_rows(c, a, amode, packed, 0, m, m, k, n, set, fused);
+        gemm_rows(c, a, amode, packed, 0, m, m, k, n, set, isa, fused);
         return;
     }
     // Chunk in whole MR-row blocks, a few chunks per worker so the atomic
@@ -662,7 +943,7 @@ fn gemm_packed(
     let bpc = div_ceil(blocks, pool().workers() * 4).max(1);
     let n_chunks = div_ceil(blocks, bpc);
     if n_chunks < 2 {
-        gemm_rows(c, a, amode, packed, 0, m, m, k, n, set, fused);
+        gemm_rows(c, a, amode, packed, 0, m, m, k, n, set, isa, fused);
         return;
     }
     let cptr = SendPtr(c.as_mut_ptr());
@@ -684,7 +965,7 @@ fn gemm_packed(
             )),
             _ => None,
         };
-        gemm_rows(cc, a, amode, packed, i0, rows, m, k, n, set, fc);
+        gemm_rows(cc, a, amode, packed, i0, rows, m, k, n, set, isa, fc);
     });
 }
 
@@ -821,6 +1102,222 @@ pub fn matmul_set_bias_gelu_packed(
     debug_assert_eq!(act.len(), m * b.n);
     debug_assert_eq!(bias.len(), b.n);
     gemm_packed(pre, a, AMode::Rows, &b.data, m, b.k, b.n, true, Some((act, bias)));
+}
+
+// ---------------------------------------------------------------------------
+// Fused multi-B GEMM: one shared A micropanel streamed through several
+// packed B operands (the q/k/v projection triple)
+
+/// How many `B` operands the fused multi-`B` path carries (q, k, v).
+pub const MULTI_B: usize = 3;
+
+/// [`gemm_rows`] over [`MULTI_B`] outputs sharing one `a`: the A micropanel
+/// is packed once per (row block x k block) and streamed through each
+/// packed `b` in turn. Each output's per-element accumulation order is
+/// exactly the single-`B` order, so results are bit-identical to separate
+/// calls — only the (redundant) A-pack work is shared.
+fn gemm_rows_multi(
+    cs: &mut [&mut [f32]; MULTI_B],
+    a: &[f32],
+    amode: AMode,
+    packs: &[&[f32]; MULTI_B],
+    i0: usize,
+    rows: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    set: bool,
+    isa: KernelIsa,
+) {
+    let n_panels = div_ceil(n, NR);
+    let kblocks = div_ceil(k, KC);
+    let mut apack = [0.0f32; MR * KC];
+    let mut ib = 0;
+    while ib < rows {
+        let mr = MR.min(rows - ib);
+        for kb in 0..kblocks {
+            let p0 = kb * KC;
+            let kcl = KC.min(k - p0);
+            for r in 0..mr {
+                let gi = i0 + ib + r;
+                match amode {
+                    AMode::Rows => {
+                        apack[r * KC..r * KC + kcl]
+                            .copy_from_slice(&a[gi * k + p0..gi * k + p0 + kcl]);
+                    }
+                    AMode::Cols => {
+                        for p in 0..kcl {
+                            apack[r * KC + p] = a[(p0 + p) * m + gi];
+                        }
+                    }
+                }
+            }
+            for r in mr..MR {
+                apack[r * KC..r * KC + kcl].fill(0.0);
+            }
+            let first = kb == 0;
+            let block_base = kb * KC * n_panels * NR;
+            for (c, packed) in cs.iter_mut().zip(packs.iter()) {
+                for jp in 0..n_panels {
+                    let j0 = jp * NR;
+                    let jn = NR.min(n - j0);
+                    let panel =
+                        &packed[block_base + jp * kcl * NR..block_base + (jp + 1) * kcl * NR];
+                    let mut acc = [[0.0f32; NR]; MR];
+                    run_tile(&mut acc, &apack, panel, kcl, mr, isa);
+                    for r in 0..mr {
+                        let crow = &mut c[(ib + r) * n + j0..(ib + r) * n + j0 + jn];
+                        if set && first {
+                            crow.copy_from_slice(&acc[r][..jn]);
+                        } else {
+                            for j in 0..jn {
+                                crow[j] += acc[r][j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        ib += MR;
+    }
+}
+
+/// Parallel driver for the multi-`B` path (mirrors [`gemm_packed`]).
+fn gemm_packed_multi(
+    cs: &mut [&mut [f32]; MULTI_B],
+    a: &[f32],
+    amode: AMode,
+    packs: &[&[f32]; MULTI_B],
+    m: usize,
+    k: usize,
+    n: usize,
+    set: bool,
+) {
+    let isa = active_isa();
+    let blocks = div_ceil(m, MR);
+    if blocks < 2 || !parallel_ok(m, MULTI_B * m * k * n) {
+        gemm_rows_multi(cs, a, amode, packs, 0, m, m, k, n, set, isa);
+        return;
+    }
+    let bpc = div_ceil(blocks, pool().workers() * 4).max(1);
+    let n_chunks = div_ceil(blocks, bpc);
+    if n_chunks < 2 {
+        gemm_rows_multi(cs, a, amode, packs, 0, m, m, k, n, set, isa);
+        return;
+    }
+    let p0 = SendPtr(cs[0].as_mut_ptr());
+    let p1 = SendPtr(cs[1].as_mut_ptr());
+    let p2 = SendPtr(cs[2].as_mut_ptr());
+    let ptrs = [p0, p1, p2];
+    run_chunks(n_chunks, &|ci: usize| {
+        let i0 = ci * bpc * MR;
+        let i1 = m.min(i0 + bpc * MR);
+        let rows = i1 - i0;
+        // SAFETY: chunks cover disjoint row ranges of each output buffer,
+        // so the per-chunk mutable slices never alias.
+        let mut chunk: [&mut [f32]; MULTI_B] = [
+            unsafe { std::slice::from_raw_parts_mut(ptrs[0].0.add(i0 * n), rows * n) },
+            unsafe { std::slice::from_raw_parts_mut(ptrs[1].0.add(i0 * n), rows * n) },
+            unsafe { std::slice::from_raw_parts_mut(ptrs[2].0.add(i0 * n), rows * n) },
+        ];
+        gemm_rows_multi(&mut chunk, a, amode, packs, i0, rows, m, k, n, set, isa);
+    });
+}
+
+/// Entry for unpacked multi-`B` operands: small ops replay the scalar path
+/// per output (bit-identical to single calls by construction); larger ops
+/// pack all three `b` operands back-to-back into the per-thread scratch and
+/// run the fused blocked path.
+fn gemm_multi(
+    cs: &mut [&mut [f32]; MULTI_B],
+    a: &[f32],
+    amode: AMode,
+    bs: &[&[f32]; MULTI_B],
+    bt: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+    set: bool,
+) {
+    if m * k * n < SMALL_GEMM_WORK {
+        for (c, b) in cs.iter_mut().zip(bs.iter()) {
+            gemm_small(c, a, amode, b, bt, m, k, n, set, None);
+        }
+        return;
+    }
+    PACK_SCRATCH.with(|s| {
+        let mut buf = s.borrow_mut();
+        let section = k * div_ceil(n, NR) * NR;
+        buf.clear();
+        buf.resize(MULTI_B * section, 0.0);
+        let (s0, rest) = buf.split_at_mut(section);
+        let (s1, s2) = rest.split_at_mut(section);
+        pack_b_panels(s0, bs[0], k, n, bt);
+        pack_b_panels(s1, bs[1], k, n, bt);
+        pack_b_panels(s2, bs[2], k, n, bt);
+        let packs: [&[f32]; MULTI_B] = [&*s0, &*s1, &*s2];
+        gemm_packed_multi(cs, a, amode, &packs, m, k, n, set);
+    });
+}
+
+/// Fused q/k/v projection: `c_i = a · b_i` for [`MULTI_B`] same-shape `b`
+/// operands sharing one `a` `[m, k]`. The A micropanel is packed once per
+/// (row block x k block) and streamed through all three packed `b` panels,
+/// cutting A-pack traffic to a third; results are bit-identical to three
+/// separate [`matmul_set`] calls.
+pub fn matmul_set_multi(
+    mut cs: [&mut [f32]; MULTI_B],
+    a: &[f32],
+    bs: [&[f32]; MULTI_B],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    for (c, b) in cs.iter().zip(bs.iter()) {
+        debug_assert_eq!(c.len(), m * n);
+        debug_assert_eq!(b.len(), k * n);
+    }
+    gemm_multi(&mut cs, a, AMode::Rows, &bs, false, m, k, n, true);
+}
+
+/// `c_i += aᵀ · b_i` (`a` is `[k, m]`, each `b_i` `[k, n]`): the backward
+/// counterpart of [`matmul_set_multi`] for the wq/wk/wv weight gradients.
+/// Sharing matters most here — the transposed A-pack is a strided gather
+/// (`a[p * m + i]`), the most expensive pack in the backward pass.
+pub fn matmul_at_b_acc_multi(
+    mut cs: [&mut [f32]; MULTI_B],
+    a: &[f32],
+    bs: [&[f32]; MULTI_B],
+    k: usize,
+    m: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    for (c, b) in cs.iter().zip(bs.iter()) {
+        debug_assert_eq!(c.len(), m * n);
+        debug_assert_eq!(b.len(), k * n);
+    }
+    gemm_multi(&mut cs, a, AMode::Cols, &bs, false, m, k, n, false);
+}
+
+/// [`matmul_set_multi`] against pre-packed weights (decode sessions hold
+/// `PackedB` q/k/v panels). Like [`matmul_set_packed`], always runs the
+/// blocked path — still bit-identical to the unpacked entry.
+pub fn matmul_set_packed_multi(
+    mut cs: [&mut [f32]; MULTI_B],
+    a: &[f32],
+    bs: [&PackedB; MULTI_B],
+    m: usize,
+) {
+    let (k, n) = (bs[0].k, bs[0].n);
+    debug_assert!(bs.iter().all(|b| b.k == k && b.n == n), "multi-B operands must share shape");
+    debug_assert_eq!(a.len(), m * k);
+    for c in cs.iter() {
+        debug_assert_eq!(c.len(), m * n);
+    }
+    let packs: [&[f32]; MULTI_B] = [&bs[0].data, &bs[1].data, &bs[2].data];
+    gemm_packed_multi(&mut cs, a, AMode::Rows, &packs, m, k, n, true);
 }
 
 // ---------------------------------------------------------------------------
@@ -1475,6 +1972,108 @@ mod tests {
             let full = &ctx[(r * s + pos) * d..(r * s + pos + 1) * d];
             let step = &ctx_step[r * d..(r + 1) * d];
             assert_eq!(full, step, "row {r}: decode-step attention diverged");
+        }
+    }
+
+    #[test]
+    fn simd_and_scalar_tiles_bit_identical() {
+        let _g = serial_guard();
+        if !simd_available() {
+            eprintln!("skipping: no AVX2 on this host");
+            return;
+        }
+        let mut rng = Pcg64::from_seed(11);
+        // Ragged in every dimension, over the small-GEMM threshold.
+        let (m, k, n) = (37, 300, 23);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bias = randv(&mut rng, n);
+        let mut results: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = Vec::new();
+        for isa in [KernelIsa::Scalar, KernelIsa::Avx2] {
+            set_kernel_override(Some(isa));
+            let c = matmul(&a, &b, m, k, n);
+            let mut pre = vec![f32::NAN; m * n];
+            let mut act = vec![f32::NAN; m * n];
+            matmul_set_bias_gelu(&mut pre, &mut act, &a, &b, &bias, m, k, n);
+            results.push((c, pre, act));
+        }
+        set_kernel_override(None);
+        assert_eq!(results[0].0, results[1].0, "scalar vs SIMD matmul diverged");
+        assert_eq!(results[0].1, results[1].1, "scalar vs SIMD fused pre diverged");
+        assert_eq!(results[0].2, results[1].2, "scalar vs SIMD fused act diverged");
+    }
+
+    #[test]
+    fn multi_b_matches_three_single_calls_bitwise() {
+        let _g = serial_guard();
+        let mut rng = Pcg64::from_seed(12);
+        // One shape under the small-GEMM threshold, one blocked + ragged.
+        for (m, k, n) in [(5usize, 9usize, 7usize), (37, 300, 23)] {
+            let a = randv(&mut rng, m * k);
+            let bs: Vec<Vec<f32>> = (0..MULTI_B).map(|_| randv(&mut rng, k * n)).collect();
+
+            // matmul_set_multi vs three matmul_set calls (NaN-initialised:
+            // the set path must fully overwrite).
+            let mut single: Vec<Vec<f32>> = (0..MULTI_B).map(|_| vec![f32::NAN; m * n]).collect();
+            for (c, b) in single.iter_mut().zip(bs.iter()) {
+                matmul_set(c, &a, b, m, k, n);
+            }
+            let mut multi: Vec<Vec<f32>> = (0..MULTI_B).map(|_| vec![f32::NAN; m * n]).collect();
+            {
+                let (c0, rest) = multi.split_first_mut().unwrap();
+                let (c1, rest) = rest.split_first_mut().unwrap();
+                let c2 = &mut rest[0];
+                matmul_set_multi(
+                    [c0.as_mut_slice(), c1.as_mut_slice(), c2.as_mut_slice()],
+                    &a,
+                    [&bs[0], &bs[1], &bs[2]],
+                    m,
+                    k,
+                    n,
+                );
+            }
+            assert_eq!(single, multi, "matmul_set_multi diverged at {m}x{k}x{n}");
+
+            // matmul_at_b_acc_multi vs three singles, from a seeded (nonzero)
+            // accumulator.
+            let at = randv(&mut rng, k * m);
+            let seed: Vec<Vec<f32>> = (0..MULTI_B).map(|_| randv(&mut rng, m * n)).collect();
+            let mut single_acc = seed.clone();
+            for (c, b) in single_acc.iter_mut().zip(bs.iter()) {
+                matmul_at_b_acc(c, &at, b, k, m, n);
+            }
+            let mut multi_acc = seed.clone();
+            {
+                let (c0, rest) = multi_acc.split_first_mut().unwrap();
+                let (c1, rest) = rest.split_first_mut().unwrap();
+                let c2 = &mut rest[0];
+                matmul_at_b_acc_multi(
+                    [c0.as_mut_slice(), c1.as_mut_slice(), c2.as_mut_slice()],
+                    &at,
+                    [&bs[0], &bs[1], &bs[2]],
+                    k,
+                    m,
+                    n,
+                );
+            }
+            assert_eq!(single_acc, multi_acc, "matmul_at_b_acc_multi diverged at {m}x{k}x{n}");
+
+            // matmul_set_packed_multi vs single packed calls.
+            let packed: Vec<PackedB> = bs.iter().map(|b| PackedB::pack(b, k, n)).collect();
+            let mut multi_packed: Vec<Vec<f32>> =
+                (0..MULTI_B).map(|_| vec![f32::NAN; m * n]).collect();
+            {
+                let (c0, rest) = multi_packed.split_first_mut().unwrap();
+                let (c1, rest) = rest.split_first_mut().unwrap();
+                let c2 = &mut rest[0];
+                matmul_set_packed_multi(
+                    [c0.as_mut_slice(), c1.as_mut_slice(), c2.as_mut_slice()],
+                    &a,
+                    [&packed[0], &packed[1], &packed[2]],
+                    m,
+                );
+            }
+            assert_eq!(single, multi_packed, "matmul_set_packed_multi diverged at {m}x{k}x{n}");
         }
     }
 

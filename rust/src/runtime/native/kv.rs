@@ -296,9 +296,14 @@ impl NativeDecodeSession {
             q.resize(rows * d, 0.0);
             knew.resize(rows * d, 0.0);
             vnew.resize(rows * d, 0.0);
-            kernels::matmul_set_packed(q, ln_y, &lw.wq, rows);
-            kernels::matmul_set_packed(knew, ln_y, &lw.wk, rows);
-            kernels::matmul_set_packed(vnew, ln_y, &lw.wv, rows);
+            // Fused q/k/v projection against the session's pre-packed weight
+            // panels — bit-identical to three matmul_set_packed calls.
+            kernels::matmul_set_packed_multi(
+                [q.as_mut_slice(), knew.as_mut_slice(), vnew.as_mut_slice()],
+                ln_y,
+                [&lw.wq, &lw.wk, &lw.wv],
+                rows,
+            );
             {
                 let kc = &mut kcache[layer];
                 let vc = &mut vcache[layer];

@@ -276,7 +276,12 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new(name: &str) -> Result<NativeBackend> {
         match preset(name) {
-            Some(p) => Ok(NativeBackend { preset: p }),
+            Some(p) => {
+                // One line per process saying which register tile / thread
+                // count every subsequent train/decode number came from.
+                kernels::log_kernel_path_once();
+                Ok(NativeBackend { preset: p })
+            }
             None => bail!(
                 "unknown native preset {name:?} (built-in: {})",
                 preset_names().join("|")

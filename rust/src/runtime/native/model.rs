@@ -331,9 +331,20 @@ pub fn forward_into(
     for (layer, lc) in layers.iter_mut().enumerate() {
         let base = dims.layer_base(layer);
         layernorm_into(x, p[base + L_LN1S], p[base + L_LN1B], rows, d, &mut lc.ln1);
-        matmul_into(&mut lc.q, &lc.ln1.y, p[base + L_WQ], rows, d, d);
-        matmul_into(&mut lc.k, &lc.ln1.y, p[base + L_WK], rows, d, d);
-        matmul_into(&mut lc.v, &lc.ln1.y, p[base + L_WV], rows, d, d);
+        // Fused q/k/v projection: one shared ln1.y micropanel pack streamed
+        // through all three weight panels — bit-identical to three
+        // matmul_set calls at a third of the A-pack traffic.
+        lc.q.resize(rows * d, 0.0);
+        lc.k.resize(rows * d, 0.0);
+        lc.v.resize(rows * d, 0.0);
+        kernels::matmul_set_multi(
+            [lc.q.as_mut_slice(), lc.k.as_mut_slice(), lc.v.as_mut_slice()],
+            &lc.ln1.y,
+            [p[base + L_WQ], p[base + L_WK], p[base + L_WV]],
+            rows,
+            d,
+            d,
+        );
 
         // Causal multi-head attention (row-parallel kernel).
         kernels::reset(&mut lc.probs, b * h * s * s);
@@ -611,9 +622,23 @@ pub fn backward_into(
                 &mut ws.dv,
             );
 
-            matmul_at_b_acc(&mut grads[base + L_WQ], &lc.ln1.y, &ws.dq, rows, d, d);
-            matmul_at_b_acc(&mut grads[base + L_WK], &lc.ln1.y, &ws.dk, rows, d, d);
-            matmul_at_b_acc(&mut grads[base + L_WV], &lc.ln1.y, &ws.dv, rows, d, d);
+            // Fused wq/wk/wv gradient accumulation: the transposed ln1.y
+            // micropanel (a strided gather) is packed once and streamed
+            // through all three dq/dk/dv panels — bit-identical to three
+            // matmul_at_b_acc calls.
+            {
+                let (gq, rest) = grads[base + L_WQ..base + L_WV + 1].split_first_mut().unwrap();
+                let (gk, rest) = rest.split_first_mut().unwrap();
+                let gv = &mut rest[0];
+                kernels::matmul_at_b_acc_multi(
+                    [gq.as_mut_slice(), gk.as_mut_slice(), gv.as_mut_slice()],
+                    &lc.ln1.y,
+                    [ws.dq.as_slice(), ws.dk.as_slice(), ws.dv.as_slice()],
+                    rows,
+                    d,
+                    d,
+                );
+            }
             kernels::reset(&mut ws.dh, rows * d);
             matmul_a_bt_acc(&mut ws.dh, &ws.dq, p[base + L_WQ], rows, d, d);
             matmul_a_bt_acc(&mut ws.dh, &ws.dk, p[base + L_WK], rows, d, d);

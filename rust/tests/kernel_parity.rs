@@ -1,15 +1,17 @@
 //! Property tests pinning the blocked GEMM kernels against a naive f64
 //! reference, and the determinism contract: results are bit-identical
-//! across `set_force_serial` on/off in-process and across
-//! `A3PO_THREADS=1` vs `A3PO_THREADS=4` out-of-process (the pool reads the
-//! variable once at startup, so the cross-thread-count check re-runs this
-//! test binary as a child with the variable set).
+//! across `set_force_serial` on/off and scalar-vs-SIMD register tiles
+//! in-process, and across `A3PO_THREADS=1` vs `A3PO_THREADS=4` and
+//! `A3PO_KERNEL=scalar|simd` vs default out-of-process (the pool and the
+//! ISA choice are both read once at startup, so the cross-process checks
+//! re-run this test binary as a child with the variable set).
 
 use std::sync::Mutex;
 
 use a3po::runtime::native::kernels::{
-    self, matmul, matmul_a_bt_acc, matmul_acc, matmul_at_b_acc, matmul_set, matmul_set_bias_gelu,
-    set_force_serial,
+    self, kernel_info, matmul, matmul_a_bt_acc, matmul_acc, matmul_at_b_acc, matmul_at_b_acc_multi,
+    matmul_set, matmul_set_bias_gelu, matmul_set_multi, matmul_set_packed_multi, set_force_serial,
+    set_kernel_override, KernelIsa,
 };
 use a3po::util::rng::Pcg64;
 
@@ -167,6 +169,124 @@ fn set_variant_bit_identical_to_acc_from_zero() {
     }
 }
 
+/// The tentpole invariant: the scalar and AVX2 register tiles produce
+/// bit-identical results (no tolerance) over ragged shapes — `m % MR != 0`,
+/// `n % NR != 0`, `k % KC != 0` — for every GEMM variant including the
+/// fused bias+GELU epilogue and the packed entry.
+#[test]
+fn scalar_vs_simd_bit_identical_over_ragged_shapes() {
+    let _g = serial_guard();
+    if !kernel_info().simd_available {
+        eprintln!("skipping scalar-vs-SIMD bit-equality: no AVX2 on this host");
+        return;
+    }
+    let mut rng = Pcg64::from_seed(17);
+    for (m, k, n) in shapes() {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let a_t = randv(&mut rng, k * m);
+        let b_t = randv(&mut rng, n * k);
+        let bias = randv(&mut rng, n);
+        let packed = kernels::PackedB::pack(&b, k, n);
+
+        let mut results: Vec<Vec<Vec<f32>>> = Vec::new();
+        for isa in [KernelIsa::Scalar, KernelIsa::Avx2] {
+            set_kernel_override(Some(isa));
+            let ab = matmul(&a, &b, m, k, n);
+            let mut atb = vec![0.0f32; m * n];
+            matmul_at_b_acc(&mut atb, &a_t, &b, k, m, n);
+            let mut abt = vec![0.0f32; m * n];
+            matmul_a_bt_acc(&mut abt, &a, &b_t, m, k, n);
+            let mut pre = vec![f32::NAN; m * n];
+            let mut act = vec![f32::NAN; m * n];
+            matmul_set_bias_gelu(&mut pre, &mut act, &a, &b, &bias, m, k, n);
+            let mut pk = vec![f32::NAN; m * n];
+            kernels::matmul_set_packed(&mut pk, &a, &packed, m);
+            results.push(vec![ab, atb, abt, pre, act, pk]);
+        }
+        set_kernel_override(None);
+        for (v, name) in ["a·b", "aᵀ·b", "a·bᵀ", "fused pre", "fused act", "packed"]
+            .iter()
+            .enumerate()
+        {
+            assert_eq!(
+                results[0][v], results[1][v],
+                "{name} at {:?} not bit-identical between scalar and SIMD tiles",
+                (m, k, n)
+            );
+        }
+    }
+}
+
+/// The fused multi-B entry points must be bit-identical to three separate
+/// single-B calls over the same ragged shapes.
+#[test]
+fn multi_b_bit_identical_to_single_calls() {
+    let mut rng = Pcg64::from_seed(18);
+    for (m, k, n) in shapes() {
+        let a = randv(&mut rng, m * k);
+        let a_t = randv(&mut rng, k * m);
+        let bs: Vec<Vec<f32>> = (0..3).map(|_| randv(&mut rng, k * n)).collect();
+
+        let mut single: Vec<Vec<f32>> = (0..3).map(|_| vec![f32::NAN; m * n]).collect();
+        for (c, b) in single.iter_mut().zip(bs.iter()) {
+            matmul_set(c, &a, b, m, k, n);
+        }
+        let mut multi: Vec<Vec<f32>> = (0..3).map(|_| vec![f32::NAN; m * n]).collect();
+        {
+            let (c0, rest) = multi.split_first_mut().unwrap();
+            let (c1, rest) = rest.split_first_mut().unwrap();
+            let c2 = &mut rest[0];
+            matmul_set_multi(
+                [c0.as_mut_slice(), c1.as_mut_slice(), c2.as_mut_slice()],
+                &a,
+                [&bs[0], &bs[1], &bs[2]],
+                m,
+                k,
+                n,
+            );
+        }
+        assert_eq!(single, multi, "matmul_set_multi vs singles at {:?}", (m, k, n));
+
+        let seed: Vec<Vec<f32>> = (0..3).map(|_| randv(&mut rng, m * n)).collect();
+        let mut single_acc = seed.clone();
+        for (c, b) in single_acc.iter_mut().zip(bs.iter()) {
+            matmul_at_b_acc(c, &a_t, b, k, m, n);
+        }
+        let mut multi_acc = seed;
+        {
+            let (c0, rest) = multi_acc.split_first_mut().unwrap();
+            let (c1, rest) = rest.split_first_mut().unwrap();
+            let c2 = &mut rest[0];
+            matmul_at_b_acc_multi(
+                [c0.as_mut_slice(), c1.as_mut_slice(), c2.as_mut_slice()],
+                &a_t,
+                [&bs[0], &bs[1], &bs[2]],
+                k,
+                m,
+                n,
+            );
+        }
+        assert_eq!(single_acc, multi_acc, "matmul_at_b_acc_multi vs singles at {:?}", (m, k, n));
+
+        let packed: Vec<kernels::PackedB> =
+            bs.iter().map(|b| kernels::PackedB::pack(b, k, n)).collect();
+        let mut multi_packed: Vec<Vec<f32>> = (0..3).map(|_| vec![f32::NAN; m * n]).collect();
+        {
+            let (c0, rest) = multi_packed.split_first_mut().unwrap();
+            let (c1, rest) = rest.split_first_mut().unwrap();
+            let c2 = &mut rest[0];
+            matmul_set_packed_multi(
+                [c0.as_mut_slice(), c1.as_mut_slice(), c2.as_mut_slice()],
+                &a,
+                [&packed[0], &packed[1], &packed[2]],
+                m,
+            );
+        }
+        assert_eq!(single, multi_packed, "matmul_set_packed_multi vs singles at {:?}", (m, k, n));
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Cross-process bit-equality: the pool sizes itself from A3PO_THREADS once
 // at first use, so different thread counts need separate processes.
@@ -207,6 +327,24 @@ fn gemm_checksum() -> u64 {
         let mut c = vec![0.0f32; m * n];
         kernels::matmul_set_packed(&mut c, &a, &packed, m);
         fold(&c);
+        // Fused multi-B entries (extra b operands so the three panels
+        // differ).
+        let b1 = randv(&mut rng, k * n);
+        let b2 = randv(&mut rng, k * n);
+        let mut m0 = vec![0.0f32; m * n];
+        let mut m1 = vec![0.0f32; m * n];
+        let mut m2 = vec![0.0f32; m * n];
+        matmul_set_multi([&mut m0, &mut m1, &mut m2], &a, [&b, &b1, &b2], m, k, n);
+        fold(&m0);
+        fold(&m1);
+        fold(&m2);
+        let mut g0 = vec![0.0f32; m * n];
+        let mut g1 = vec![0.0f32; m * n];
+        let mut g2 = vec![0.0f32; m * n];
+        matmul_at_b_acc_multi([&mut g0, &mut g1, &mut g2], &a_t, [&b, &b1, &b2], k, m, n);
+        fold(&g0);
+        fold(&g1);
+        fold(&g2);
     }
     h
 }
@@ -255,4 +393,49 @@ fn bit_identical_across_a3po_threads_1_vs_4() {
         gemm_checksum()
     };
     assert_eq!(local, c1, "parent-process GEMM results differ from A3PO_THREADS=1 child");
+}
+
+/// `A3PO_KERNEL` is read once per process, so the scalar-vs-default (and
+/// explicit-simd) comparison re-runs this binary as children — mirroring
+/// the `A3PO_THREADS` check above. On a host without AVX2 all three
+/// children run the scalar tile and the check degenerates to a smoke test.
+#[test]
+fn bit_identical_across_kernel_paths() {
+    let exe = std::env::current_exe().expect("test binary path");
+    let run_child = |kernel: Option<&str>| -> u64 {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.args(["helper_gemm_checksum_print", "--exact", "--nocapture", "--test-threads=1"]);
+        match kernel {
+            // The parent may itself run under A3PO_KERNEL (the CI scalar
+            // matrix), so the "default" child must clear it explicitly.
+            None => cmd.env_remove("A3PO_KERNEL"),
+            Some(v) => cmd.env("A3PO_KERNEL", v),
+        };
+        let out = cmd.output().expect("spawning checksum child");
+        assert!(
+            out.status.success(),
+            "child (A3PO_KERNEL={kernel:?}) failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        stdout
+            .lines()
+            .find_map(|l| {
+                l.trim()
+                    .strip_prefix("GEMM_CHECKSUM=")
+                    .and_then(|hex| u64::from_str_radix(hex, 16).ok())
+            })
+            .unwrap_or_else(|| panic!("no GEMM_CHECKSUM marker in child output:\n{stdout}"))
+    };
+    let scalar = run_child(Some("scalar"));
+    let default = run_child(None);
+    let simd = run_child(Some("simd"));
+    assert_eq!(
+        scalar, default,
+        "GEMM results differ between A3PO_KERNEL=scalar and the auto-detected tile"
+    );
+    assert_eq!(
+        simd, default,
+        "GEMM results differ between A3PO_KERNEL=simd and the auto-detected tile"
+    );
 }
