@@ -5,8 +5,10 @@
 //! Drives a full prompt-prefill + generation window per pass with a fixed
 //! non-EOS token stream (worst case: no row finishes early), then emits a
 //! machine-readable `BENCH_decode.json` so the perf trajectory is tracked
-//! from this PR onward. Acceptance: session decode >= 3x tokens/sec over
-//! the full-forward path on setup1 geometry.
+//! from this PR onward. A `session_scalar` row pins `A3PO_KERNEL=scalar`
+//! so the SIMD contribution (GEMM + attention lanes) is visible in the
+//! same run. Acceptance: session decode >= 3x tokens/sec over the
+//! full-forward path on setup1 geometry.
 //!
 //!   cargo bench --bench decode_throughput -- --preset setup1
 //!   cargo bench --bench decode_throughput -- --preset tiny --out BENCH_decode.json
@@ -14,7 +16,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use a3po::bench::write_bench_json;
+use a3po::bench::{kernel_info_json, write_bench_json};
 use a3po::runtime::native::kernels;
 use a3po::runtime::{Decoder, ParamSnapshot, PresetConfig, Runtime};
 use a3po::util::cli::Args;
@@ -100,18 +102,21 @@ fn main() -> anyhow::Result<()> {
         reps
     );
 
-    // (label, full_forward path?, force single-thread kernels?)
-    let plan: [(&str, bool, bool); 4] = [
-        ("full_forward_serial", true, true), // the seed decode path
-        ("full_forward", true, false),
-        ("session_serial", false, true),
-        ("session", false, false),
+    // (label, full_forward path?, force single-thread kernels?, ISA pin)
+    let plan: [(&str, bool, bool, Option<kernels::KernelIsa>); 5] = [
+        ("full_forward_serial", true, true, None), // the seed decode path
+        ("full_forward", true, false, None),
+        ("session_serial", false, true, None),
+        ("session_scalar", false, false, Some(kernels::KernelIsa::Scalar)),
+        ("session", false, false, None),
     ];
     let mut measured: Vec<(&str, u64, f64, f64)> = Vec::new();
-    for (label, full_forward, serial) in plan {
+    for (label, full_forward, serial, isa) in plan {
         kernels::set_force_serial(serial);
+        kernels::set_kernel_override(isa);
         let res = drive(&decoder, &snapshot, &geo, full_forward, reps);
         kernels::set_force_serial(false);
+        kernels::set_kernel_override(None);
         let (tokens, secs) = res?;
         let tps = tokens as f64 / secs.max(1e-12);
         println!("{label:<24} {tokens:>8} tokens in {secs:>8.3}s = {tps:>10.1} tok/s");
@@ -124,9 +129,11 @@ fn main() -> anyhow::Result<()> {
     let speedup_vs_seed = tps("session") / tps("full_forward_serial");
     let speedup_vs_full = tps("session") / tps("full_forward");
     let speedup_threads = tps("session") / tps("session_serial");
+    let speedup_simd = tps("session") / tps("session_scalar");
     println!("\nsession vs seed (serial full-forward) : {speedup_vs_seed:>6.2}x  (target >= 3x)");
     println!("session vs threaded full-forward      : {speedup_vs_full:>6.2}x");
     println!("threaded vs serial session kernels    : {speedup_threads:>6.2}x");
+    println!("session SIMD vs pinned-scalar kernels : {speedup_simd:>6.2}x");
 
     let mut pairs: Vec<(&str, Json)> = vec![
         ("preset", Json::Str(preset.clone())),
@@ -134,11 +141,13 @@ fn main() -> anyhow::Result<()> {
         ("prompt_len", Json::Num(geo.prompt_len as f64)),
         ("gen_len", Json::Num((geo.seq_len - geo.prompt_len) as f64)),
         ("param_count", Json::Num(geo.param_count as f64)),
+        ("kernel", kernel_info_json()),
         ("kernel_threads", Json::Num(threads as f64)),
         ("reps", Json::Num(reps as f64)),
         ("speedup_session_vs_seed", Json::Num(speedup_vs_seed)),
         ("speedup_session_vs_threaded_full_forward", Json::Num(speedup_vs_full)),
         ("speedup_threaded_vs_serial_session", Json::Num(speedup_threads)),
+        ("speedup_session_simd_vs_scalar", Json::Num(speedup_simd)),
     ];
     let detail: Vec<(&str, Json)> = measured
         .iter()

@@ -9,6 +9,10 @@
 //! faithful replica of the pre-blocking naive kernel on the acceptance
 //! shapes (rows=256, d=256, vocab- and d_ff-sized n) and writes the
 //! machine-readable `BENCH_kernels.json` (GFLOP/s per path + speedups).
+//! The attention section compares the blocked-scalar lane kernels with
+//! the dispatched SIMD twins on full-window and decode-step shapes, and
+//! measures the attention share of a tiny train step so the kernel
+//! speedup is attributable to end-to-end step time.
 //!
 //!   cargo bench --bench micro_hotpath
 //!   cargo bench --bench micro_hotpath -- --out BENCH_kernels.json
@@ -17,17 +21,19 @@ use std::path::PathBuf;
 
 use a3po::bench::{bench, kernel_info_json, write_bench_json};
 use a3po::buffer::{Episode, EpisodeBuffer};
-use a3po::config::{AlphaSchedule, StalenessPolicy};
+use a3po::config::{AlphaSchedule, Method, StalenessPolicy};
 use a3po::coordinator::advantage::grpo_group_advantages;
-use a3po::coordinator::batch::assemble;
+use a3po::coordinator::batch::{assemble, TrainBatch};
 use a3po::coordinator::trainer::interp_prox_host;
+use a3po::coordinator::Trainer;
 use a3po::env::{tokenizer, Problem};
-use a3po::runtime::native::kernels;
-use a3po::runtime::{HostTensor, PresetConfig, Runtime};
+use a3po::runtime::native::{kernels, preset as native_preset};
+use a3po::runtime::{HostTensor, PresetConfig, Runtime, WeightStore};
 use a3po::sampler::{log_softmax, sample, SamplerConfig};
 use a3po::util::cli::Args;
 use a3po::util::json::Json;
 use a3po::util::rng::Pcg64;
+use a3po::util::timer::Stopwatch;
 
 fn geo() -> PresetConfig {
     PresetConfig {
@@ -57,6 +63,30 @@ fn episode(rng: &mut Pcg64, version: u64, t: usize, s: usize) -> Episode {
         group: 0,
         text: "42".into(),
         problem: Problem { prompt: "6*7=".into(), answer: "42".into() },
+    }
+}
+
+/// Deterministic synthetic RL batch (same shape the coordinator builds),
+/// for the attention-share-of-train-step measurement.
+fn synthetic_batch(rng: &mut Pcg64, geo: &PresetConfig) -> TrainBatch {
+    let (b, s) = (geo.train_batch, geo.seq_len);
+    let t = s - 1;
+    let tokens = (0..b * s).map(|_| rng.below(geo.vocab as u64) as i32).collect();
+    let mask = (0..b * t).map(|i| if i % t >= t - geo.gen_len { 1.0 } else { 0.0 }).collect();
+    let behav_logp = (0..b * t).map(|_| -0.1 - 2.0 * rng.next_f32()).collect();
+    let adv = (0..b * t).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+    let alpha = (0..b).map(|_| rng.next_f32()).collect();
+    TrainBatch {
+        tokens,
+        mask,
+        behav_logp,
+        adv,
+        alpha,
+        staleness: vec![0; b],
+        mean_staleness: 0.0,
+        mean_alpha: 0.0,
+        mean_reward: 0.0,
+        mean_reward_exact: 0.0,
     }
 }
 
@@ -397,12 +427,242 @@ fn main() -> anyhow::Result<()> {
         ])
     };
 
+    // Attention kernels: blocked-scalar lanes vs the dispatched SIMD
+    // twins on full-window (train-shaped) and decode-step shapes. FLOP
+    // counts follow the causal window: forward does ~4*hd mul+adds per
+    // (i, j<=i) pair per head, backward ~8*hd; a decode step is one
+    // query row against pos+1 cached keys per head.
+    println!("== Attention: blocked-scalar vs dispatched lanes (GFLOP/s) ==\n");
+    let isa = info.isa.name();
+    let gf = |flops: f64, ns: f64| flops / ns.max(1e-9);
+    let jnum = |x: f64| if info.simd_available { Json::Num(x) } else { Json::Null };
+    let mut attn_rows: Vec<Json> = Vec::new();
+    let mut min_attn_simd = f64::INFINITY;
+    for (b, s, h, hd) in [(4usize, 128usize, 4usize, 64usize), (2, 192, 2, 128)] {
+        let d = h * hd;
+        let pairs = (s * (s + 1) / 2) as f64;
+        let fwd_flops = (b * h * 4 * hd) as f64 * pairs;
+        let bwd_flops = (b * h * 8 * hd) as f64 * pairs;
+        let q: Vec<f32> = (0..b * s * d).map(|_| rng.next_f32() - 0.5).collect();
+        let k: Vec<f32> = (0..b * s * d).map(|_| rng.next_f32() - 0.5).collect();
+        let v: Vec<f32> = (0..b * s * d).map(|_| rng.next_f32() - 0.5).collect();
+        let dctx: Vec<f32> = (0..b * s * d).map(|_| rng.next_f32() - 0.5).collect();
+        let mut probs = vec![0.0f32; b * h * s * s];
+        let mut ctx = vec![0.0f32; b * s * d];
+        let mut dq = vec![0.0f32; b * s * d];
+        let mut dk = vec![0.0f32; b * s * d];
+        let mut dv = vec![0.0f32; b * s * d];
+
+        // Pin scalar-vs-dispatched bit-equality before timing anything.
+        kernels::set_kernel_override(Some(kernels::KernelIsa::Scalar));
+        kernels::attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+        let (probs_ref, ctx_ref) = (probs.clone(), ctx.clone());
+        kernels::set_kernel_override(None);
+        kernels::attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+        assert_eq!(probs_ref, probs, "attention fwd scalar vs dispatched diverged");
+        assert_eq!(ctx_ref, ctx, "attention fwd scalar vs dispatched diverged");
+
+        let iters = 30;
+        kernels::set_kernel_override(Some(kernels::KernelIsa::Scalar));
+        let fwd_scl =
+            bench(&format!("attn fwd {b}x{s} h{h} hd{hd} scalar ({threads} thr)"), iters, || {
+                kernels::attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+                std::hint::black_box(ctx[0]);
+            });
+        let bwd_scl =
+            bench(&format!("attn bwd {b}x{s} h{h} hd{hd} scalar ({threads} thr)"), iters, || {
+                dq.fill(0.0);
+                dk.fill(0.0);
+                dv.fill(0.0);
+                kernels::attention_backward(
+                    b, s, h, hd, &probs, &q, &k, &v, &dctx, &mut dq, &mut dk, &mut dv,
+                );
+                std::hint::black_box(dq[0]);
+            });
+        kernels::set_kernel_override(None);
+        let fwd_new =
+            bench(&format!("attn fwd {b}x{s} h{h} hd{hd} {isa} ({threads} thr)"), iters, || {
+                kernels::attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+                std::hint::black_box(ctx[0]);
+            });
+        let bwd_new =
+            bench(&format!("attn bwd {b}x{s} h{h} hd{hd} {isa} ({threads} thr)"), iters, || {
+                dq.fill(0.0);
+                dk.fill(0.0);
+                dv.fill(0.0);
+                kernels::attention_backward(
+                    b, s, h, hd, &probs, &q, &k, &v, &dctx, &mut dq, &mut dk, &mut dv,
+                );
+                std::hint::black_box(dq[0]);
+            });
+
+        let fwd_speedup = fwd_scl.mean_ns / fwd_new.mean_ns.max(1e-9);
+        let bwd_speedup = bwd_scl.mean_ns / bwd_new.mean_ns.max(1e-9);
+        if info.simd_available {
+            min_attn_simd = min_attn_simd.min(fwd_speedup).min(bwd_speedup);
+        }
+        println!(
+            "  attn {b}x{s} h{h} hd{hd}: fwd scalar {:.2} | {isa} {:.2} GFLOP/s \
+             ({fwd_speedup:.2}x); bwd scalar {:.2} | {isa} {:.2} ({bwd_speedup:.2}x)\n",
+            gf(fwd_flops, fwd_scl.mean_ns),
+            gf(fwd_flops, fwd_new.mean_ns),
+            gf(bwd_flops, bwd_scl.mean_ns),
+            gf(bwd_flops, bwd_new.mean_ns),
+        );
+        attn_rows.push(Json::obj(vec![
+            ("kind", Json::Str("full_window".into())),
+            ("b", Json::Num(b as f64)),
+            ("s", Json::Num(s as f64)),
+            ("h", Json::Num(h as f64)),
+            ("hd", Json::Num(hd as f64)),
+            ("forward_scalar_gflops", Json::Num(gf(fwd_flops, fwd_scl.mean_ns))),
+            ("forward_dispatched_gflops", Json::Num(gf(fwd_flops, fwd_new.mean_ns))),
+            ("backward_scalar_gflops", Json::Num(gf(bwd_flops, bwd_scl.mean_ns))),
+            ("backward_dispatched_gflops", Json::Num(gf(bwd_flops, bwd_new.mean_ns))),
+            ("speedup_forward_simd_vs_scalar", jnum(fwd_speedup)),
+            ("speedup_backward_simd_vs_scalar", jnum(bwd_speedup)),
+        ]));
+    }
+
+    // Decode-step shape: a late position against a full KV window, the
+    // rollout engine's steady-state per-token cost.
+    {
+        let (rows, cap, h, hd) = (64usize, 192usize, 2usize, 128usize);
+        let pos = cap - 1;
+        let d = h * hd;
+        let flops = (rows * h * (pos + 1) * 4 * hd) as f64;
+        let q: Vec<f32> = (0..rows * d).map(|_| rng.next_f32() - 0.5).collect();
+        let kc: Vec<f32> = (0..rows * cap * d).map(|_| rng.next_f32() - 0.5).collect();
+        let vc: Vec<f32> = (0..rows * cap * d).map(|_| rng.next_f32() - 0.5).collect();
+        let mut ctx = vec![0.0f32; rows * d];
+
+        kernels::set_kernel_override(Some(kernels::KernelIsa::Scalar));
+        kernels::attention_decode_step(rows, cap, pos, h, hd, &q, &kc, &vc, &mut ctx);
+        let ctx_ref = ctx.clone();
+        kernels::set_kernel_override(None);
+        kernels::attention_decode_step(rows, cap, pos, h, hd, &q, &kc, &vc, &mut ctx);
+        assert_eq!(ctx_ref, ctx, "attention decode scalar vs dispatched diverged");
+
+        let iters = 200;
+        kernels::set_kernel_override(Some(kernels::KernelIsa::Scalar));
+        let scl = bench(
+            &format!("attn decode r{rows} cap{cap} h{h} hd{hd} scalar ({threads} thr)"),
+            iters,
+            || {
+                kernels::attention_decode_step(rows, cap, pos, h, hd, &q, &kc, &vc, &mut ctx);
+                std::hint::black_box(ctx[0]);
+            },
+        );
+        kernels::set_kernel_override(None);
+        let new = bench(
+            &format!("attn decode r{rows} cap{cap} h{h} hd{hd} {isa} ({threads} thr)"),
+            iters,
+            || {
+                kernels::attention_decode_step(rows, cap, pos, h, hd, &q, &kc, &vc, &mut ctx);
+                std::hint::black_box(ctx[0]);
+            },
+        );
+        let speedup = scl.mean_ns / new.mean_ns.max(1e-9);
+        if info.simd_available {
+            min_attn_simd = min_attn_simd.min(speedup);
+        }
+        println!(
+            "  attn decode r{rows} cap{cap} h{h} hd{hd}: scalar {:.2} | {isa} {:.2} GFLOP/s \
+             ({speedup:.2}x)\n",
+            gf(flops, scl.mean_ns),
+            gf(flops, new.mean_ns),
+        );
+        attn_rows.push(Json::obj(vec![
+            ("kind", Json::Str("decode_step".into())),
+            ("rows", Json::Num(rows as f64)),
+            ("cap", Json::Num(cap as f64)),
+            ("pos", Json::Num(pos as f64)),
+            ("h", Json::Num(h as f64)),
+            ("hd", Json::Num(hd as f64)),
+            ("scalar_gflops", Json::Num(gf(flops, scl.mean_ns))),
+            ("dispatched_gflops", Json::Num(gf(flops, new.mean_ns))),
+            ("speedup_simd_vs_scalar", jnum(speedup)),
+        ]));
+    }
+
+    // Attention share of a tiny train step: time full session steps, then
+    // time just the attention forward+backward those steps contain
+    // (n_layers * n_minibatch causal windows at minibatch geometry), so
+    // the kernel speedup above is attributable to end-to-end step time.
+    println!("== Attention share of a tiny train step ==\n");
+    let attn_share = {
+        let rt = Runtime::native("tiny", Some(&["init", "train_loglinear"]))?;
+        let tgeo = rt.manifest.preset.clone();
+        let dims = native_preset("tiny").expect("tiny preset exists").dims;
+        let init = rt.init_params(0)?;
+        let store = WeightStore::new(init.clone());
+        let mut trainer = Trainer::new(&rt, Method::Loglinear, init, store)?;
+        let mut brng = Pcg64::from_seed(0xA77);
+        let reps = 20usize;
+        let mut batches: Vec<TrainBatch> =
+            (0..2 + reps).map(|_| synthetic_batch(&mut brng, &tgeo)).collect();
+        let timed = batches.split_off(2);
+        for batch in batches {
+            trainer.step(batch)?;
+        }
+        let sw = Stopwatch::start();
+        let mut sink = 0.0;
+        for batch in timed {
+            sink += trainer.step(batch)?.0.loss;
+        }
+        let step_secs = sw.secs() / reps as f64;
+        std::hint::black_box(sink);
+
+        let (h, hd) = (dims.n_heads, dims.head_dim());
+        let d = h * hd;
+        let mb_rows = tgeo.train_batch / tgeo.n_minibatch;
+        let s = tgeo.seq_len;
+        let q: Vec<f32> = (0..mb_rows * s * d).map(|_| rng.next_f32() - 0.5).collect();
+        let k: Vec<f32> = (0..mb_rows * s * d).map(|_| rng.next_f32() - 0.5).collect();
+        let v: Vec<f32> = (0..mb_rows * s * d).map(|_| rng.next_f32() - 0.5).collect();
+        let dctx: Vec<f32> = (0..mb_rows * s * d).map(|_| rng.next_f32() - 0.5).collect();
+        let mut probs = vec![0.0f32; mb_rows * h * s * s];
+        let mut ctx = vec![0.0f32; mb_rows * s * d];
+        let mut dq = vec![0.0f32; mb_rows * s * d];
+        let mut dk = vec![0.0f32; mb_rows * s * d];
+        let mut dv = vec![0.0f32; mb_rows * s * d];
+        let windows = dims.n_layers * tgeo.n_minibatch;
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            for _ in 0..windows {
+                kernels::attention_forward(mb_rows, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+                dq.fill(0.0);
+                dk.fill(0.0);
+                dv.fill(0.0);
+                kernels::attention_backward(
+                    mb_rows, s, h, hd, &probs, &q, &k, &v, &dctx, &mut dq, &mut dk, &mut dv,
+                );
+            }
+        }
+        let attn_secs = sw.secs() / reps as f64;
+        std::hint::black_box(dq[0]);
+        let share = attn_secs / step_secs.max(1e-12);
+        println!(
+            "  step {:.3} ms, attention fwd+bwd {:.3} ms -> {:.1}% of step\n",
+            step_secs * 1e3,
+            attn_secs * 1e3,
+            share * 100.0
+        );
+        share
+    };
+
     println!("min blocked-vs-naive speedup: {min_speedup:.2}x (target >= 3x)");
     let min_simd_json = if info.simd_available {
         println!("min simd-vs-scalar speedup: {min_speedup_simd:.2}x (target >= 1.5x)");
         Json::Num(min_speedup_simd)
     } else {
         println!("simd unavailable on this host: simd-vs-scalar comparison skipped");
+        Json::Null
+    };
+    let min_attn_json = if info.simd_available {
+        println!("min attention simd-vs-scalar speedup: {min_attn_simd:.2}x (target >= 1.5x)");
+        Json::Num(min_attn_simd)
+    } else {
         Json::Null
     };
     write_bench_json(
@@ -412,10 +672,14 @@ fn main() -> anyhow::Result<()> {
             ("kernel_threads", Json::Num(threads as f64)),
             ("shapes", Json::Arr(shape_rows)),
             ("qkv", qkv),
+            ("attention_shapes", Json::Arr(attn_rows)),
             ("min_speedup_vs_naive", Json::Num(min_speedup)),
             ("target_speedup_vs_naive", Json::Num(3.0)),
             ("min_speedup_simd_vs_scalar", min_simd_json),
             ("target_speedup_simd_vs_scalar", Json::Num(1.5)),
+            ("min_attention_speedup_simd_vs_scalar", min_attn_json),
+            ("target_attention_speedup_simd_vs_scalar", Json::Num(1.5)),
+            ("attention_share_of_train_step", Json::Num(attn_share)),
         ]),
     )?;
     Ok(())

@@ -11,7 +11,8 @@
 //!
 //! Emits a machine-readable `BENCH_train.json` with steps/sec plus mean
 //! per-step heap allocations (count and bytes), counted by a wrapping
-//! global allocator. Acceptance: session train_loglinear steps/sec >=
+//! global allocator. A `session_scalar` row pins `A3PO_KERNEL=scalar`
+//! so the SIMD contribution (GEMM + attention lanes) is visible. Acceptance: session train_loglinear steps/sec >=
 //! 1.3x the positional path on the tiny preset.
 //!
 //!   cargo bench --bench train_step -- --preset tiny
@@ -181,18 +182,21 @@ fn main() -> anyhow::Result<()> {
         geo.train_batch, geo.seq_len, geo.n_minibatch, geo.param_count, threads, reps
     );
 
-    // (label, session path?, force single-thread kernels?)
-    let plan: [(&str, bool, bool); 4] = [
-        ("legacy_serial", false, true), // the seed train path
-        ("legacy", false, false),
-        ("session_serial", true, true),
-        ("session", true, false),
+    // (label, session path?, force single-thread kernels?, ISA pin)
+    let plan: [(&str, bool, bool, Option<kernels::KernelIsa>); 5] = [
+        ("legacy_serial", false, true, None), // the seed train path
+        ("legacy", false, false, None),
+        ("session_serial", true, true, None),
+        ("session_scalar", true, false, Some(kernels::KernelIsa::Scalar)),
+        ("session", true, false, None),
     ];
     let mut measured: Vec<(&str, Measurement)> = Vec::new();
-    for (label, use_sessions, serial) in plan {
+    for (label, use_sessions, serial, isa) in plan {
         kernels::set_force_serial(serial);
+        kernels::set_kernel_override(isa);
         let res = drive(&rt, &geo, use_sessions, reps);
         kernels::set_force_serial(false);
+        kernels::set_kernel_override(None);
         let m = res?;
         let sps = m.steps as f64 / m.secs.max(1e-12);
         println!(
@@ -210,11 +214,14 @@ fn main() -> anyhow::Result<()> {
     let session = find(&measured, "session");
     let legacy = find(&measured, "legacy");
     let session_serial = find(&measured, "session_serial");
+    let session_scalar = find(&measured, "session_scalar");
     let speedup_vs_legacy = steps_per_sec(session) / steps_per_sec(legacy);
     let speedup_threads = steps_per_sec(session) / steps_per_sec(session_serial);
+    let speedup_simd = steps_per_sec(session) / steps_per_sec(session_scalar);
     let alloc_ratio = session.allocs_per_step / legacy.allocs_per_step.max(1.0);
     println!("\nsession vs legacy steps/sec       : {speedup_vs_legacy:>6.2}x  (target >= 1.3x)");
     println!("threaded vs serial session kernels: {speedup_threads:>6.2}x");
+    println!("session SIMD vs pinned-scalar     : {speedup_simd:>6.2}x");
     println!("session allocs per step vs legacy : {alloc_ratio:>6.3}x");
 
     let mut pairs: Vec<(&str, Json)> = vec![
@@ -230,6 +237,7 @@ fn main() -> anyhow::Result<()> {
         ("dense_gflop_per_step", Json::Num(step_gflop)),
         ("speedup_session_vs_legacy", Json::Num(speedup_vs_legacy)),
         ("speedup_threaded_vs_serial_session", Json::Num(speedup_threads)),
+        ("speedup_session_simd_vs_scalar", Json::Num(speedup_simd)),
         ("alloc_ratio_session_vs_legacy", Json::Num(alloc_ratio)),
     ];
     let detail: Vec<(&str, Json)> = measured

@@ -1,6 +1,7 @@
 //! Shared dense-math kernels for the native backend: cache-blocked,
-//! register-tiled GEMM microkernels plus a small `std::thread` worker pool
-//! with low-overhead chunk dispatch.
+//! register-tiled GEMM microkernels, lane-shaped attention and LayerNorm
+//! kernels, plus a small `std::thread` worker pool with low-overhead chunk
+//! dispatch.
 //!
 //! Every kernel here is used by *both* halves of the system: the
 //! incremental decode sessions (`super::kv`) and the train/prox
@@ -48,6 +49,15 @@
 //! scalar, SIMD, fused-multi-`B`, and any-`A3PO_THREADS` runs are therefore
 //! bit-identical; the decode/train parity suites and
 //! `tests/kernel_parity.rs` pin this.
+//!
+//! The attention and LayerNorm kernels extend the same contract beyond the
+//! GEMMs: their dot, max, sum, and normalise passes run in a fixed 8-lane
+//! partial-sum shape (see the lane primitives section) with scalar and AVX2
+//! twins that replay one per-lane operation order, the softmax `exp` is
+//! scalar libm on *every* path (both twins share one function, so there is
+//! no vector-exp approximation to diverge), and attention parallelises over
+//! (batch row × head) work units that own disjoint output stripes — so the
+//! unit grain, like the chunk partition, can never change a result.
 //!
 //! # Dispatch
 //!
@@ -708,13 +718,14 @@ fn tile_scalar(
     }
 }
 
-/// Explicit AVX2 register tile (selected at runtime; never reached on other
-/// architectures).
+/// Explicit AVX2 register tile and lane-shaped vector primitives (selected
+/// at runtime; never reached on other architectures).
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
-    use super::{KC, MR, NR};
+    use super::{reduce_lanes, reduce_max_lanes, KC, MR, NR};
     use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+        _mm256_add_ps, _mm256_div_ps, _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps,
+        _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps, _mm256_sub_ps,
     };
 
     // The lane layout below hardcodes the tile geometry.
@@ -762,6 +773,189 @@ mod avx2 {
         _mm256_storeu_ps(acc[1].as_mut_ptr(), v1);
         _mm256_storeu_ps(acc[2].as_mut_ptr(), v2);
         _mm256_storeu_ps(acc[3].as_mut_ptr(), v3);
+    }
+
+    /// Lane-shaped dot product: replays `dot_lanes_scalar` exactly — vector
+    /// lane `l` is the scalar twin's `lanes[l]`, each chunk does one rounded
+    /// multiply then one rounded add per lane (`vmulps` + `vaddps`, never
+    /// `vfmadd`), tail elements land in lanes `0..rem`, and the combine is
+    /// the shared ascending-lane reduce.
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / NR;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let av = _mm256_loadu_ps(ap.add(c * NR));
+            let bv = _mm256_loadu_ps(bp.add(c * NR));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+        }
+        let mut lanes = [0.0f32; NR];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (l, t) in (chunks * NR..n).enumerate() {
+            lanes[l] += *ap.add(t) * *bp.add(t);
+        }
+        reduce_lanes(&lanes)
+    }
+
+    /// `out[t] += a * x[t]`, elementwise — same rounding sequence as the
+    /// scalar twin (one multiply, one add per element; no fusing).
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available and `out.len() == x.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(out: &mut [f32], x: &[f32], a: f32) {
+        let n = out.len();
+        let chunks = n / NR;
+        let av = _mm256_set1_ps(a);
+        let op = out.as_mut_ptr();
+        let xp = x.as_ptr();
+        for c in 0..chunks {
+            let xv = _mm256_loadu_ps(xp.add(c * NR));
+            let ov = _mm256_loadu_ps(op.add(c * NR));
+            _mm256_storeu_ps(op.add(c * NR), _mm256_add_ps(ov, _mm256_mul_ps(av, xv)));
+        }
+        for t in chunks * NR..n {
+            *op.add(t) += a * *xp.add(t);
+        }
+    }
+
+    /// Lane-shaped max (softmax stabiliser). `vmaxps` agrees with the
+    /// scalar `f32::max` on the finite scores the kernels produce; a
+    /// sign-of-zero tie could pick the other zero, but the max only feeds
+    /// `exp(x - mx)`, where both zero signs give exactly 1.0 — outputs
+    /// cannot diverge.
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn vmax(s: &[f32]) -> f32 {
+        let n = s.len();
+        let chunks = n / NR;
+        let sp = s.as_ptr();
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        for c in 0..chunks {
+            acc = _mm256_max_ps(acc, _mm256_loadu_ps(sp.add(c * NR)));
+        }
+        let mut lanes = [0.0f32; NR];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (l, t) in (chunks * NR..n).enumerate() {
+            lanes[l] = lanes[l].max(*sp.add(t));
+        }
+        reduce_max_lanes(&lanes)
+    }
+
+    /// Softmax normalise: `s[t] /= denom`. IEEE division is correctly
+    /// rounded, so `vdivps` matches the scalar `/` bit-for-bit.
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn div_all(s: &mut [f32], denom: f32) {
+        let n = s.len();
+        let chunks = n / NR;
+        let dv = _mm256_set1_ps(denom);
+        let sp = s.as_mut_ptr();
+        for c in 0..chunks {
+            let v = _mm256_loadu_ps(sp.add(c * NR));
+            _mm256_storeu_ps(sp.add(c * NR), _mm256_div_ps(v, dv));
+        }
+        for t in chunks * NR..n {
+            *sp.add(t) /= denom;
+        }
+    }
+
+    /// Lane-shaped sum (LayerNorm mean pass).
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let chunks = n / NR;
+        let xp = x.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(xp.add(c * NR)));
+        }
+        let mut lanes = [0.0f32; NR];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (l, t) in (chunks * NR..n).enumerate() {
+            lanes[l] += *xp.add(t);
+        }
+        reduce_lanes(&lanes)
+    }
+
+    /// Lane-shaped squared-deviation sum (LayerNorm variance pass).
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sqdev(x: &[f32], mu: f32) -> f32 {
+        let n = x.len();
+        let chunks = n / NR;
+        let xp = x.as_ptr();
+        let muv = _mm256_set1_ps(mu);
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let dv = _mm256_sub_ps(_mm256_loadu_ps(xp.add(c * NR)), muv);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(dv, dv));
+        }
+        let mut lanes = [0.0f32; NR];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (l, t) in (chunks * NR..n).enumerate() {
+            let dv = *xp.add(t) - mu;
+            lanes[l] += dv * dv;
+        }
+        reduce_lanes(&lanes)
+    }
+
+    /// LayerNorm normalise pass, elementwise:
+    /// `out[t] = (row[t] - mu) * iv * scale[t] + bias[t]` with the scalar
+    /// twin's rounding order (sub, two multiplies, one add).
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available and all four slices must share one length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn norm_row(
+        out: &mut [f32],
+        row: &[f32],
+        scale: &[f32],
+        bias: &[f32],
+        mu: f32,
+        iv: f32,
+    ) {
+        let n = out.len();
+        let chunks = n / NR;
+        let muv = _mm256_set1_ps(mu);
+        let ivv = _mm256_set1_ps(iv);
+        let op = out.as_mut_ptr();
+        let rp = row.as_ptr();
+        let sp = scale.as_ptr();
+        let bp = bias.as_ptr();
+        for c in 0..chunks {
+            let o = c * NR;
+            let t = _mm256_sub_ps(_mm256_loadu_ps(rp.add(o)), muv);
+            let t = _mm256_mul_ps(t, ivv);
+            let t = _mm256_mul_ps(t, _mm256_loadu_ps(sp.add(o)));
+            let t = _mm256_add_ps(t, _mm256_loadu_ps(bp.add(o)));
+            _mm256_storeu_ps(op.add(o), t);
+        }
+        for t in chunks * NR..n {
+            *op.add(t) = (*rp.add(t) - mu) * iv * *sp.add(t) + *bp.add(t);
+        }
     }
 }
 
@@ -1321,6 +1515,267 @@ pub fn matmul_set_packed_multi(
 }
 
 // ---------------------------------------------------------------------------
+// Lane-shaped vector primitives (attention + LayerNorm)
+//
+// Same playbook as the GEMM register tile: a scalar twin written in a fixed
+// 8-lane ([`NR`]) partial-sum shape that the compiler autovectorizes, and an
+// AVX2 twin that replays that exact per-lane operation order with separate
+// multiply and add instructions — never `vfmadd` — so scalar ≡ SIMD stays
+// bit-identical. Reductions always combine lanes in the same ascending
+// order, and tail elements (`len % NR`) always land in lanes `0..rem` after
+// the chunked body, on both paths.
+
+/// The fixed lane-combine order every lane-shaped accumulator funnels
+/// through: strictly ascending lanes. Shared by the scalar and AVX2 twins so
+/// partial sums combine identically on every path.
+#[inline(always)]
+fn reduce_lanes(lanes: &[f32; NR]) -> f32 {
+    let mut acc = lanes[0];
+    for l in 1..NR {
+        acc += lanes[l];
+    }
+    acc
+}
+
+/// Ascending-lane max combine. Max over distinct finite values is
+/// order-insensitive, but the fixed order keeps the contract uniform.
+#[inline(always)]
+fn reduce_max_lanes(lanes: &[f32; NR]) -> f32 {
+    let mut m = lanes[0];
+    for l in 1..NR {
+        m = m.max(lanes[l]);
+    }
+    m
+}
+
+/// Scalar twin of the lane dot product: 8 independent lane sums over the
+/// chunked body, tail into lanes `0..rem`, fixed ascending reduce.
+#[inline(always)]
+fn dot_lanes_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / NR;
+    let mut lanes = [0.0f32; NR];
+    for c in 0..chunks {
+        let ar = &a[c * NR..c * NR + NR];
+        let br = &b[c * NR..c * NR + NR];
+        for l in 0..NR {
+            lanes[l] += ar[l] * br[l];
+        }
+    }
+    for (l, t) in (chunks * NR..n).enumerate() {
+        lanes[l] += a[t] * b[t];
+    }
+    reduce_lanes(&lanes)
+}
+
+/// `dot(a, b)` in the fixed lane shape, dispatched on `isa`.
+#[inline(always)]
+fn dot_lanes(a: &[f32], b: &[f32], isa: KernelIsa) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        // SAFETY: `Avx2` is only selected after feature detection succeeded
+        // (see `active_isa`).
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => dot_lanes_scalar(a, b),
+        KernelIsa::Scalar => dot_lanes_scalar(a, b),
+    }
+}
+
+/// Scalar twin of `out[t] += a * x[t]` — elementwise (one rounded multiply,
+/// one rounded add per element), so lane width cannot reorder anything.
+#[inline(always)]
+fn axpy_scalar(out: &mut [f32], x: &[f32], a: f32) {
+    for (o, &xv) in out.iter_mut().zip(x.iter()) {
+        *o += a * xv;
+    }
+}
+
+#[inline(always)]
+fn axpy(out: &mut [f32], x: &[f32], a: f32, isa: KernelIsa) {
+    debug_assert_eq!(out.len(), x.len());
+    match isa {
+        // SAFETY: selected only after feature detection (see `active_isa`).
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => unsafe { avx2::axpy(out, x, a) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => axpy_scalar(out, x, a),
+        KernelIsa::Scalar => axpy_scalar(out, x, a),
+    }
+}
+
+/// Scalar twin of the lane max (softmax stabiliser).
+#[inline(always)]
+fn max_lanes_scalar(s: &[f32]) -> f32 {
+    let n = s.len();
+    let chunks = n / NR;
+    let mut lanes = [f32::NEG_INFINITY; NR];
+    for c in 0..chunks {
+        let r = &s[c * NR..c * NR + NR];
+        for l in 0..NR {
+            lanes[l] = lanes[l].max(r[l]);
+        }
+    }
+    for (l, t) in (chunks * NR..n).enumerate() {
+        lanes[l] = lanes[l].max(s[t]);
+    }
+    reduce_max_lanes(&lanes)
+}
+
+#[inline(always)]
+fn max_lanes(s: &[f32], isa: KernelIsa) -> f32 {
+    match isa {
+        // SAFETY: selected only after feature detection (see `active_isa`).
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => unsafe { avx2::vmax(s) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => max_lanes_scalar(s),
+        KernelIsa::Scalar => max_lanes_scalar(s),
+    }
+}
+
+/// Scalar twin of the softmax normalise pass: one correctly-rounded divide
+/// per element, so lane width cannot change it.
+#[inline(always)]
+fn div_all_scalar(s: &mut [f32], denom: f32) {
+    for v in s.iter_mut() {
+        *v /= denom;
+    }
+}
+
+#[inline(always)]
+fn div_all(s: &mut [f32], denom: f32, isa: KernelIsa) {
+    match isa {
+        // SAFETY: selected only after feature detection (see `active_isa`).
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => unsafe { avx2::div_all(s, denom) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => div_all_scalar(s, denom),
+        KernelIsa::Scalar => div_all_scalar(s, denom),
+    }
+}
+
+/// Softmax exp pass: `s[j] = exp(s[j] - mx)` in place, returning the
+/// denominator accumulated in the fixed lane shape. The `exp` itself stays
+/// scalar libm on *every* path — there is no bit-exact vector exp to pair
+/// with it, so both register tiles share this one function and the
+/// scalar ≡ SIMD contract holds trivially; the surrounding dot, max,
+/// normalise, and context passes are where the lane width pays.
+#[inline(always)]
+fn exp_denom_lanes(s: &mut [f32], mx: f32) -> f32 {
+    let n = s.len();
+    let chunks = n / NR;
+    let mut lanes = [0.0f32; NR];
+    for c in 0..chunks {
+        let r = &mut s[c * NR..c * NR + NR];
+        for l in 0..NR {
+            let e = (r[l] - mx).exp();
+            r[l] = e;
+            lanes[l] += e;
+        }
+    }
+    for (l, t) in (chunks * NR..n).enumerate() {
+        let e = (s[t] - mx).exp();
+        s[t] = e;
+        lanes[l] += e;
+    }
+    reduce_lanes(&lanes)
+}
+
+/// Scalar twin of the LayerNorm row sum (mean pass).
+#[inline(always)]
+fn sum_lanes_scalar(x: &[f32]) -> f32 {
+    let n = x.len();
+    let chunks = n / NR;
+    let mut lanes = [0.0f32; NR];
+    for c in 0..chunks {
+        let r = &x[c * NR..c * NR + NR];
+        for l in 0..NR {
+            lanes[l] += r[l];
+        }
+    }
+    for (l, t) in (chunks * NR..n).enumerate() {
+        lanes[l] += x[t];
+    }
+    reduce_lanes(&lanes)
+}
+
+#[inline(always)]
+fn sum_lanes(x: &[f32], isa: KernelIsa) -> f32 {
+    match isa {
+        // SAFETY: selected only after feature detection (see `active_isa`).
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => unsafe { avx2::sum(x) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => sum_lanes_scalar(x),
+        KernelIsa::Scalar => sum_lanes_scalar(x),
+    }
+}
+
+/// Scalar twin of the LayerNorm squared-deviation sum (variance pass).
+#[inline(always)]
+fn sqdev_lanes_scalar(x: &[f32], mu: f32) -> f32 {
+    let n = x.len();
+    let chunks = n / NR;
+    let mut lanes = [0.0f32; NR];
+    for c in 0..chunks {
+        let r = &x[c * NR..c * NR + NR];
+        for l in 0..NR {
+            let dv = r[l] - mu;
+            lanes[l] += dv * dv;
+        }
+    }
+    for (l, t) in (chunks * NR..n).enumerate() {
+        let dv = x[t] - mu;
+        lanes[l] += dv * dv;
+    }
+    reduce_lanes(&lanes)
+}
+
+#[inline(always)]
+fn sqdev_lanes(x: &[f32], mu: f32, isa: KernelIsa) -> f32 {
+    match isa {
+        // SAFETY: selected only after feature detection (see `active_isa`).
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => unsafe { avx2::sqdev(x, mu) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => sqdev_lanes_scalar(x, mu),
+        KernelIsa::Scalar => sqdev_lanes_scalar(x, mu),
+    }
+}
+
+/// Scalar twin of the LayerNorm normalise pass:
+/// `out[j] = (row[j] - mu) * iv * scale[j] + bias[j]`, elementwise.
+#[inline(always)]
+fn ln_norm_row_scalar(out: &mut [f32], row: &[f32], scale: &[f32], bias: &[f32], mu: f32, iv: f32) {
+    for j in 0..out.len() {
+        out[j] = (row[j] - mu) * iv * scale[j] + bias[j];
+    }
+}
+
+#[inline(always)]
+fn ln_norm_row(
+    out: &mut [f32],
+    row: &[f32],
+    scale: &[f32],
+    bias: &[f32],
+    mu: f32,
+    iv: f32,
+    isa: KernelIsa,
+) {
+    debug_assert!(row.len() == out.len() && scale.len() == out.len() && bias.len() == out.len());
+    match isa {
+        // SAFETY: selected only after feature detection (see `active_isa`).
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => unsafe { avx2::norm_row(out, row, scale, bias, mu, iv) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => ln_norm_row_scalar(out, row, scale, bias, mu, iv),
+        KernelIsa::Scalar => ln_norm_row_scalar(out, row, scale, bias, mu, iv),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // GELU (tanh approximation — jax.nn.gelu's default) and LayerNorm
 
 const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
@@ -1362,7 +1817,10 @@ pub fn layernorm_stats(
 }
 
 /// [`layernorm_stats`] writing into caller-owned buffers (resized here),
-/// so the train workspace reuses its allocations every step.
+/// so the train workspace reuses its allocations every step. The mean,
+/// variance, and normalise passes run in the fixed lane shape dispatched
+/// across the scalar/AVX2 twins (see the lane primitives above), so results
+/// are bit-identical across ISAs like every other kernel in this module.
 #[allow(clippy::too_many_arguments)]
 pub fn layernorm_stats_into(
     x: &[f32],
@@ -1375,20 +1833,20 @@ pub fn layernorm_stats_into(
     inv: &mut Vec<f32>,
 ) {
     debug_assert_eq!(x.len(), rows * d);
-    reset(y, rows * d);
-    reset(inv, rows);
-    reset(mean, rows);
+    // Every element below is overwritten, so plain resizes suffice (no
+    // zero-fill sweep).
+    y.resize(rows * d, 0.0);
+    inv.resize(rows, 0.0);
+    mean.resize(rows, 0.0);
+    let isa = active_isa();
     for r in 0..rows {
         let row = &x[r * d..(r + 1) * d];
-        let mu: f32 = row.iter().sum::<f32>() / d as f32;
-        let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let mu = sum_lanes(row, isa) / d as f32;
+        let var = sqdev_lanes(row, mu, isa) / d as f32;
         let iv = 1.0 / (var + LN_EPS).sqrt();
         mean[r] = mu;
         inv[r] = iv;
-        let out = &mut y[r * d..(r + 1) * d];
-        for j in 0..d {
-            out[j] = (row[j] - mu) * iv * scale[j] + bias[j];
-        }
+        ln_norm_row(&mut y[r * d..(r + 1) * d], row, scale, bias, mu, iv, isa);
     }
 }
 
@@ -1399,11 +1857,57 @@ pub fn layernorm_rows(x: &[f32], scale: &[f32], bias: &[f32], rows: usize, d: us
 
 // ---------------------------------------------------------------------------
 // Causal multi-head attention (full window + incremental decode step)
+//
+// Head kernels are built from the lane-shaped primitives above and are
+// dispatched as (batch row × head) work units: each unit owns its head's
+// `probs` block and the `col..col + hd` column stripe of its batch row's
+// output/gradient blocks, so units never alias and the SendPtr safety
+// argument from the GEMM path carries over. Per-unit softmax scratch lives
+// in a reusable per-thread buffer — steady-state decode performs zero
+// attention allocations.
+
+/// Reusable per-thread attention scratch (softmax scores / dprobs rows):
+/// grown once per worker thread and reused across heads, layers, steps, and
+/// sessions. Each head kernel resizes it and overwrites every element it
+/// reads, so results never depend on which thread (or prior unit) last used
+/// the buffer.
+thread_local! {
+    static ATTN_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Drive `run_unit` over `0..units` (batch row × head) work units: serially
+/// below the parallel threshold, otherwise grouped into counter-claimed
+/// chunks (a few per worker, like the GEMM row blocks). Each call receives
+/// the running thread's reusable scratch buffer. Units are self-contained,
+/// so serial and any chunk partition visit identical per-unit arithmetic —
+/// results are bit-identical regardless of grain or thread count.
+fn head_parallel(units: usize, work: usize, run_unit: &(dyn Fn(usize, &mut Vec<f32>) + Sync)) {
+    if !parallel_ok(units, work) {
+        ATTN_SCRATCH.with(|sc| {
+            let mut buf = sc.borrow_mut();
+            for u in 0..units {
+                run_unit(u, &mut buf);
+            }
+        });
+        return;
+    }
+    let upc = div_ceil(units, pool().workers() * 4).max(1);
+    let n_chunks = div_ceil(units, upc);
+    run_chunks(n_chunks, &|ci: usize| {
+        ATTN_SCRATCH.with(|sc| {
+            let mut buf = sc.borrow_mut();
+            for u in ci * upc..units.min((ci + 1) * upc) {
+                run_unit(u, &mut buf);
+            }
+        });
+    });
+}
 
 /// Causal attention over a full `[b, s]` window. `q`/`k`/`v` are `[b, s, d]`
-/// with per-head column blocks; fills `probs` `[b, h, s, s]` and
-/// accumulates into `ctx` `[b, s, d]` (callers pass zeroed buffers).
-/// Parallel over batch rows: each row's output block is independent.
+/// with per-head column blocks; fully overwrites `probs` `[b, h, s, s]`
+/// (upper triangle zeroed) and `ctx` `[b, s, d]` — callers need not zero
+/// either. Parallel over (batch row × head) units, so even a single-row
+/// decode batch fans out across heads.
 pub fn attention_forward(
     b: usize,
     s: usize,
@@ -1416,95 +1920,83 @@ pub fn attention_forward(
     ctx: &mut [f32],
 ) {
     let d = h * hd;
+    debug_assert_eq!(q.len(), b * s * d);
+    debug_assert_eq!(k.len(), b * s * d);
+    debug_assert_eq!(v.len(), b * s * d);
     debug_assert_eq!(probs.len(), b * h * s * s);
     debug_assert_eq!(ctx.len(), b * s * d);
-    if !parallel_ok(b, b * h * s * s * hd) {
-        for bi in 0..b {
-            attention_forward_row(
-                s,
-                h,
-                hd,
-                &q[bi * s * d..(bi + 1) * s * d],
-                &k[bi * s * d..(bi + 1) * s * d],
-                &v[bi * s * d..(bi + 1) * s * d],
-                &mut probs[bi * h * s * s..(bi + 1) * h * s * s],
-                &mut ctx[bi * s * d..(bi + 1) * s * d],
-            );
-        }
-        return;
-    }
+    let isa = active_isa();
     let pp = SendPtr(probs.as_mut_ptr());
     let cp = SendPtr(ctx.as_mut_ptr());
-    run_chunks(b, &|bi: usize| {
-        // SAFETY: chunk `bi` touches only batch row `bi`'s disjoint slices.
-        let probs =
-            unsafe { std::slice::from_raw_parts_mut(pp.0.add(bi * h * s * s), h * s * s) };
-        let ctx = unsafe { std::slice::from_raw_parts_mut(cp.0.add(bi * s * d), s * d) };
-        attention_forward_row(
+    let run_unit = |u: usize, scores: &mut Vec<f32>| {
+        let (bi, hh) = (u / h, u % h);
+        // SAFETY: unit (bi, hh) writes only its own `[s, s]` probs block and
+        // the `col..col + hd` column stripe of batch row `bi`'s ctx block;
+        // both are disjoint across units.
+        let probs_head =
+            unsafe { std::slice::from_raw_parts_mut(pp.0.add((bi * h + hh) * s * s), s * s) };
+        let ctx_row = SendPtr(unsafe { cp.0.add(bi * s * d) });
+        attention_forward_head(
             s,
-            h,
+            d,
             hd,
+            hh * hd,
             &q[bi * s * d..(bi + 1) * s * d],
             &k[bi * s * d..(bi + 1) * s * d],
             &v[bi * s * d..(bi + 1) * s * d],
-            probs,
-            ctx,
+            probs_head,
+            ctx_row,
+            scores,
+            isa,
         );
-    });
+    };
+    head_parallel(b * h, b * h * s * s * hd, &run_unit);
 }
 
-/// One batch row of causal attention (`q`/`k`/`v` row-local `[s, d]`).
-fn attention_forward_row(
+/// One (batch row, head) unit of full-window causal attention: reads the
+/// `col..col + hd` column stripe of the row-local `[s, d]` `q`/`k`/`v`,
+/// writes the head's `[s, s]` probs block and its ctx column stripe (via
+/// the batch row's base pointer — see the caller's SAFETY argument).
+fn attention_forward_head(
     s: usize,
-    h: usize,
+    d: usize,
     hd: usize,
+    col: usize,
     q: &[f32],
     k: &[f32],
     v: &[f32],
     probs: &mut [f32],
-    ctx: &mut [f32],
+    ctx: SendPtr,
+    scores: &mut Vec<f32>,
+    isa: KernelIsa,
 ) {
-    let d = h * hd;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut scores: Vec<f32> = Vec::with_capacity(s);
-    for hh in 0..h {
-        let col = hh * hd;
-        for i in 0..s {
-            let qrow = &q[i * d + col..i * d + col + hd];
-            let prow_base = (hh * s + i) * s;
-            let mut mx = f32::NEG_INFINITY;
-            scores.clear();
-            for j in 0..=i {
-                let krow = &k[j * d + col..j * d + col + hd];
-                let mut acc = 0.0f32;
-                for t in 0..hd {
-                    acc += qrow[t] * krow[t];
-                }
-                let sc = acc * scale;
-                mx = mx.max(sc);
-                scores.push(sc);
-            }
-            let mut denom = 0.0f32;
-            for sc in scores.iter_mut() {
-                *sc = (*sc - mx).exp();
-                denom += *sc;
-            }
-            let crow = &mut ctx[i * d + col..i * d + col + hd];
-            for j in 0..=i {
-                let pj = scores[j] / denom;
-                probs[prow_base + j] = pj;
-                let vrow = &v[j * d + col..j * d + col + hd];
-                for t in 0..hd {
-                    crow[t] += pj * vrow[t];
-                }
-            }
+    for i in 0..s {
+        let qrow = &q[i * d + col..i * d + col + hd];
+        scores.resize(i + 1, 0.0);
+        for j in 0..=i {
+            scores[j] = dot_lanes(qrow, &k[j * d + col..j * d + col + hd], isa) * scale;
+        }
+        let mx = max_lanes(scores, isa);
+        let denom = exp_denom_lanes(scores, mx);
+        div_all(scores, denom, isa);
+        let prow = &mut probs[i * s..(i + 1) * s];
+        prow[..=i].copy_from_slice(scores);
+        prow[i + 1..].fill(0.0);
+        // SAFETY: see `attention_forward` — this unit owns this stripe.
+        let crow = unsafe { std::slice::from_raw_parts_mut(ctx.0.add(i * d + col), hd) };
+        crow.fill(0.0);
+        for j in 0..=i {
+            axpy(crow, &v[j * d + col..j * d + col + hd], scores[j], isa);
         }
     }
 }
 
 /// Backward of [`attention_forward`]: given `dctx` `[b, s, d]` and the
-/// forward's `probs`/`q`/`k`/`v`, accumulates into `dq`/`dk`/`dv`
-/// (zeroed by the caller). Parallel over batch rows.
+/// forward's `probs`/`q`/`k`/`v`, accumulates into `dq`/`dk`/`dv` (zeroed
+/// by the caller — a unit's gradients span many positions, so the forward's
+/// overwrite trick does not apply here). Parallel over (batch row × head)
+/// units.
 pub fn attention_backward(
     b: usize,
     s: usize,
@@ -1520,107 +2012,101 @@ pub fn attention_backward(
     dv: &mut [f32],
 ) {
     let d = h * hd;
-    if !parallel_ok(b, 2 * b * h * s * s * hd) {
-        for bi in 0..b {
-            attention_backward_row(
-                s,
-                h,
-                hd,
-                &probs[bi * h * s * s..(bi + 1) * h * s * s],
-                &q[bi * s * d..(bi + 1) * s * d],
-                &k[bi * s * d..(bi + 1) * s * d],
-                &v[bi * s * d..(bi + 1) * s * d],
-                &dctx[bi * s * d..(bi + 1) * s * d],
-                &mut dq[bi * s * d..(bi + 1) * s * d],
-                &mut dk[bi * s * d..(bi + 1) * s * d],
-                &mut dv[bi * s * d..(bi + 1) * s * d],
-            );
-        }
-        return;
-    }
+    debug_assert_eq!(probs.len(), b * h * s * s);
+    debug_assert_eq!(dctx.len(), b * s * d);
+    debug_assert_eq!(dq.len(), b * s * d);
+    debug_assert_eq!(dk.len(), b * s * d);
+    debug_assert_eq!(dv.len(), b * s * d);
+    let isa = active_isa();
     let qp = SendPtr(dq.as_mut_ptr());
     let kp = SendPtr(dk.as_mut_ptr());
     let vp = SendPtr(dv.as_mut_ptr());
-    run_chunks(b, &|bi: usize| {
-        // SAFETY: chunk `bi` touches only batch row `bi`'s disjoint slices.
-        let dqc = unsafe { std::slice::from_raw_parts_mut(qp.0.add(bi * s * d), s * d) };
-        let dkc = unsafe { std::slice::from_raw_parts_mut(kp.0.add(bi * s * d), s * d) };
-        let dvc = unsafe { std::slice::from_raw_parts_mut(vp.0.add(bi * s * d), s * d) };
-        attention_backward_row(
+    let run_unit = |u: usize, dprobs: &mut Vec<f32>| {
+        let (bi, hh) = (u / h, u % h);
+        let row0 = bi * s * d;
+        // SAFETY: unit (bi, hh) accumulates only into the `col..col + hd`
+        // column stripes of batch row `bi`'s dq/dk/dv blocks; disjoint
+        // across units.
+        let dqr = SendPtr(unsafe { qp.0.add(row0) });
+        let dkr = SendPtr(unsafe { kp.0.add(row0) });
+        let dvr = SendPtr(unsafe { vp.0.add(row0) });
+        attention_backward_head(
             s,
-            h,
+            d,
             hd,
-            &probs[bi * h * s * s..(bi + 1) * h * s * s],
-            &q[bi * s * d..(bi + 1) * s * d],
-            &k[bi * s * d..(bi + 1) * s * d],
-            &v[bi * s * d..(bi + 1) * s * d],
-            &dctx[bi * s * d..(bi + 1) * s * d],
-            dqc,
-            dkc,
-            dvc,
+            hh * hd,
+            &probs[(bi * h + hh) * s * s..(bi * h + hh + 1) * s * s],
+            &q[row0..row0 + s * d],
+            &k[row0..row0 + s * d],
+            &v[row0..row0 + s * d],
+            &dctx[row0..row0 + s * d],
+            dqr,
+            dkr,
+            dvr,
+            dprobs,
+            isa,
         );
-    });
+    };
+    head_parallel(b * h, 2 * b * h * s * s * hd, &run_unit);
 }
 
-fn attention_backward_row(
+/// One (batch row, head) unit of attention backward (see
+/// [`attention_backward`]). The `dscore` loop is branch-free: a zero
+/// `dscore` contributes exact zeros, and dropping the old
+/// `if dscore == 0.0 { continue }` skip keeps the inner loops in the same
+/// multiply-add shape as the forward so they run on the lane primitives.
+fn attention_backward_head(
     s: usize,
-    h: usize,
+    d: usize,
     hd: usize,
+    col: usize,
     probs: &[f32],
     q: &[f32],
     k: &[f32],
     v: &[f32],
     dctx: &[f32],
-    dq: &mut [f32],
-    dk: &mut [f32],
-    dv: &mut [f32],
+    dq: SendPtr,
+    dk: SendPtr,
+    dv: SendPtr,
+    dprobs: &mut Vec<f32>,
+    isa: KernelIsa,
 ) {
-    let d = h * hd;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut dprobs_row = vec![0.0f32; s];
-    for hh in 0..h {
-        let col = hh * hd;
-        for i in 0..s {
-            let prow_base = (hh * s + i) * s;
-            let dcrow = &dctx[i * d + col..i * d + col + hd];
-            // dprobs and dv.
-            let mut rowdot = 0.0f32;
-            for j in 0..=i {
-                let pj = probs[prow_base + j];
-                let vrow = &v[j * d + col..j * d + col + hd];
-                let mut acc = 0.0f32;
-                for t in 0..hd {
-                    acc += dcrow[t] * vrow[t];
-                }
-                dprobs_row[j] = acc;
-                rowdot += acc * pj;
-                let dvrow = &mut dv[j * d + col..j * d + col + hd];
-                for t in 0..hd {
-                    dvrow[t] += pj * dcrow[t];
-                }
-            }
-            // dscores -> dq, dk.
-            let q_start = i * d + col;
-            for j in 0..=i {
-                let pj = probs[prow_base + j];
-                let dscore = pj * (dprobs_row[j] - rowdot) * scale;
-                if dscore == 0.0 {
-                    continue;
-                }
-                let k_start = j * d + col;
-                for t in 0..hd {
-                    dq[q_start + t] += dscore * k[k_start + t];
-                    dk[k_start + t] += dscore * q[q_start + t];
-                }
-            }
+    for i in 0..s {
+        let prow = &probs[i * s..i * s + i + 1];
+        let dcrow = &dctx[i * d + col..i * d + col + hd];
+        dprobs.resize(i + 1, 0.0);
+        // dprobs, the probs-weighted row dot, and dv.
+        let mut rd_lanes = [0.0f32; NR];
+        for j in 0..=i {
+            let pj = prow[j];
+            let a = dot_lanes(dcrow, &v[j * d + col..j * d + col + hd], isa);
+            dprobs[j] = a;
+            rd_lanes[j % NR] += a * pj;
+            // SAFETY: see `attention_backward` — this unit owns this stripe.
+            let dvrow = unsafe { std::slice::from_raw_parts_mut(dv.0.add(j * d + col), hd) };
+            axpy(dvrow, dcrow, pj, isa);
+        }
+        let rowdot = reduce_lanes(&rd_lanes);
+        // dscores -> dq, dk.
+        let qrow = &q[i * d + col..i * d + col + hd];
+        // SAFETY: as above.
+        let dqrow = unsafe { std::slice::from_raw_parts_mut(dq.0.add(i * d + col), hd) };
+        for j in 0..=i {
+            let dscore = prow[j] * (dprobs[j] - rowdot) * scale;
+            axpy(dqrow, &k[j * d + col..j * d + col + hd], dscore, isa);
+            // SAFETY: as above.
+            let dkrow = unsafe { std::slice::from_raw_parts_mut(dk.0.add(j * d + col), hd) };
+            axpy(dkrow, qrow, dscore, isa);
         }
     }
 }
 
 /// One incremental decode step of causal attention: each row's single query
 /// at position `pos` attends over its `pos + 1` cached keys. `q` is
-/// `[rows, d]`; `kcache`/`vcache` are `[rows, cap, d]`; accumulates into
-/// `ctx` `[rows, d]` (zeroed by the caller). Parallel over rows.
+/// `[rows, d]`; `kcache`/`vcache` are `[rows, cap, d]`; fully overwrites
+/// `ctx` `[rows, d]` — callers need not zero it. Parallel over (row × head)
+/// units, so small decode batches still fan out.
 pub fn attention_decode_step(
     rows: usize,
     cap: usize,
@@ -1636,84 +2122,60 @@ pub fn attention_decode_step(
     debug_assert!(pos < cap);
     debug_assert_eq!(q.len(), rows * d);
     debug_assert!(kcache.len() >= rows * cap * d);
+    debug_assert!(vcache.len() >= rows * cap * d);
     debug_assert_eq!(ctx.len(), rows * d);
-    if !parallel_ok(rows, rows * (pos + 1) * d) {
-        for r in 0..rows {
-            attention_decode_row(
-                cap,
-                pos,
-                h,
-                hd,
-                &q[r * d..(r + 1) * d],
-                &kcache[r * cap * d..(r + 1) * cap * d],
-                &vcache[r * cap * d..(r + 1) * cap * d],
-                &mut ctx[r * d..(r + 1) * d],
-            );
-        }
-        return;
-    }
+    let isa = active_isa();
     let cp = SendPtr(ctx.as_mut_ptr());
-    run_chunks(rows, &|r: usize| {
-        // SAFETY: chunk `r` writes only row `r`'s disjoint ctx slice.
-        let crow = unsafe { std::slice::from_raw_parts_mut(cp.0.add(r * d), d) };
-        attention_decode_row(
-            cap,
+    let run_unit = |u: usize, scores: &mut Vec<f32>| {
+        let (r, hh) = (u / h, u % h);
+        // SAFETY: unit (r, hh) writes only the `col..col + hd` column stripe
+        // of ctx row `r`; disjoint across units.
+        let ctx_row = SendPtr(unsafe { cp.0.add(r * d) });
+        attention_decode_head(
             pos,
-            h,
+            d,
             hd,
+            hh * hd,
             &q[r * d..(r + 1) * d],
             &kcache[r * cap * d..(r + 1) * cap * d],
             &vcache[r * cap * d..(r + 1) * cap * d],
-            crow,
+            ctx_row,
+            scores,
+            isa,
         );
-    });
+    };
+    head_parallel(rows * h, rows * (pos + 1) * d, &run_unit);
 }
 
-/// One row of decode attention (`q` `[d]`, caches `[cap, d]`, `ctx` `[d]`).
-/// Same online-softmax arithmetic (and scalar order) as the full-window
-/// kernel at position `pos`, so session logits match full-forward decode.
-fn attention_decode_row(
-    cap: usize,
+/// One (row, head) unit of decode attention (`q` `[d]`, caches `[cap, d]`).
+/// Replays [`attention_forward_head`]'s per-lane arithmetic at position
+/// `pos` exactly, so session logits match full-forward decode bit-for-bit.
+fn attention_decode_head(
     pos: usize,
-    h: usize,
+    d: usize,
     hd: usize,
+    col: usize,
     q: &[f32],
     kc: &[f32],
     vc: &[f32],
-    ctx: &mut [f32],
+    ctx: SendPtr,
+    scores: &mut Vec<f32>,
+    isa: KernelIsa,
 ) {
-    debug_assert!(pos < cap);
-    let d = h * hd;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut scores: Vec<f32> = Vec::with_capacity(pos + 1);
-    for hh in 0..h {
-        let col = hh * hd;
-        let qrow = &q[col..col + hd];
-        let mut mx = f32::NEG_INFINITY;
-        scores.clear();
-        for j in 0..=pos {
-            let krow = &kc[j * d + col..j * d + col + hd];
-            let mut acc = 0.0f32;
-            for t in 0..hd {
-                acc += qrow[t] * krow[t];
-            }
-            let sc = acc * scale;
-            mx = mx.max(sc);
-            scores.push(sc);
-        }
-        let mut denom = 0.0f32;
-        for sc in scores.iter_mut() {
-            *sc = (*sc - mx).exp();
-            denom += *sc;
-        }
-        let crow = &mut ctx[col..col + hd];
-        for j in 0..=pos {
-            let pj = scores[j] / denom;
-            let vrow = &vc[j * d + col..j * d + col + hd];
-            for t in 0..hd {
-                crow[t] += pj * vrow[t];
-            }
-        }
+    let qrow = &q[col..col + hd];
+    scores.resize(pos + 1, 0.0);
+    for j in 0..=pos {
+        scores[j] = dot_lanes(qrow, &kc[j * d + col..j * d + col + hd], isa) * scale;
+    }
+    let mx = max_lanes(scores, isa);
+    let denom = exp_denom_lanes(scores, mx);
+    div_all(scores, denom, isa);
+    // SAFETY: see `attention_decode_step` — this unit owns this stripe.
+    let crow = unsafe { std::slice::from_raw_parts_mut(ctx.0.add(col), hd) };
+    crow.fill(0.0);
+    for j in 0..=pos {
+        axpy(crow, &vc[j * d + col..j * d + col + hd], scores[j], isa);
     }
 }
 
@@ -2088,5 +2550,79 @@ mod tests {
         assert_eq!(y, layernorm_rows(&x, &scale, &bias, rows, d));
         assert_eq!(mean.len(), rows);
         assert!(inv.iter().all(|&v| v > 0.0));
+    }
+
+    /// The forward/decode head kernels claim to fully overwrite `probs` and
+    /// `ctx` — prove it by running once from zeroed buffers and once from
+    /// NaN-poisoned ones (a leftover NaN would fail the bitwise compare).
+    #[test]
+    fn attention_fully_overwrites_output_buffers() {
+        let mut rng = Pcg64::from_seed(21);
+        let (b, s, h, hd) = (2, 7, 3, 5);
+        let d = h * hd;
+        let q = randv(&mut rng, b * s * d);
+        let k = randv(&mut rng, b * s * d);
+        let v = randv(&mut rng, b * s * d);
+        let mut probs = vec![0.0f32; b * h * s * s];
+        let mut ctx = vec![0.0f32; b * s * d];
+        attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+        let mut probs_g = vec![f32::NAN; b * h * s * s];
+        let mut ctx_g = vec![f32::NAN; b * s * d];
+        attention_forward(b, s, h, hd, &q, &k, &v, &mut probs_g, &mut ctx_g);
+        assert_eq!(probs, probs_g, "probs must be fully overwritten");
+        assert_eq!(ctx, ctx_g, "ctx must be fully overwritten");
+
+        let pos = s - 1;
+        let mut qlast = vec![0.0f32; b * d];
+        for r in 0..b {
+            qlast[r * d..(r + 1) * d]
+                .copy_from_slice(&q[(r * s + pos) * d..(r * s + pos + 1) * d]);
+        }
+        let mut step = vec![0.0f32; b * d];
+        attention_decode_step(b, s, pos, h, hd, &qlast, &k, &v, &mut step);
+        let mut step_g = vec![f32::NAN; b * d];
+        attention_decode_step(b, s, pos, h, hd, &qlast, &k, &v, &mut step_g);
+        assert_eq!(step, step_g, "decode ctx must be fully overwritten");
+    }
+
+    /// Scalar twin vs AVX2 twin, bit-for-bit, on every lane-shaped kernel:
+    /// attention forward/backward/decode and LayerNorm, at a ragged shape
+    /// whose `hd` and window lengths straddle the 8-lane width.
+    #[test]
+    fn attention_and_layernorm_scalar_vs_simd_bit_identical() {
+        let _g = serial_guard();
+        if !simd_available() {
+            eprintln!("skipping attention scalar-vs-SIMD bit-equality: no AVX2 on this host");
+            return;
+        }
+        let mut rng = Pcg64::from_seed(22);
+        let (b, s, h, hd) = (2, 13, 3, 11);
+        let d = h * hd;
+        let q = randv(&mut rng, b * s * d);
+        let k = randv(&mut rng, b * s * d);
+        let v = randv(&mut rng, b * s * d);
+        let dctx = randv(&mut rng, b * s * d);
+        let lsc = randv(&mut rng, d);
+        let lbs = randv(&mut rng, d);
+        let mut results: Vec<Vec<Vec<f32>>> = Vec::new();
+        for isa in [KernelIsa::Scalar, KernelIsa::Avx2] {
+            set_kernel_override(Some(isa));
+            let mut probs = vec![0.0f32; b * h * s * s];
+            let mut ctx = vec![0.0f32; b * s * d];
+            attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+            let mut dq = vec![0.0f32; b * s * d];
+            let mut dk = vec![0.0f32; b * s * d];
+            let mut dv = vec![0.0f32; b * s * d];
+            attention_backward(b, s, h, hd, &probs, &q, &k, &v, &dctx, &mut dq, &mut dk, &mut dv);
+            let mut step = vec![0.0f32; b * d];
+            attention_decode_step(b, s, s - 1, h, hd, &q[..b * d], &k, &v, &mut step);
+            let (ln_y, ln_m, ln_i) = layernorm_stats(&q, &lsc, &lbs, b * s, d);
+            results.push(vec![probs, ctx, dq, dk, dv, step, ln_y, ln_m, ln_i]);
+        }
+        set_kernel_override(None);
+        let names = ["probs", "ctx", "dq", "dk", "dv", "decode ctx", "ln y", "ln mean", "ln inv"];
+        for (vi, name) in names.iter().enumerate() {
+            assert_eq!(results[0][vi], results[1][vi], "{name} diverged between scalar and SIMD");
+        }
     }
 }

@@ -313,7 +313,8 @@ impl NativeDecodeSession {
                     vc[at..at + d].copy_from_slice(&vnew[r * d..(r + 1) * d]);
                 }
             }
-            kernels::reset(ctx, rows * d);
+            // The decode kernel fully overwrites ctx; no zero sweep needed.
+            ctx.resize(rows * d, 0.0);
             kernels::attention_decode_step(
                 rows,
                 cap,

@@ -346,9 +346,10 @@ pub fn forward_into(
             d,
         );
 
-        // Causal multi-head attention (row-parallel kernel).
-        kernels::reset(&mut lc.probs, b * h * s * s);
-        kernels::reset(&mut lc.ctx, rows * d);
+        // Causal multi-head attention (head-parallel kernel; it fully
+        // overwrites probs and ctx, so a plain resize suffices).
+        lc.probs.resize(b * h * s * s, 0.0);
+        lc.ctx.resize(rows * d, 0.0);
         attention_forward(b, s, h, hd, &lc.q, &lc.k, &lc.v, &mut lc.probs, &mut lc.ctx);
         matmul_into(tmp, &lc.ctx, p[base + L_WO], rows, d, d);
         for j in 0..rows * d {

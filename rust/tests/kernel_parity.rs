@@ -1,15 +1,18 @@
-//! Property tests pinning the blocked GEMM kernels against a naive f64
-//! reference, and the determinism contract: results are bit-identical
-//! across `set_force_serial` on/off and scalar-vs-SIMD register tiles
-//! in-process, and across `A3PO_THREADS=1` vs `A3PO_THREADS=4` and
-//! `A3PO_KERNEL=scalar|simd` vs default out-of-process (the pool and the
-//! ISA choice are both read once at startup, so the cross-process checks
-//! re-run this test binary as a child with the variable set).
+//! Property tests pinning the blocked GEMM kernels and the lane-shaped
+//! attention/LayerNorm kernels against naive f64 references, and the
+//! determinism contract: results are bit-identical across
+//! `set_force_serial` on/off, scalar-vs-SIMD register tiles, and
+//! batch-sliced vs (batch × head)-parallel attention in-process, and across
+//! `A3PO_THREADS=1` vs `A3PO_THREADS=4` and `A3PO_KERNEL=scalar|simd` vs
+//! default out-of-process (the pool and the ISA choice are both read once
+//! at startup, so the cross-process checks re-run this test binary as a
+//! child with the variable set).
 
 use std::sync::Mutex;
 
 use a3po::runtime::native::kernels::{
-    self, kernel_info, matmul, matmul_a_bt_acc, matmul_acc, matmul_at_b_acc, matmul_at_b_acc_multi,
+    self, attention_backward, attention_decode_step, attention_forward, kernel_info,
+    layernorm_stats, matmul, matmul_a_bt_acc, matmul_acc, matmul_at_b_acc, matmul_at_b_acc_multi,
     matmul_set, matmul_set_bias_gelu, matmul_set_multi, matmul_set_packed_multi, set_force_serial,
     set_kernel_override, KernelIsa,
 };
@@ -288,12 +291,321 @@ fn multi_b_bit_identical_to_single_calls() {
 }
 
 // ---------------------------------------------------------------------------
+// Attention + LayerNorm parity (the lane-shaped non-GEMM kernels)
+
+/// Ragged attention shapes: `hd` and window lengths on both sides of the
+/// 8-lane width, head counts that do not divide anything evenly.
+fn attn_shapes() -> Vec<(usize, usize, usize, usize)> {
+    vec![
+        (1, 1, 1, 1),
+        (2, 5, 3, 7),
+        (1, 17, 2, 9),
+        (3, 8, 2, 12),
+        (2, 9, 1, 19),
+        (1, 23, 5, 8),
+        (2, 12, 4, 16),
+    ]
+}
+
+fn assert_close_at(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len());
+    for (idx, (x, y)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (x - y).abs() <= tol,
+            "{what} diverges from naive reference at {idx}: {x} vs {y}"
+        );
+    }
+}
+
+/// Naive f64 reference of causal multi-head attention forward. Uses the
+/// kernel's own f32 `1/sqrt(hd)` so the comparison measures accumulation
+/// error only.
+fn ref_attention_forward(
+    b: usize,
+    s: usize,
+    h: usize,
+    hd: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let d = h * hd;
+    let scale = (1.0 / (hd as f32).sqrt()) as f64;
+    let mut probs = vec![0.0f32; b * h * s * s];
+    let mut ctx = vec![0.0f32; b * s * d];
+    for bi in 0..b {
+        for hh in 0..h {
+            let col = hh * hd;
+            for i in 0..s {
+                let mut scores = vec![0.0f64; i + 1];
+                for (j, sc) in scores.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for t in 0..hd {
+                        acc += q[(bi * s + i) * d + col + t] as f64
+                            * k[(bi * s + j) * d + col + t] as f64;
+                    }
+                    *sc = acc * scale;
+                }
+                let mx = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mut denom = 0.0f64;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - mx).exp();
+                    denom += *sc;
+                }
+                for (j, sc) in scores.iter().enumerate() {
+                    probs[((bi * h + hh) * s + i) * s + j] = (sc / denom) as f32;
+                }
+                for t in 0..hd {
+                    let mut acc = 0.0f64;
+                    for (j, sc) in scores.iter().enumerate() {
+                        acc += sc / denom * v[(bi * s + j) * d + col + t] as f64;
+                    }
+                    ctx[(bi * s + i) * d + col + t] = acc as f32;
+                }
+            }
+        }
+    }
+    (probs, ctx)
+}
+
+/// Naive f64 reference of attention backward, reading the kernel-produced
+/// f32 `probs` (that is the kernel's own input contract).
+#[allow(clippy::too_many_arguments)]
+fn ref_attention_backward(
+    b: usize,
+    s: usize,
+    h: usize,
+    hd: usize,
+    probs: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dctx: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let d = h * hd;
+    let scale = (1.0 / (hd as f32).sqrt()) as f64;
+    let mut dq = vec![0.0f64; b * s * d];
+    let mut dk = vec![0.0f64; b * s * d];
+    let mut dv = vec![0.0f64; b * s * d];
+    for bi in 0..b {
+        for hh in 0..h {
+            let col = hh * hd;
+            for i in 0..s {
+                let pbase = ((bi * h + hh) * s + i) * s;
+                let mut dprobs = vec![0.0f64; i + 1];
+                let mut rowdot = 0.0f64;
+                for (j, dp) in dprobs.iter_mut().enumerate() {
+                    let pj = probs[pbase + j] as f64;
+                    let mut acc = 0.0f64;
+                    for t in 0..hd {
+                        acc += dctx[(bi * s + i) * d + col + t] as f64
+                            * v[(bi * s + j) * d + col + t] as f64;
+                    }
+                    *dp = acc;
+                    rowdot += acc * pj;
+                    for t in 0..hd {
+                        dv[(bi * s + j) * d + col + t] +=
+                            pj * dctx[(bi * s + i) * d + col + t] as f64;
+                    }
+                }
+                for (j, dp) in dprobs.iter().enumerate() {
+                    let pj = probs[pbase + j] as f64;
+                    let ds = pj * (dp - rowdot) * scale;
+                    for t in 0..hd {
+                        dq[(bi * s + i) * d + col + t] +=
+                            ds * k[(bi * s + j) * d + col + t] as f64;
+                        dk[(bi * s + j) * d + col + t] +=
+                            ds * q[(bi * s + i) * d + col + t] as f64;
+                    }
+                }
+            }
+        }
+    }
+    let down = |x: Vec<f64>| x.into_iter().map(|v| v as f32).collect::<Vec<f32>>();
+    (down(dq), down(dk), down(dv))
+}
+
+#[test]
+fn attention_forward_matches_naive_reference() {
+    let mut rng = Pcg64::from_seed(51);
+    for (b, s, h, hd) in attn_shapes() {
+        let d = h * hd;
+        let q = randv(&mut rng, b * s * d);
+        let k = randv(&mut rng, b * s * d);
+        let v = randv(&mut rng, b * s * d);
+        // NaN-poisoned outputs double as an overwrite check.
+        let mut probs = vec![f32::NAN; b * h * s * s];
+        let mut ctx = vec![f32::NAN; b * s * d];
+        attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+        let (rp, rc) = ref_attention_forward(b, s, h, hd, &q, &k, &v);
+        let what = format!("attention probs {:?}", (b, s, h, hd));
+        assert_close_at(&probs, &rp, 1e-5, &what);
+        let what = format!("attention ctx {:?}", (b, s, h, hd));
+        assert_close_at(&ctx, &rc, 1e-5, &what);
+    }
+}
+
+#[test]
+fn attention_backward_matches_naive_reference() {
+    let mut rng = Pcg64::from_seed(52);
+    for (b, s, h, hd) in attn_shapes() {
+        let d = h * hd;
+        let q = randv(&mut rng, b * s * d);
+        let k = randv(&mut rng, b * s * d);
+        let v = randv(&mut rng, b * s * d);
+        let dctx = randv(&mut rng, b * s * d);
+        let mut probs = vec![0.0f32; b * h * s * s];
+        let mut ctx = vec![0.0f32; b * s * d];
+        attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+        let mut dq = vec![0.0f32; b * s * d];
+        let mut dk = vec![0.0f32; b * s * d];
+        let mut dv = vec![0.0f32; b * s * d];
+        attention_backward(b, s, h, hd, &probs, &q, &k, &v, &dctx, &mut dq, &mut dk, &mut dv);
+        let (rq, rk, rv) = ref_attention_backward(b, s, h, hd, &probs, &q, &k, &v, &dctx);
+        for (got, want, name) in [(&dq, &rq, "dq"), (&dk, &rk, "dk"), (&dv, &rv, "dv")] {
+            let what = format!("attention {name} {:?}", (b, s, h, hd));
+            assert_close_at(got, want, 5e-5, &what);
+        }
+    }
+}
+
+/// Decode at the last position over the same caches must match the full
+/// window bit-for-bit (the decode head replays the forward head exactly).
+#[test]
+fn attention_decode_bit_identical_to_full_window() {
+    let mut rng = Pcg64::from_seed(53);
+    for (b, s, h, hd) in attn_shapes() {
+        let d = h * hd;
+        let q = randv(&mut rng, b * s * d);
+        let k = randv(&mut rng, b * s * d);
+        let v = randv(&mut rng, b * s * d);
+        let mut probs = vec![0.0f32; b * h * s * s];
+        let mut ctx = vec![0.0f32; b * s * d];
+        attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+        let pos = s - 1;
+        let mut qlast = vec![0.0f32; b * d];
+        for r in 0..b {
+            qlast[r * d..(r + 1) * d]
+                .copy_from_slice(&q[(r * s + pos) * d..(r * s + pos + 1) * d]);
+        }
+        let mut step = vec![f32::NAN; b * d];
+        attention_decode_step(b, s, pos, h, hd, &qlast, &k, &v, &mut step);
+        for r in 0..b {
+            assert_eq!(
+                &ctx[(r * s + pos) * d..(r * s + pos + 1) * d],
+                &step[r * d..(r + 1) * d],
+                "decode vs full window at {:?}",
+                (b, s, h, hd)
+            );
+        }
+    }
+}
+
+/// Scalar vs AVX2 twins, bit-for-bit, over the ragged shapes: attention
+/// forward/backward/decode and LayerNorm.
+#[test]
+fn attention_layernorm_scalar_vs_simd_bit_identical() {
+    let _g = serial_guard();
+    if !kernel_info().simd_available {
+        eprintln!("skipping attention scalar-vs-SIMD bit-equality: no AVX2 on this host");
+        return;
+    }
+    let mut rng = Pcg64::from_seed(54);
+    for (b, s, h, hd) in attn_shapes() {
+        let d = h * hd;
+        let q = randv(&mut rng, b * s * d);
+        let k = randv(&mut rng, b * s * d);
+        let v = randv(&mut rng, b * s * d);
+        let dctx = randv(&mut rng, b * s * d);
+        let lsc = randv(&mut rng, d);
+        let lbs = randv(&mut rng, d);
+        let mut results: Vec<Vec<Vec<f32>>> = Vec::new();
+        for isa in [KernelIsa::Scalar, KernelIsa::Avx2] {
+            set_kernel_override(Some(isa));
+            let mut probs = vec![0.0f32; b * h * s * s];
+            let mut ctx = vec![0.0f32; b * s * d];
+            attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+            let mut dq = vec![0.0f32; b * s * d];
+            let mut dk = vec![0.0f32; b * s * d];
+            let mut dv = vec![0.0f32; b * s * d];
+            attention_backward(b, s, h, hd, &probs, &q, &k, &v, &dctx, &mut dq, &mut dk, &mut dv);
+            let mut step = vec![0.0f32; b * d];
+            attention_decode_step(b, s, s - 1, h, hd, &q[..b * d], &k, &v, &mut step);
+            let (ln_y, ln_m, ln_i) = layernorm_stats(&q, &lsc, &lbs, b * s, d);
+            results.push(vec![probs, ctx, dq, dk, dv, step, ln_y, ln_m, ln_i]);
+        }
+        set_kernel_override(None);
+        let names = ["probs", "ctx", "dq", "dk", "dv", "decode ctx", "ln y", "ln mean", "ln inv"];
+        for (vi, name) in names.iter().enumerate() {
+            assert_eq!(
+                results[0][vi], results[1][vi],
+                "{name} at {:?} not bit-identical between scalar and SIMD",
+                (b, s, h, hd)
+            );
+        }
+    }
+}
+
+/// The (batch × head) grain can never change a result: head-parallel
+/// (threaded), forced-serial, and per-batch-row sliced calls (the old
+/// batch grain) must agree bit-for-bit.
+#[test]
+fn attention_bit_identical_across_grains() {
+    let _g = serial_guard();
+    // Big enough that b*h*s*s*hd crosses the parallel work threshold.
+    let (b, s, h, hd) = (4, 24, 4, 16);
+    let d = h * hd;
+    let mut rng = Pcg64::from_seed(55);
+    let q = randv(&mut rng, b * s * d);
+    let k = randv(&mut rng, b * s * d);
+    let v = randv(&mut rng, b * s * d);
+    let dctx = randv(&mut rng, b * s * d);
+
+    let run = |serial: bool| {
+        set_force_serial(serial);
+        let mut probs = vec![0.0f32; b * h * s * s];
+        let mut ctx = vec![0.0f32; b * s * d];
+        attention_forward(b, s, h, hd, &q, &k, &v, &mut probs, &mut ctx);
+        let mut dq = vec![0.0f32; b * s * d];
+        let mut dk = vec![0.0f32; b * s * d];
+        let mut dv = vec![0.0f32; b * s * d];
+        attention_backward(b, s, h, hd, &probs, &q, &k, &v, &dctx, &mut dq, &mut dk, &mut dv);
+        set_force_serial(false);
+        (probs, ctx, dq, dk, dv)
+    };
+    let threaded = run(false);
+    let serial = run(true);
+    assert_eq!(threaded, serial, "attention not bit-identical across serial vs head-parallel");
+
+    // Batch-sliced calls: one call per batch row, each below the parallel
+    // threshold — the old batch-parallel partition.
+    let mut probs1 = vec![0.0f32; b * h * s * s];
+    let mut ctx1 = vec![0.0f32; b * s * d];
+    for bi in 0..b {
+        attention_forward(
+            1,
+            s,
+            h,
+            hd,
+            &q[bi * s * d..(bi + 1) * s * d],
+            &k[bi * s * d..(bi + 1) * s * d],
+            &v[bi * s * d..(bi + 1) * s * d],
+            &mut probs1[bi * h * s * s..(bi + 1) * h * s * s],
+            &mut ctx1[bi * s * d..(bi + 1) * s * d],
+        );
+    }
+    assert_eq!(threaded.0, probs1, "batch-sliced probs diverged from head-parallel");
+    assert_eq!(threaded.1, ctx1, "batch-sliced ctx diverged from head-parallel");
+}
+
+// ---------------------------------------------------------------------------
 // Cross-process bit-equality: the pool sizes itself from A3PO_THREADS once
 // at first use, so different thread counts need separate processes.
 
 /// FNV-1a over the raw bit patterns of every result the kernel suite
-/// produces — any accumulation-order difference changes this value.
-fn gemm_checksum() -> u64 {
+/// produces — GEMMs, attention forward/backward/decode, and LayerNorm —
+/// so any accumulation-order difference on any kernel changes this value.
+fn kernel_checksum() -> u64 {
     const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h = FNV_OFFSET;
@@ -346,6 +658,36 @@ fn gemm_checksum() -> u64 {
         fold(&g1);
         fold(&g2);
     }
+    // Attention + LayerNorm (the lane-shaped kernels): one shape above the
+    // parallel work cutoff and one ragged serial one.
+    for (b, s, hh, hd) in [(4usize, 24usize, 4usize, 16usize), (2, 9, 3, 7)] {
+        let d = hh * hd;
+        let q = randv(&mut rng, b * s * d);
+        let k = randv(&mut rng, b * s * d);
+        let v = randv(&mut rng, b * s * d);
+        let dctx = randv(&mut rng, b * s * d);
+        let mut probs = vec![0.0f32; b * hh * s * s];
+        let mut ctx = vec![0.0f32; b * s * d];
+        attention_forward(b, s, hh, hd, &q, &k, &v, &mut probs, &mut ctx);
+        fold(&probs);
+        fold(&ctx);
+        let mut dq = vec![0.0f32; b * s * d];
+        let mut dk = vec![0.0f32; b * s * d];
+        let mut dv = vec![0.0f32; b * s * d];
+        attention_backward(b, s, hh, hd, &probs, &q, &k, &v, &dctx, &mut dq, &mut dk, &mut dv);
+        fold(&dq);
+        fold(&dk);
+        fold(&dv);
+        let mut step = vec![0.0f32; b * d];
+        attention_decode_step(b, s, s - 1, hh, hd, &q[..b * d], &k, &v, &mut step);
+        fold(&step);
+        let lsc = randv(&mut rng, d);
+        let lbs = randv(&mut rng, d);
+        let (ln_y, ln_m, ln_i) = layernorm_stats(&q, &lsc, &lbs, b * s, d);
+        fold(&ln_y);
+        fold(&ln_m);
+        fold(&ln_i);
+    }
     h
 }
 
@@ -353,10 +695,10 @@ fn gemm_checksum() -> u64 {
 /// cross-thread-count test below scrapes from a child process. Running it
 /// standalone is harmless.
 #[test]
-fn helper_gemm_checksum_print() {
+fn helper_kernel_checksum_print() {
     let _g = serial_guard();
     set_force_serial(false);
-    println!("GEMM_CHECKSUM={:016x}", gemm_checksum());
+    println!("KERNEL_CHECKSUM={:016x}", kernel_checksum());
 }
 
 #[test]
@@ -364,7 +706,7 @@ fn bit_identical_across_a3po_threads_1_vs_4() {
     let exe = std::env::current_exe().expect("test binary path");
     let run_child = |threads: &str| -> u64 {
         let out = std::process::Command::new(&exe)
-            .args(["helper_gemm_checksum_print", "--exact", "--nocapture", "--test-threads=1"])
+            .args(["helper_kernel_checksum_print", "--exact", "--nocapture", "--test-threads=1"])
             .env("A3PO_THREADS", threads)
             .output()
             .expect("spawning checksum child");
@@ -378,21 +720,21 @@ fn bit_identical_across_a3po_threads_1_vs_4() {
             .lines()
             .find_map(|l| {
                 l.trim()
-                    .strip_prefix("GEMM_CHECKSUM=")
+                    .strip_prefix("KERNEL_CHECKSUM=")
                     .and_then(|hex| u64::from_str_radix(hex, 16).ok())
             })
-            .unwrap_or_else(|| panic!("no GEMM_CHECKSUM marker in child output:\n{stdout}"))
+            .unwrap_or_else(|| panic!("no KERNEL_CHECKSUM marker in child output:\n{stdout}"))
     };
     let c1 = run_child("1");
     let c4 = run_child("4");
-    assert_eq!(c1, c4, "GEMM results differ between A3PO_THREADS=1 and A3PO_THREADS=4");
+    assert_eq!(c1, c4, "kernel results differ between A3PO_THREADS=1 and A3PO_THREADS=4");
     // And the ambient-threaded parent process agrees with both.
     let local = {
         let _g = serial_guard();
         set_force_serial(false);
-        gemm_checksum()
+        kernel_checksum()
     };
-    assert_eq!(local, c1, "parent-process GEMM results differ from A3PO_THREADS=1 child");
+    assert_eq!(local, c1, "parent-process kernel results differ from A3PO_THREADS=1 child");
 }
 
 /// `A3PO_KERNEL` is read once per process, so the scalar-vs-default (and
@@ -404,7 +746,7 @@ fn bit_identical_across_kernel_paths() {
     let exe = std::env::current_exe().expect("test binary path");
     let run_child = |kernel: Option<&str>| -> u64 {
         let mut cmd = std::process::Command::new(&exe);
-        cmd.args(["helper_gemm_checksum_print", "--exact", "--nocapture", "--test-threads=1"]);
+        cmd.args(["helper_kernel_checksum_print", "--exact", "--nocapture", "--test-threads=1"]);
         match kernel {
             // The parent may itself run under A3PO_KERNEL (the CI scalar
             // matrix), so the "default" child must clear it explicitly.
@@ -422,20 +764,20 @@ fn bit_identical_across_kernel_paths() {
             .lines()
             .find_map(|l| {
                 l.trim()
-                    .strip_prefix("GEMM_CHECKSUM=")
+                    .strip_prefix("KERNEL_CHECKSUM=")
                     .and_then(|hex| u64::from_str_radix(hex, 16).ok())
             })
-            .unwrap_or_else(|| panic!("no GEMM_CHECKSUM marker in child output:\n{stdout}"))
+            .unwrap_or_else(|| panic!("no KERNEL_CHECKSUM marker in child output:\n{stdout}"))
     };
     let scalar = run_child(Some("scalar"));
     let default = run_child(None);
     let simd = run_child(Some("simd"));
     assert_eq!(
         scalar, default,
-        "GEMM results differ between A3PO_KERNEL=scalar and the auto-detected tile"
+        "kernel results differ between A3PO_KERNEL=scalar and the auto-detected tile"
     );
     assert_eq!(
         simd, default,
-        "GEMM results differ between A3PO_KERNEL=simd and the auto-detected tile"
+        "kernel results differ between A3PO_KERNEL=simd and the auto-detected tile"
     );
 }
