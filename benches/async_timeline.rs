@@ -1,0 +1,229 @@
+//! Async-pipeline timeline: generation/training overlap and trainer
+//! starvation for all three methods, reconstructed from the Chrome traces
+//! the runs emit.
+//!
+//! The paper's speedup claim is that async methods hide generation behind
+//! training. This bench makes that visible: each method runs with tracing
+//! on, then the trace is parsed back and the wall-clock overlap between
+//! `generate` spans (rollout workers, or the trainer inline for sync) and
+//! `train`/`prox` spans (trainer) is measured as a fraction of trainer busy
+//! time. Sync is the control: its generation and training alternate on one
+//! thread, so its overlap is ~0 by construction.
+//!
+//! Emits `BENCH_timeline.json` plus one Perfetto-loadable trace per method
+//! under `<out>/trace/`. Doubles as trace validation in CI: the bench
+//! fails if a trace does not parse, if an async trace has spans from fewer
+//! than 3 threads, or if the buffer accounting identity breaks.
+//!
+//!   cargo bench --bench async_timeline -- --steps 6 --workers 2
+//!   cargo bench --bench async_timeline -- --preset tiny --out runs/bench
+
+use std::path::PathBuf;
+
+use a3po::bench::{kernel_info_json, write_bench_json};
+use a3po::config::{Method, RunOptions, StalenessPolicy};
+use a3po::coordinator;
+use a3po::util::cli::Args;
+use a3po::util::json::Json;
+
+/// Merge `(start, end)` microsecond intervals into a disjoint sorted union.
+fn union(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    for (s, e) in iv {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+fn total_len(iv: &[(f64, f64)]) -> f64 {
+    iv.iter().map(|(s, e)| e - s).sum()
+}
+
+/// Length of the intersection of two disjoint sorted interval unions.
+fn intersect_len(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let (mut i, mut j, mut acc) = (0usize, 0usize, 0.0f64);
+    while i < a.len() && j < b.len() {
+        let s = a[i].0.max(b[j].0);
+        let e = a[i].1.min(b[j].1);
+        if e > s {
+            acc += e - s;
+        }
+        if a[i].1 < b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    acc
+}
+
+/// All complete spans with one of `names`, as `(start_us, end_us)`.
+fn spans_named(trace: &Json, names: &[&str]) -> Vec<(f64, f64)> {
+    trace
+        .get("traceEvents")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("X"))
+        .filter(|e| names.contains(&e.get("name").as_str().unwrap_or("")))
+        .map(|e| {
+            let ts = e.get("ts").as_f64().unwrap_or(0.0);
+            (ts, ts + e.get("dur").as_f64().unwrap_or(0.0))
+        })
+        .collect()
+}
+
+fn distinct_span_tids(trace: &Json) -> usize {
+    trace
+        .get("traceEvents")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("X"))
+        .filter_map(|e| e.get("tid").as_i64())
+        .collect::<std::collections::BTreeSet<i64>>()
+        .len()
+}
+
+fn main() -> anyhow::Result<()> {
+    let parsed = Args::new(
+        "async_timeline",
+        "generation/training overlap + trainer starvation from Chrome traces",
+    )
+    .opt("preset", "tiny", "artifact preset")
+    .opt("steps", "6", "RL steps per method")
+    .opt("workers", "2", "rollout workers (async methods)")
+    .opt("seed", "0", "run seed")
+    .opt("out", "runs/bench", "output directory (traces land in <out>/trace/)")
+    .flag("bench", "(ignored; passed by cargo bench)")
+    .parse();
+    let preset = parsed.string("preset");
+    let steps = parsed.u64("steps");
+    let workers = parsed.usize("workers");
+    let seed = parsed.u64("seed");
+    let out_dir = parsed.string("out");
+
+    std::env::set_var("A3PO_QUIET", "1");
+    let mut rows: Vec<Json> = Vec::new();
+    println!("\n== Async-pipeline timeline ({preset}, {steps} steps) ==\n");
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>10} {:>8}",
+        "Method", "total(s)", "overlap", "starvation", "drops", "d_p95"
+    );
+
+    for method in Method::ALL {
+        let trace_path = PathBuf::from(&out_dir)
+            .join("trace")
+            .join(format!("trace_{}.json", method.label()));
+        let opts = RunOptions {
+            preset: preset.clone(),
+            out_dir: out_dir.clone(),
+            method,
+            steps,
+            pretrain_steps: 0,
+            workers,
+            eval_every: 0,
+            eval_prompts: 16,
+            seed,
+            staleness: StalenessPolicy { max_staleness: 16, max_buffered: 256 },
+            trace_path: Some(trace_path.to_str().unwrap().into()),
+            ..Default::default()
+        };
+        let out = coordinator::run(&opts)?;
+        let tel = &out.telemetry;
+
+        // Parse the trace back: this IS the CI validation of the exporter.
+        let text = std::fs::read_to_string(&trace_path)?;
+        let trace = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("trace {} unparseable: {e}", trace_path.display()))?;
+
+        let generation = union(spans_named(&trace, &["generate"]));
+        let training = union(spans_named(&trace, &["train", "prox"]));
+        let train_total = total_len(&training);
+        let overlap_frac = if train_total > 0.0 {
+            intersect_len(&generation, &training) / train_total
+        } else {
+            0.0
+        };
+
+        assert!(
+            tel.buffer.accounting_consistent(),
+            "{}: pushed {} != popped {} + dropped {} + remaining {}",
+            method.label(),
+            tel.buffer.pushed_groups,
+            tel.buffer.popped_groups,
+            tel.buffer.dropped_stale_groups,
+            tel.buffer.remaining_groups
+        );
+        if method.is_async() {
+            assert!(
+                distinct_span_tids(&trace) >= 3,
+                "{}: async trace needs trainer + >=2 worker threads",
+                method.label()
+            );
+            assert!(
+                overlap_frac > 0.0,
+                "{}: async generation must overlap training",
+                method.label()
+            );
+            // Starvation is the wait phase over the loop wall clock; the
+            // blocked condvar time the buffer saw can't exceed that wait.
+            assert!(
+                tel.buffer.pop_wait_secs <= tel.trainer_wait_secs + 0.05,
+                "{}: buffer pop wait {}s exceeds trainer wait {}s",
+                method.label(),
+                tel.buffer.pop_wait_secs,
+                tel.trainer_wait_secs
+            );
+        }
+
+        println!(
+            "{:<12} {:>10.2} {:>11.1}% {:>11.1}% {:>10} {:>8.1}",
+            method.label(),
+            out.total_secs,
+            overlap_frac * 100.0,
+            tel.trainer_starvation_frac() * 100.0,
+            tel.buffer.dropped_stale_groups,
+            tel.staleness.percentile(95.0),
+        );
+
+        rows.push(Json::obj(vec![
+            ("method", Json::Str(method.label().into())),
+            ("total_secs", Json::Num(out.total_secs)),
+            ("final_eval", Json::Num(out.final_eval)),
+            ("overlap_fraction", Json::Num(overlap_frac)),
+            ("generation_union_secs", Json::Num(total_len(&generation) / 1e6)),
+            ("training_union_secs", Json::Num(train_total / 1e6)),
+            ("trainer_wait_secs", Json::Num(tel.trainer_wait_secs)),
+            ("trainer_starvation_frac", Json::Num(tel.trainer_starvation_frac())),
+            ("generation_secs", Json::Num(tel.generation_secs)),
+            (
+                "worker_utilisation",
+                Json::Arr(tel.workers.iter().map(|w| Json::Num(w.utilisation())).collect()),
+            ),
+            ("buffer", tel.buffer.to_json()),
+            ("staleness_p50", Json::Num(tel.staleness.percentile(50.0))),
+            ("staleness_p95", Json::Num(tel.staleness.percentile(95.0))),
+            ("staleness_max", Json::Num(tel.staleness.max() as f64)),
+            ("trace_path", Json::Str(trace_path.to_str().unwrap().into())),
+        ]));
+    }
+
+    println!("\nexpected shape: async overlap > 0 (generation hides behind training);");
+    println!("sync overlap ~ 0 (alternating phases on one thread).");
+
+    let j = Json::obj(vec![
+        ("bench", Json::Str("async_timeline".into())),
+        ("preset", Json::Str(preset)),
+        ("steps", Json::Num(steps as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("kernel", kernel_info_json()),
+        ("methods", Json::Arr(rows)),
+    ]);
+    write_bench_json(&PathBuf::from("BENCH_timeline.json"), &j)?;
+    Ok(())
+}

@@ -11,13 +11,24 @@
 //! * `push_group` applies backpressure: rollout workers block while the
 //!   buffer holds `max_buffered` or more episodes, so generation can never
 //!   run unboundedly ahead of training.
+//!
+//! The buffer also carries the pipeline's occupancy telemetry: a cached
+//! episode count (O(1) backpressure checks instead of a deque rescan under
+//! the lock), a decimated occupancy time series with a high-water mark, and
+//! blocked-wait accounting on both sides (`push_wait_ns`/`pop_wait_ns`),
+//! surfaced through [`EpisodeBuffer::telemetry`] and, when tracing is on,
+//! as `buffer_push_wait`/`buffer_pop_wait` spans plus a `buffer_episodes`
+//! counter track.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
 
 use crate::config::StalenessPolicy;
 use crate::env::Problem;
+use crate::trace;
+use crate::trace::report::BufferTelemetry;
 
 /// One generated response with everything the trainer needs.
 #[derive(Debug, Clone)]
@@ -54,53 +65,140 @@ pub struct BufferStats {
     pub pushed_groups: AtomicU64,
     pub popped_groups: AtomicU64,
     pub dropped_stale_groups: AtomicU64,
+    /// Total nanoseconds rollout workers spent blocked on backpressure in
+    /// `push_group`.
+    pub push_wait_ns: AtomicU64,
+    /// Total nanoseconds the trainer spent blocked in `pop_groups`.
+    pub pop_wait_ns: AtomicU64,
+    /// Max episodes ever simultaneously buffered.
+    pub high_water_episodes: AtomicU64,
+}
+
+/// Occupancy-series length cap; on overflow every other sample is dropped
+/// and the sampling stride doubles, so memory stays bounded on long runs.
+const OCCUPANCY_CAP: usize = 4096;
+
+#[derive(Debug)]
+struct Inner {
+    q: VecDeque<Vec<Episode>>,
+    /// Cached `sum of group lens` — kept in sync on push/pop/drop/restore
+    /// so backpressure checks and occupancy sampling are O(1).
+    episodes: usize,
+    /// Decimated `(secs since buffer creation, buffered episodes)` series.
+    series: Vec<(f64, u64)>,
+    /// Record every `stride`-th occupancy change once the series fills.
+    stride: u64,
+    ticks: u64,
+}
+
+impl Inner {
+    fn new() -> Inner {
+        Inner { q: VecDeque::new(), episodes: 0, series: Vec::new(), stride: 1, ticks: 0 }
+    }
+
+    fn debug_check(&self) {
+        debug_assert_eq!(
+            self.episodes,
+            self.q.iter().map(|g| g.len()).sum::<usize>(),
+            "cached episode count drifted from deque contents"
+        );
+    }
+
+    fn sample_occupancy(&mut self, t_secs: f64) {
+        self.ticks += 1;
+        if self.ticks % self.stride != 0 {
+            return;
+        }
+        if self.series.len() >= OCCUPANCY_CAP {
+            let mut keep = false;
+            self.series.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            self.stride = self.stride.saturating_mul(2);
+        }
+        self.series.push((t_secs, self.episodes as u64));
+    }
 }
 
 #[derive(Debug)]
 pub struct EpisodeBuffer {
-    inner: Mutex<VecDeque<Vec<Episode>>>,
+    inner: Mutex<Inner>,
     /// Signalled when groups are added or space frees up or shutdown.
     cond: Condvar,
     policy: StalenessPolicy,
     shutdown: AtomicBool,
+    /// Creation time; occupancy samples are relative to this.
+    born: Instant,
     pub stats: BufferStats,
 }
 
 impl EpisodeBuffer {
     pub fn new(policy: StalenessPolicy) -> Self {
         EpisodeBuffer {
-            inner: Mutex::new(VecDeque::new()),
+            inner: Mutex::new(Inner::new()),
             cond: Condvar::new(),
             policy,
             shutdown: AtomicBool::new(false),
+            born: Instant::now(),
             stats: BufferStats::default(),
         }
     }
 
     pub fn len_episodes(&self) -> usize {
-        self.inner.lock().unwrap().iter().map(|g| g.len()).sum()
+        self.inner.lock().unwrap().episodes
     }
 
     pub fn len_groups(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock().unwrap().q.len()
+    }
+
+    /// Record occupancy + high-water after a mutation (lock held by caller).
+    fn note_occupancy(&self, inner: &mut MutexGuard<'_, Inner>) {
+        inner.debug_check();
+        let n = inner.episodes as u64;
+        self.stats.high_water_episodes.fetch_max(n, Ordering::Relaxed);
+        let t = self.born.elapsed().as_secs_f64();
+        inner.sample_occupancy(t);
+        trace::counter("buffer_episodes", n as f64);
+    }
+
+    /// Account a blocked wait that started at `since` (counter + span).
+    fn note_wait(&self, counter: &AtomicU64, since: Instant, span_name: &'static str) {
+        let waited = since.elapsed();
+        counter.fetch_add(waited.as_nanos() as u64, Ordering::Relaxed);
+        if trace::enabled() {
+            let end = trace::now_us();
+            trace::complete_span(span_name, "buffer", end - waited.as_secs_f64() * 1e6, end, None);
+        }
     }
 
     /// Blocks while the buffer is at capacity (backpressure). Returns false
     /// if the buffer is shut down (caller should exit).
     pub fn push_group(&self, group: Vec<Episode>) -> bool {
         assert!(!group.is_empty());
+        let entered = Instant::now();
+        let mut blocked = false;
         let mut q = self.inner.lock().unwrap();
         loop {
             if self.shutdown.load(Ordering::Acquire) {
+                if blocked {
+                    self.note_wait(&self.stats.push_wait_ns, entered, "buffer_push_wait");
+                }
                 return false;
             }
-            let buffered: usize = q.iter().map(|g| g.len()).sum();
-            if buffered < self.policy.max_buffered {
+            if q.episodes < self.policy.max_buffered {
                 break;
             }
+            blocked = true;
             q = self.cond.wait(q).unwrap_or_else(|e| e.into_inner());
         }
-        q.push_back(group);
+        if blocked {
+            self.note_wait(&self.stats.push_wait_ns, entered, "buffer_push_wait");
+        }
+        q.episodes += group.len();
+        q.q.push_back(group);
+        self.note_occupancy(&mut q);
         self.stats.pushed_groups.fetch_add(1, Ordering::Relaxed);
         self.cond.notify_all();
         true
@@ -108,16 +206,22 @@ impl EpisodeBuffer {
 
     /// Pop `n` admissible groups, blocking until available. Groups staler
     /// than the policy allows (relative to `v_now`) are discarded and
-    /// counted. Returns None on shutdown.
+    /// counted. Returns None on shutdown (restoring any partially drained
+    /// groups so shutdown-time accounting still balances).
     pub fn pop_groups(&self, n: usize, v_now: u64) -> Option<Vec<Vec<Episode>>> {
+        let entered = Instant::now();
+        let mut blocked = false;
         let mut out = Vec::with_capacity(n);
         let mut q = self.inner.lock().unwrap();
         loop {
             // Drain admissible groups from the front.
+            let mut mutated = false;
             while out.len() < n {
-                match q.pop_front() {
+                match q.q.pop_front() {
                     None => break,
                     Some(g) => {
+                        q.episodes -= g.len();
+                        mutated = true;
                         let d = g[0].staleness(v_now);
                         if d > self.policy.max_staleness {
                             self.stats.dropped_stale_groups.fetch_add(1, Ordering::Relaxed);
@@ -129,14 +233,31 @@ impl EpisodeBuffer {
                     }
                 }
             }
+            if mutated {
+                self.note_occupancy(&mut q);
+            }
             if out.len() == n {
                 self.stats.popped_groups.fetch_add(n as u64, Ordering::Relaxed);
                 self.cond.notify_all();
+                if blocked {
+                    self.note_wait(&self.stats.pop_wait_ns, entered, "buffer_pop_wait");
+                }
                 return Some(out);
             }
             if self.shutdown.load(Ordering::Acquire) {
+                // Put partial results back (front, preserving order) so the
+                // pushed == popped + dropped + remaining identity holds.
+                for g in out.into_iter().rev() {
+                    q.episodes += g.len();
+                    q.q.push_front(g);
+                }
+                q.debug_check();
+                if blocked {
+                    self.note_wait(&self.stats.pop_wait_ns, entered, "buffer_pop_wait");
+                }
                 return None;
             }
+            blocked = true;
             q = self.cond.wait(q).unwrap_or_else(|e| e.into_inner());
         }
     }
@@ -145,10 +266,13 @@ impl EpisodeBuffer {
     pub fn try_pop_groups(&self, n: usize, v_now: u64) -> Option<Vec<Vec<Episode>>> {
         let mut out = Vec::with_capacity(n);
         let mut q = self.inner.lock().unwrap();
+        let mut mutated = false;
         while out.len() < n {
-            match q.pop_front() {
+            match q.q.pop_front() {
                 None => break,
                 Some(g) => {
+                    q.episodes -= g.len();
+                    mutated = true;
                     let d = g[0].staleness(v_now);
                     if d > self.policy.max_staleness {
                         self.stats.dropped_stale_groups.fetch_add(1, Ordering::Relaxed);
@@ -163,15 +287,38 @@ impl EpisodeBuffer {
             }
         }
         if out.len() == n {
+            if mutated {
+                self.note_occupancy(&mut q);
+            }
             self.stats.popped_groups.fetch_add(n as u64, Ordering::Relaxed);
             self.cond.notify_all();
             Some(out)
         } else {
             // Put partial results back (front, preserving order).
             for g in out.into_iter().rev() {
-                q.push_front(g);
+                q.episodes += g.len();
+                q.q.push_front(g);
+            }
+            if mutated {
+                // Stale drops may still have changed the count.
+                self.note_occupancy(&mut q);
             }
             None
+        }
+    }
+
+    /// Aggregate buffer telemetry snapshot (counters + occupancy series).
+    pub fn telemetry(&self) -> BufferTelemetry {
+        let inner = self.inner.lock().unwrap();
+        BufferTelemetry {
+            pushed_groups: self.stats.pushed_groups.load(Ordering::Relaxed),
+            popped_groups: self.stats.popped_groups.load(Ordering::Relaxed),
+            dropped_stale_groups: self.stats.dropped_stale_groups.load(Ordering::Relaxed),
+            remaining_groups: inner.q.len() as u64,
+            push_wait_secs: self.stats.push_wait_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            pop_wait_secs: self.stats.pop_wait_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            high_water_episodes: self.stats.high_water_episodes.load(Ordering::Relaxed),
+            occupancy: inner.series.clone(),
         }
     }
 
@@ -289,5 +436,62 @@ mod tests {
         assert_eq!(e.staleness(7), 0);
         assert_eq!(e.staleness(9), 2);
         assert_eq!(e.staleness(3), 0, "future versions clamp to 0");
+    }
+
+    #[test]
+    fn cached_episode_count_tracks_mutations() {
+        let b = buffer(2, 100);
+        b.push_group(vec![ep(0, 1), ep(0, 1)]);
+        b.push_group(vec![ep(0, 2)]);
+        assert_eq!(b.len_episodes(), 3);
+        // Failed try_pop restores the drained groups and the count.
+        assert!(b.try_pop_groups(3, 0).is_none());
+        assert_eq!(b.len_episodes(), 3);
+        // Stale drops at v=10 (staleness 10 > 2) reduce the count too.
+        b.push_group(vec![ep(10, 3)]);
+        let got = b.try_pop_groups(1, 10).unwrap();
+        assert_eq!(got[0][0].group, 3);
+        assert_eq!(b.len_episodes(), 0);
+        assert_eq!(b.stats.dropped_stale_groups.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn occupancy_and_high_water_populate() {
+        let b = buffer(10, 100);
+        b.push_group(vec![ep(0, 1), ep(0, 1)]);
+        b.push_group(vec![ep(0, 2)]);
+        b.try_pop_groups(2, 0).unwrap();
+        let t = b.telemetry();
+        assert_eq!(t.high_water_episodes, 3);
+        assert_eq!(t.occupancy.len(), 3, "one sample per mutation at stride 1");
+        assert_eq!(t.occupancy.last().unwrap().1, 0);
+        assert!(t.accounting_consistent());
+        assert_eq!(t.pushed_groups, 2);
+        assert_eq!(t.popped_groups, 2);
+    }
+
+    #[test]
+    fn push_wait_time_recorded_under_backpressure() {
+        let b = Arc::new(buffer(10, 1));
+        b.push_group(vec![ep(0, 1)]);
+        let b2 = b.clone();
+        let pusher = std::thread::spawn(move || b2.push_group(vec![ep(0, 2)]));
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        b.pop_groups(1, 0).unwrap();
+        assert!(pusher.join().unwrap());
+        let waited_ns = b.stats.push_wait_ns.load(Ordering::Relaxed);
+        assert!(waited_ns >= 10_000_000, "blocked push must account its wait, got {waited_ns}ns");
+        let pop_ns = b.stats.pop_wait_ns.load(Ordering::Relaxed);
+        assert_eq!(pop_ns, 0, "non-blocked pop records no wait");
+    }
+
+    #[test]
+    fn shutdown_restores_partially_drained_groups() {
+        let b = buffer(10, 100);
+        b.push_group(vec![ep(0, 1)]);
+        b.shutdown();
+        assert!(b.pop_groups(2, 0).is_none());
+        assert_eq!(b.len_groups(), 1, "partial blocking pop must restore on shutdown");
+        assert!(b.telemetry().accounting_consistent());
     }
 }

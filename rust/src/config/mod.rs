@@ -141,6 +141,9 @@ pub struct RunOptions {
     /// Start from this checkpoint (path base without .json/.bin) instead of
     /// fresh init — lets one warm start be shared across method runs.
     pub init_ckpt: Option<String>,
+    /// Write a Chrome-trace JSON of the run to this path (`--trace`; the
+    /// `A3PO_TRACE` env var is the fallback when unset). None = tracing off.
+    pub trace_path: Option<String>,
 }
 
 impl Default for RunOptions {
@@ -160,6 +163,7 @@ impl Default for RunOptions {
             seed: 0,
             inject_staleness: 0,
             init_ckpt: None,
+            trace_path: None,
         }
     }
 }
@@ -183,6 +187,7 @@ impl RunOptions {
             .opt("seed", "0", "run seed")
             .opt("inject-staleness", "0", "extra artificial version lag")
             .opt_optional("init-ckpt", "checkpoint base to warm-start from")
+            .opt_optional("trace", "write a Chrome-trace JSON of the run to this path")
     }
 
     pub fn from_parsed(p: &Parsed) -> Result<RunOptions, String> {
@@ -204,6 +209,7 @@ impl RunOptions {
             seed: p.u64("seed"),
             inject_staleness: p.u64("inject-staleness"),
             init_ckpt: p.get("init-ckpt").map(String::from),
+            trace_path: p.get("trace").map(String::from),
         })
     }
 
@@ -254,5 +260,15 @@ mod tests {
         assert_eq!(o.method, Method::Recompute);
         assert_eq!(o.steps, 7);
         assert_eq!(o.staleness.max_staleness, 3);
+        assert_eq!(o.trace_path, None);
+    }
+
+    #[test]
+    fn cli_trace_path() {
+        let p = RunOptions::cli("t", "")
+            .parse_from(["--trace", "runs/t.json"].iter().map(|s| s.to_string()))
+            .unwrap();
+        let o = RunOptions::from_parsed(&p).unwrap();
+        assert_eq!(o.trace_path.as_deref(), Some("runs/t.json"));
     }
 }

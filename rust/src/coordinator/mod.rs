@@ -26,8 +26,11 @@ use crate::metrics::{EvalRecord, MetricsLogger, StepRecord};
 use crate::rollout::{generate_batch, GroupIds, RolloutPool};
 use crate::runtime::{checkpoint, ParamSnapshot, Runtime, WeightStore};
 use crate::sampler::SamplerConfig;
+use crate::trace;
+use crate::trace::report::{StalenessHistogram, TelemetryReport};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
+use crate::util::stats;
 use crate::util::timer::{PhaseTimer, Stopwatch};
 
 pub use trainer::Trainer;
@@ -40,6 +43,9 @@ pub struct RunOutput {
     pub total_secs: f64,
     pub phases: PhaseTimer,
     pub dropped_stale_groups: u64,
+    /// Pipeline rollup: starvation, worker utilisation, buffer occupancy,
+    /// staleness distribution. Populated whether or not tracing was on.
+    pub telemetry: TelemetryReport,
     pub runtime: Runtime,
 }
 
@@ -58,7 +64,38 @@ impl RunOutput {
                 ),
             ),
             ("dropped_stale_groups", Json::Num(self.dropped_stale_groups as f64)),
+            ("trainer_wait_seconds", Json::Num(self.telemetry.trainer_wait_secs)),
+            ("trainer_starvation_frac", Json::Num(self.telemetry.trainer_starvation_frac())),
+            (
+                "buffer_high_water_episodes",
+                Json::Num(self.telemetry.buffer.high_water_episodes as f64),
+            ),
+            ("staleness_p50", Json::Num(self.telemetry.staleness.percentile(50.0))),
+            ("staleness_p95", Json::Num(self.telemetry.staleness.percentile(95.0))),
+            ("staleness_max", Json::Num(self.telemetry.staleness.max() as f64)),
         ])
+    }
+}
+
+/// Exports the Chrome trace when dropped, so the trace survives error paths
+/// too. `trace::stop()` drains the main thread plus everything the joined
+/// worker threads flushed on exit.
+struct TraceExport {
+    path: String,
+}
+
+impl Drop for TraceExport {
+    fn drop(&mut self) {
+        let data = trace::stop();
+        let n = data.events.len();
+        match data.write_chrome(std::path::Path::new(&self.path)) {
+            Ok(()) => {
+                if std::env::var_os("A3PO_QUIET").is_none() {
+                    eprintln!("[trace] wrote {n} events to {}", self.path);
+                }
+            }
+            Err(e) => eprintln!("[trace] export failed: {e}"),
+        }
     }
 }
 
@@ -86,6 +123,19 @@ pub fn run(opts: &RunOptions) -> Result<RunOutput> {
 /// Same as [`run`] but with a pre-loaded runtime (benches reuse one runtime
 /// across methods to avoid recompiling shared executables).
 pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput> {
+    // Tracing: `--trace <path>` / `RunOptions.trace_path` wins, `A3PO_TRACE`
+    // env var is the fallback. The guard exports the file when this function
+    // returns (the rollout pool is joined before then on every path).
+    let trace_dest = opts
+        .trace_path
+        .clone()
+        .or_else(|| std::env::var("A3PO_TRACE").ok())
+        .filter(|p| !p.is_empty());
+    let _trace_export = trace_dest.map(|path| {
+        trace::start();
+        TraceExport { path }
+    });
+
     let geo = runtime.manifest.preset.clone();
     let env: Arc<dyn env::TaskEnv> =
         env::env_for_preset(&opts.preset, geo.prompt_len, geo.gen_len).into();
@@ -152,16 +202,22 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
     };
 
     let mut result: Result<()> = Ok(());
+    let mut staleness_hist = StalenessHistogram::default();
     for step in 0..opts.steps {
+        let _step_span = trace::span_arg("step", "trainer", "step", step as f64);
         // -- acquire a batch of groups --------------------------------
-        let rollout_sw = Stopwatch::start();
+        // Async: the stopwatch measures the trainer blocked in `pop_groups`
+        // (starvation). Sync: it measures inline generation.
+        let acquire_sw = Stopwatch::start();
         let groups = if opts.method.is_async() {
+            let _sp = trace::span("pop_groups", "buffer");
             match buffer.pop_groups(groups_per_step, trainer.version()) {
                 Some(g) => g,
                 None => break, // shutdown (can't happen unless errored)
             }
         } else {
             // Synchronous: generate exactly what this step consumes.
+            let _sp = trace::span("generate", "rollout");
             let mut got = Vec::with_capacity(groups_per_step);
             while got.len() < groups_per_step {
                 let gs = generate_batch(
@@ -178,10 +234,18 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
             got.truncate(groups_per_step);
             got
         };
-        let rollout_secs = rollout_sw.secs();
-        phases.add("rollout", rollout_secs);
+        let (rollout_secs, wait_secs) = if opts.method.is_async() {
+            let w = acquire_sw.secs();
+            phases.add("wait", w);
+            (0.0, w)
+        } else {
+            let r = acquire_sw.secs();
+            phases.add("rollout", r);
+            (r, 0.0)
+        };
 
         // -- assemble + train ------------------------------------------
+        let assemble_span = trace::span("assemble", "trainer");
         let tb = batch::assemble(
             &groups,
             &geo,
@@ -189,10 +253,16 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
             opts.alpha_schedule,
             opts.inject_staleness,
         );
+        drop(assemble_span);
         // The trainer consumes the batch (its buffers move into the step);
         // keep the summary stats for the log record.
         let (mean_staleness, mean_alpha) = (tb.mean_staleness, tb.mean_alpha);
         let (mean_reward, mean_reward_exact) = (tb.mean_reward, tb.mean_reward_exact);
+        staleness_hist.extend(&tb.staleness);
+        let row_staleness: Vec<f64> = tb.staleness.iter().map(|&d| d as f64).collect();
+        let staleness_p50 = stats::percentile(&row_staleness, 50.0);
+        let staleness_p95 = stats::percentile(&row_staleness, 95.0);
+        let staleness_max = row_staleness.iter().copied().fold(0.0f64, f64::max);
         let step_result = trainer.step(tb);
         let (m, timing) = match step_result {
             Ok(x) => x,
@@ -215,13 +285,20 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
             prox_secs: timing.prox_secs,
             train_secs: timing.train_secs,
             rollout_secs,
+            wait_secs,
+            staleness_p50,
+            staleness_p95,
+            staleness_max,
             train: m,
         });
 
         // -- periodic held-out eval -------------------------------------
         if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
             let sw = Stopwatch::start();
-            let r = eval::evaluate_exact(&decoder, &trainer.snapshot(), &heldout, &geo)?;
+            let r = {
+                let _sp = trace::span("eval", "trainer");
+                eval::evaluate_exact(&decoder, &trainer.snapshot(), &heldout, &geo)?
+            };
             phases.add("eval", sw.secs());
             logger.log_eval(EvalRecord {
                 step,
@@ -234,14 +311,18 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
 
     // ---- shutdown ---------------------------------------------------------
     buffer.shutdown();
+    let mut workers = Vec::new();
     if let Some(pool) = pool {
-        pool.join()?;
+        workers = pool.join()?;
     }
     result?;
     let total_secs = run_sw.secs();
 
     // Final held-out eval (Table 1's "Final Eval Reward").
-    let final_eval = eval::evaluate_exact(&decoder, &trainer.snapshot(), &heldout, &geo)?;
+    let final_eval = {
+        let _sp = trace::span("eval", "trainer");
+        eval::evaluate_exact(&decoder, &trainer.snapshot(), &heldout, &geo)?
+    };
     logger.log_eval(EvalRecord {
         step: opts.steps,
         wallclock: total_secs,
@@ -249,10 +330,26 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
         n_prompts: heldout.len(),
     });
 
-    let dropped = buffer
-        .stats
-        .dropped_stale_groups
-        .load(std::sync::atomic::Ordering::Relaxed);
+    if let Some(err) = logger.io_error() {
+        eprintln!(
+            "[metrics] WARNING: JSONL stream lost writes ({err}); in-memory records are intact"
+        );
+    }
+
+    let generation_secs = if opts.method.is_async() {
+        workers.iter().map(|w| w.generate_secs).sum()
+    } else {
+        phases.total("rollout")
+    };
+    let telemetry = TelemetryReport {
+        total_secs,
+        trainer_wait_secs: phases.total("wait"),
+        trainer_busy_secs: phases.total("prox") + phases.total("train"),
+        generation_secs,
+        workers,
+        buffer: buffer.telemetry(),
+        staleness: staleness_hist,
+    };
 
     Ok(RunOutput {
         logger,
@@ -260,7 +357,8 @@ pub fn run_with_runtime(opts: &RunOptions, runtime: Runtime) -> Result<RunOutput
         final_eval,
         total_secs,
         phases,
-        dropped_stale_groups: dropped,
+        dropped_stale_groups: telemetry.buffer.dropped_stale_groups,
+        telemetry,
         runtime,
     })
 }

@@ -34,6 +34,7 @@ use crate::runtime::{
     Executable, HostTensor, ParamSnapshot, Runtime, TrainInputs, TrainOutputs, TrainSession,
     TrainState, WeightStore,
 };
+use crate::trace;
 use crate::util::timer::Stopwatch;
 
 use super::batch::TrainBatch;
@@ -199,6 +200,7 @@ impl Trainer {
 
         // --- proximal-policy phase (the paper's Fig. 1 measurement) ------
         let prox_sw = Stopwatch::start();
+        let prox_span = trace::span("prox", "trainer");
         let prox_host: Option<Vec<f32>> = match self.method {
             Method::Recompute => {
                 // Extra forward pass over the training batch; frozen for
@@ -230,10 +232,12 @@ impl Trainer {
             // Coupled loss: no proximal policy at all.
             Method::Sync => None,
         };
+        drop(prox_span);
         let prox_secs = prox_sw.secs();
 
         // --- train step ---------------------------------------------------
         let train_sw = Stopwatch::start();
+        let train_span = trace::span("train", "trainer");
         let (metrics_vec, theta_logp, new_params) = match &mut self.path {
             TrainPath::Session(session) => {
                 let inputs = TrainInputs {
@@ -284,11 +288,13 @@ impl Trainer {
                 (unpacked.metrics.as_f32()?.to_vec(), theta, unpacked.params)
             }
         };
+        drop(train_span);
         let train_secs = train_sw.secs();
 
         if let Some(theta) = theta_logp {
             self.last_theta_logp = Some(theta);
         }
+        let _publish_span = trace::span("publish", "trainer");
         let new_version = self.snapshot.version + 1;
         self.snapshot = ParamSnapshot::new(new_version, new_params);
         self.store.publish(self.snapshot.clone());

@@ -42,4 +42,5 @@ pub mod metrics;
 pub mod rollout;
 pub mod runtime;
 pub mod sampler;
+pub mod trace;
 pub mod util;

@@ -83,8 +83,18 @@ pub struct StepRecord {
     pub prox_secs: f64,
     /// Wall-clock seconds of the train-executable call.
     pub train_secs: f64,
-    /// Wall-clock seconds spent generating (sync method only; async = 0).
+    /// Wall-clock seconds the trainer spent generating inline (sync method;
+    /// 0 on async paths, where generation runs on worker threads).
     pub rollout_secs: f64,
+    /// Wall-clock seconds the trainer was blocked in `pop_groups` waiting
+    /// for admissible groups (async methods; 0 for sync). Earlier versions
+    /// misreported this wait as `rollout_secs`.
+    pub wait_secs: f64,
+    /// Staleness distribution over the consumed batch's rows (nearest-rank
+    /// percentiles; all 0 for sync where data is on-policy).
+    pub staleness_p50: f64,
+    pub staleness_p95: f64,
+    pub staleness_max: f64,
     pub train: TrainMetrics,
 }
 
@@ -102,6 +112,10 @@ impl StepRecord {
             ("prox_secs", Json::Num(self.prox_secs)),
             ("train_secs", Json::Num(self.train_secs)),
             ("rollout_secs", Json::Num(self.rollout_secs)),
+            ("wait_secs", Json::Num(self.wait_secs)),
+            ("staleness_p50", Json::Num(self.staleness_p50)),
+            ("staleness_p95", Json::Num(self.staleness_p95)),
+            ("staleness_max", Json::Num(self.staleness_max)),
             ("train", self.train.to_json()),
         ])
     }
@@ -137,11 +151,15 @@ pub struct MetricsLogger {
     pub evals: Vec<EvalRecord>,
     writer: Option<BufWriter<File>>,
     echo: bool,
+    /// First write/flush error the JSONL stream hit, if any. In-memory
+    /// records stay intact either way; the coordinator surfaces this once
+    /// at shutdown instead of the stream silently losing lines.
+    io_error: Option<String>,
 }
 
 impl MetricsLogger {
     pub fn in_memory() -> MetricsLogger {
-        MetricsLogger { steps: vec![], evals: vec![], writer: None, echo: false }
+        MetricsLogger { steps: vec![], evals: vec![], writer: None, echo: false, io_error: None }
     }
 
     pub fn to_file(path: &Path, echo: bool) -> Result<MetricsLogger> {
@@ -154,14 +172,23 @@ impl MetricsLogger {
             evals: vec![],
             writer: Some(BufWriter::new(f)),
             echo,
+            io_error: None,
         })
     }
 
     fn emit(&mut self, j: &Json) {
-        if let Some(w) = &mut self.writer {
-            let _ = writeln!(w, "{}", j.dump());
-            let _ = w.flush();
+        let Some(w) = &mut self.writer else { return };
+        let res = writeln!(w, "{}", j.dump()).and_then(|()| w.flush());
+        if let Err(e) = res {
+            if self.io_error.is_none() {
+                self.io_error = Some(e.to_string());
+            }
         }
+    }
+
+    /// First I/O error the JSONL stream hit (None if all writes landed).
+    pub fn io_error(&self) -> Option<&str> {
+        self.io_error.as_deref()
     }
 
     pub fn log_step(&mut self, rec: StepRecord) {
@@ -226,6 +253,10 @@ mod tests {
             prox_secs: 0.001,
             train_secs: 0.2,
             rollout_secs: 0.0,
+            wait_secs: 0.05,
+            staleness_p50: 1.0,
+            staleness_p95: 2.0,
+            staleness_max: 2.0,
             train: TrainMetrics::from_vector(&[0.1, 2.0, 1.5, 0.5, 10.0, 1.0, 0.9, 0.01]),
         }
     }
@@ -257,7 +288,28 @@ mod tests {
         let j = Json::parse(lines[0]).unwrap();
         assert_eq!(j.get("kind").as_str(), Some("step"));
         assert_eq!(j.get("train").get("entropy").as_f64(), Some(2.0));
+        assert_eq!(j.get("wait_secs").as_f64(), Some(0.05));
+        assert_eq!(j.get("staleness_p95").as_f64(), Some(2.0));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn io_errors_are_recorded_not_swallowed() {
+        // /dev/full accepts the open but fails every write with ENOSPC.
+        let mut log = match MetricsLogger::to_file(Path::new("/dev/full"), false) {
+            Ok(l) => l,
+            Err(_) => return, // environment without /dev/full: nothing to test
+        };
+        assert!(log.io_error().is_none());
+        log.log_step(rec(1));
+        assert!(log.io_error().is_some(), "failed flush must be recorded");
+        // In-memory records survive the lost stream.
+        assert_eq!(log.steps.len(), 1);
+        // Later records don't clobber the first error.
+        let first = log.io_error().unwrap().to_string();
+        log.log_step(rec(2));
+        assert_eq!(log.io_error().unwrap(), first);
     }
 
     #[test]

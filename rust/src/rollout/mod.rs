@@ -25,7 +25,10 @@ use crate::buffer::{Episode, EpisodeBuffer};
 use crate::env::{tokenizer, verifier, Problem, TaskEnv};
 use crate::runtime::{Decoder, ParamSnapshot, PresetConfig, WeightStore};
 use crate::sampler::{sample, SamplerConfig};
+use crate::trace;
+use crate::trace::report::WorkerTelemetry;
 use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
 
 /// Monotonic GRPO group-id allocator shared by all rollout sources.
 #[derive(Debug, Default)]
@@ -172,7 +175,7 @@ pub fn generate_for_problems(
 
 /// Handle to the async rollout worker pool.
 pub struct RolloutPool {
-    handles: Vec<JoinHandle<Result<()>>>,
+    handles: Vec<JoinHandle<Result<WorkerTelemetry>>>,
 }
 
 impl RolloutPool {
@@ -200,26 +203,43 @@ impl RolloutPool {
                 let group_ids = group_ids.clone();
                 std::thread::Builder::new()
                     .name(format!("rollout-{wid}"))
-                    .spawn(move || -> Result<()> {
+                    .spawn(move || -> Result<WorkerTelemetry> {
                         let mut rng = Pcg64::new(seed ^ 0x9011_0000, wid as u64 + 1);
+                        let mut wt = WorkerTelemetry { worker: wid, ..Default::default() };
+                        let life_sw = Stopwatch::start();
                         while !buffer.is_shutdown() {
                             let snapshot = store.latest();
-                            let groups = generate_batch(
-                                &decoder,
-                                &snapshot,
-                                env.as_ref(),
-                                &geo,
-                                &sampler_cfg,
-                                &mut rng,
-                                &group_ids,
-                            )?;
+                            let gen_sw = Stopwatch::start();
+                            let groups = {
+                                let _sp =
+                                    trace::span_arg("generate", "rollout", "worker", wid as f64);
+                                generate_batch(
+                                    &decoder,
+                                    &snapshot,
+                                    env.as_ref(),
+                                    &geo,
+                                    &sampler_cfg,
+                                    &mut rng,
+                                    &group_ids,
+                                )?
+                            };
+                            wt.generate_secs += gen_sw.secs();
                             for g in groups {
-                                if !buffer.push_group(g) {
-                                    return Ok(()); // shutdown
+                                let push_sw = Stopwatch::start();
+                                let pushed = {
+                                    let _sp = trace::span("push_group", "rollout");
+                                    buffer.push_group(g)
+                                };
+                                wt.push_secs += push_sw.secs();
+                                if !pushed {
+                                    wt.total_secs = life_sw.secs();
+                                    return Ok(wt); // shutdown
                                 }
+                                wt.groups_pushed += 1;
                             }
                         }
-                        Ok(())
+                        wt.total_secs = life_sw.secs();
+                        Ok(wt)
                     })
                     .expect("spawning rollout worker")
             })
@@ -227,14 +247,16 @@ impl RolloutPool {
         RolloutPool { handles }
     }
 
-    /// Join all workers (call after `buffer.shutdown()`).
-    pub fn join(self) -> Result<()> {
+    /// Join all workers (call after `buffer.shutdown()`), returning each
+    /// worker's lifetime accounting for the telemetry report.
+    pub fn join(self) -> Result<Vec<WorkerTelemetry>> {
+        let mut stats = Vec::with_capacity(self.handles.len());
         for h in self.handles {
             match h.join() {
-                Ok(r) => r?,
+                Ok(r) => stats.push(r?),
                 Err(_) => anyhow::bail!("rollout worker panicked"),
             }
         }
-        Ok(())
+        Ok(stats)
     }
 }

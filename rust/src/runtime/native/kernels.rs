@@ -429,6 +429,9 @@ pub fn run_chunks(n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
         }
         return;
     }
+    // Coarse dispatch span (parallel path only): one per fan-out, recorded
+    // on the calling thread — pool workers never touch the trace recorder.
+    let _sp = crate::trace::span_arg("run_chunks", "kernel", "chunks", n_chunks as f64);
     // SAFETY: the borrow of `f` is erased, but `run_chunks` blocks on the
     // latch until every claimed chunk has finished, and workers never call
     // the closure for indices >= n_chunks — so no call outlives `f`.

@@ -17,6 +17,7 @@ use crate::runtime::backend::{TrainInputs, TrainSession, TrainSessionFactory, Tr
 use crate::runtime::params::ParamSnapshot;
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::train::TrainState;
+use crate::trace;
 
 use super::kernels;
 use super::model::{self, BackwardWs, Cache, Dims, SeqStats};
@@ -99,8 +100,11 @@ pub(crate) fn train_step_impl(
         let prox_mb = inputs.prox_logp.map(|p| &p[r0 * t..r1 * t]);
 
         let p: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
-        model::forward_into(dims, &p, tok_mb, mb, s, &mut ws.cache);
-        model::sequence_logp_into(dims, &ws.cache, tok_mb, &mut ws.stats);
+        {
+            let _sp = trace::span_arg("forward", "train", "minibatch", i as f64);
+            model::forward_into(dims, &p, tok_mb, mb, s, &mut ws.cache);
+            model::sequence_logp_into(dims, &ws.cache, tok_mb, &mut ws.stats);
+        }
         theta_out[r0 * t..r1 * t].copy_from_slice(&ws.stats.logp);
 
         let denom = mask_mb.iter().sum::<f32>().max(1.0);
@@ -147,16 +151,28 @@ pub(crate) fn train_step_impl(
             }
         }
 
-        model::dlogits_from_dlogp_into(
-            dims,
-            &ws.cache,
-            &ws.stats,
-            tok_mb,
-            &ws.dlogp,
-            &mut ws.dlogits,
-        );
-        model::backward_into(dims, &p, &ws.cache, tok_mb, &ws.dlogits, &mut ws.grads, &mut ws.bws);
+        {
+            let _sp = trace::span_arg("backward", "train", "minibatch", i as f64);
+            model::dlogits_from_dlogp_into(
+                dims,
+                &ws.cache,
+                &ws.stats,
+                tok_mb,
+                &ws.dlogp,
+                &mut ws.dlogits,
+            );
+            model::backward_into(
+                dims,
+                &p,
+                &ws.cache,
+                tok_mb,
+                &ws.dlogits,
+                &mut ws.grads,
+                &mut ws.bws,
+            );
+        }
         drop(p);
+        let adam_span = trace::span_arg("adam", "train", "minibatch", i as f64);
         let gnorm = model::adam_update(
             &preset.adam,
             preset.rl_lr,
@@ -166,6 +182,7 @@ pub(crate) fn train_step_impl(
             &ws.grads,
             *step,
         );
+        drop(adam_span);
         *step += 1;
 
         losses += (-obj_sum / denom) as f64;

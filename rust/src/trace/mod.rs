@@ -1,0 +1,461 @@
+//! Lock-light span/event tracing for the asynchronous pipeline.
+//!
+//! The paper's claim is a wall-clock claim, so the repo needs to see *where*
+//! async time goes: trainer blocked in `pop_groups`, workers blocked on
+//! backpressure, kernels fanning out. This module records `(name, category,
+//! t_start, t_end, thread, args)` events into **thread-local buffers** —
+//! no mutex, no allocation beyond the buffer's amortised growth on the hot
+//! path — which drain into a global registry when a buffer fills, when the
+//! owning thread exits, or at [`stop`].
+//!
+//! * **Zero-cost when disabled**: every entry point first checks one
+//!   relaxed atomic; a disabled [`span`] constructs an inert guard and
+//!   touches neither the clock nor thread-local storage.
+//! * **Monotonic clock**: timestamps are microseconds since a process-wide
+//!   [`Instant`] epoch pinned at the first [`start`].
+//! * **Chrome `trace_event` export**: [`TraceData::write_chrome`] emits the
+//!   JSON-object format (`{"traceEvents": [...]}`) that loads directly in
+//!   Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`, including
+//!   `thread_name` metadata so trainer/rollout-worker lanes are labelled.
+//!
+//! Enabling: set `A3PO_TRACE=<path>` (or `RunOptions::trace_path` /
+//! `--trace <path>`) and the coordinator brackets the run with
+//! [`start`]/[`stop`] and writes the file. Library users can call those
+//! directly. Threads that record events must exit (or fill their buffer)
+//! before [`stop`] for their tail events to be included — the coordinator
+//! joins the rollout pool before exporting.
+
+pub mod report;
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Event model
+
+/// What kind of Chrome `trace_event` an [`Event`] serialises to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Complete span (`"ph":"X"`) with a duration.
+    Span { dur_us: f64 },
+    /// Instantaneous marker (`"ph":"i"`).
+    Instant,
+    /// Counter sample (`"ph":"C"`), e.g. buffer occupancy.
+    Counter { value: f64 },
+}
+
+/// One recorded event. Names/categories are `&'static str` so recording
+/// never allocates per event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// Microseconds since the trace epoch.
+    pub ts_us: f64,
+    /// Recorder's trace-local thread id (assigned at first record).
+    pub tid: u64,
+    pub kind: EventKind,
+    /// Optional single numeric argument (Chrome `"args": {key: value}`).
+    pub arg: Option<(&'static str, f64)>,
+}
+
+// ---------------------------------------------------------------------------
+// Global state: enabled flag, epoch, registry of drained buffers
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+#[derive(Default)]
+struct Registry {
+    events: Mutex<Vec<Event>>,
+    /// `(tid, thread name)` in registration order; kept across [`start`]
+    /// calls (tids are stable per OS thread).
+    threads: Mutex<Vec<(u64, String)>>,
+}
+
+fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::default)
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+/// Microseconds since the trace epoch (monotonic).
+pub fn now_us() -> f64 {
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+/// Is tracing currently recording? One relaxed load — callers on hot paths
+/// gate all other work behind this.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Begin recording. Clears events left from a previous trace window (thread
+/// registrations persist). Pins the clock epoch on first use.
+pub fn start() {
+    let _ = epoch();
+    registry().events.lock().unwrap().clear();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop recording and drain everything flushed so far plus the calling
+/// thread's buffer. Other threads still alive keep their unflushed tail —
+/// join recording threads first for a complete trace.
+pub fn stop() -> TraceData {
+    ENABLED.store(false, Ordering::SeqCst);
+    let _ = LOCAL.try_with(|l| l.borrow_mut().flush());
+    let events = std::mem::take(&mut *registry().events.lock().unwrap());
+    let threads = registry().threads.lock().unwrap().clone();
+    TraceData { events, threads }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local recording
+
+/// Flush to the registry when a thread's buffer reaches this many events.
+const FLUSH_THRESHOLD: usize = 4096;
+
+struct LocalBuf {
+    tid: u64,
+    events: Vec<Event>,
+}
+
+impl LocalBuf {
+    fn register() -> LocalBuf {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current().name().unwrap_or("thread").to_string();
+        registry().threads.lock().unwrap().push((tid, name));
+        LocalBuf { tid, events: Vec::new() }
+    }
+
+    fn flush(&mut self) {
+        if !self.events.is_empty() {
+            registry().events.lock().unwrap().append(&mut self.events);
+        }
+    }
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf::register());
+}
+
+fn record(mut e: Event) {
+    // try_with: events fired during thread teardown (after the TLS buffer
+    // dropped) are silently discarded rather than panicking.
+    let _ = LOCAL.try_with(|l| {
+        let mut l = l.borrow_mut();
+        e.tid = l.tid;
+        l.events.push(e);
+        if l.events.len() >= FLUSH_THRESHOLD {
+            l.flush();
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Recording API
+
+/// RAII span: records a complete event covering its lifetime when dropped.
+/// Inert (no clock read, no TLS touch) while tracing is disabled.
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start_us: f64,
+    arg: Option<(&'static str, f64)>,
+    active: bool,
+}
+
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    if !enabled() {
+        return Span { name, cat, start_us: 0.0, arg: None, active: false };
+    }
+    Span { name, cat, start_us: now_us(), arg: None, active: true }
+}
+
+/// [`span`] with a numeric argument attached (e.g. step index, chunk count).
+#[inline]
+pub fn span_arg(name: &'static str, cat: &'static str, key: &'static str, value: f64) -> Span {
+    let mut s = span(name, cat);
+    if s.active {
+        s.arg = Some((key, value));
+    }
+    s
+}
+
+impl Span {
+    /// Attach/replace the span's numeric argument before it closes.
+    pub fn set_arg(&mut self, key: &'static str, value: f64) {
+        if self.active {
+            self.arg = Some((key, value));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        // Spans open across a `stop()` are dropped, not recorded into the
+        // next window with a stale epoch offset.
+        if !self.active || !enabled() {
+            return;
+        }
+        let dur_us = (now_us() - self.start_us).max(0.0);
+        record(Event {
+            name: self.name,
+            cat: self.cat,
+            ts_us: self.start_us,
+            tid: 0,
+            kind: EventKind::Span { dur_us },
+            arg: self.arg,
+        });
+    }
+}
+
+/// Record an externally timed complete span (e.g. a measured condvar wait
+/// where the start time is reconstructed from the measured duration).
+pub fn complete_span(
+    name: &'static str,
+    cat: &'static str,
+    start_us: f64,
+    end_us: f64,
+    arg: Option<(&'static str, f64)>,
+) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        name,
+        cat,
+        ts_us: start_us,
+        tid: 0,
+        kind: EventKind::Span { dur_us: (end_us - start_us).max(0.0) },
+        arg,
+    });
+}
+
+/// Record a counter sample (rendered as a stacked area track in Perfetto).
+#[inline]
+pub fn counter(name: &'static str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        name,
+        cat: "counter",
+        ts_us: now_us(),
+        tid: 0,
+        kind: EventKind::Counter { value },
+        arg: None,
+    });
+}
+
+/// Record an instantaneous marker.
+#[inline]
+pub fn instant(name: &'static str, cat: &'static str) {
+    if !enabled() {
+        return;
+    }
+    record(Event { name, cat, ts_us: now_us(), tid: 0, kind: EventKind::Instant, arg: None });
+}
+
+// ---------------------------------------------------------------------------
+// Export
+
+/// A drained trace: every recorded event plus the thread-name table.
+#[derive(Debug, Clone, Default)]
+pub struct TraceData {
+    pub events: Vec<Event>,
+    /// `(tid, thread name)` for every thread that ever recorded.
+    pub threads: Vec<(u64, String)>,
+}
+
+impl TraceData {
+    /// Spans only (skips counters/instants).
+    pub fn spans(&self) -> impl Iterator<Item = &Event> {
+        self.events.iter().filter(|e| matches!(e.kind, EventKind::Span { .. }))
+    }
+
+    /// Distinct thread ids that recorded at least one span.
+    pub fn span_tids(&self) -> std::collections::BTreeSet<u64> {
+        self.spans().map(|e| e.tid).collect()
+    }
+
+    /// Chrome `trace_event` JSON-object format: thread metadata first, then
+    /// events sorted by timestamp (deterministic output for a given trace).
+    pub fn to_chrome_json(&self) -> Json {
+        let mut arr: Vec<Json> = Vec::with_capacity(self.events.len() + self.threads.len());
+        for (tid, name) in &self.threads {
+            arr.push(Json::obj(vec![
+                ("name", Json::Str("thread_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(*tid as f64)),
+                ("args", Json::obj(vec![("name", Json::Str(name.clone()))])),
+            ]));
+        }
+        let mut events: Vec<&Event> = self.events.iter().collect();
+        events.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+        for e in events {
+            arr.push(event_json(e));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(arr)),
+            ("displayTimeUnit", Json::Str("ms".into())),
+        ])
+    }
+
+    /// Serialise to a Chrome-trace JSON file (parents created as needed).
+    pub fn write_chrome(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_chrome_json().dump())
+            .with_context(|| format!("writing trace to {}", path.display()))
+    }
+}
+
+fn event_json(e: &Event) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("name", Json::Str(e.name.into())),
+        ("cat", Json::Str(e.cat.into())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(e.tid as f64)),
+        ("ts", Json::Num(e.ts_us)),
+    ];
+    match &e.kind {
+        EventKind::Span { dur_us } => {
+            pairs.push(("ph", Json::Str("X".into())));
+            pairs.push(("dur", Json::Num(*dur_us)));
+            if let Some((k, v)) = e.arg {
+                pairs.push(("args", Json::obj(vec![(k, Json::Num(v))])));
+            }
+        }
+        EventKind::Instant => {
+            pairs.push(("ph", Json::Str("i".into())));
+            pairs.push(("s", Json::Str("t".into())));
+        }
+        EventKind::Counter { value } => {
+            pairs.push(("ph", Json::Str("C".into())));
+            pairs.push(("args", Json::obj(vec![("value", Json::Num(*value))])));
+        }
+    }
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    // Pure export-format tests on hand-built TraceData: no global recorder
+    // state, so these can't race with recording tests in other harnesses
+    // (the global-state tests live in `rust/tests/trace_telemetry.rs`).
+    use super::*;
+
+    fn data() -> TraceData {
+        TraceData {
+            events: vec![
+                Event {
+                    name: "outer",
+                    cat: "test",
+                    ts_us: 10.0,
+                    tid: 1,
+                    kind: EventKind::Span { dur_us: 100.0 },
+                    arg: Some(("step", 3.0)),
+                },
+                Event {
+                    name: "inner",
+                    cat: "test",
+                    ts_us: 20.0,
+                    tid: 1,
+                    kind: EventKind::Span { dur_us: 50.0 },
+                    arg: None,
+                },
+                Event {
+                    name: "buffer_episodes",
+                    cat: "counter",
+                    ts_us: 15.0,
+                    tid: 2,
+                    kind: EventKind::Counter { value: 8.0 },
+                    arg: None,
+                },
+            ],
+            threads: vec![(1, "main".into()), (2, "rollout-0".into())],
+        }
+    }
+
+    #[test]
+    fn chrome_json_roundtrips_through_parser() {
+        let j = data().to_chrome_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        // 2 thread_name metadata + 3 events.
+        assert_eq!(events.len(), 5);
+        let meta = &events[0];
+        assert_eq!(meta.get("ph").as_str(), Some("M"));
+        assert_eq!(meta.get("args").get("name").as_str(), Some("main"));
+        // Events are ts-sorted after the metadata block.
+        let names: Vec<&str> =
+            events[2..].iter().map(|e| e.get("name").as_str().unwrap()).collect();
+        assert_eq!(names, vec!["outer", "buffer_episodes", "inner"]);
+    }
+
+    #[test]
+    fn span_fields_match_trace_event_schema() {
+        let j = data().to_chrome_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let outer = parsed
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("outer"))
+            .unwrap();
+        assert_eq!(outer.get("ph").as_str(), Some("X"));
+        assert_eq!(outer.get("ts").as_f64(), Some(10.0));
+        assert_eq!(outer.get("dur").as_f64(), Some(100.0));
+        assert_eq!(outer.get("pid").as_f64(), Some(1.0));
+        assert_eq!(outer.get("tid").as_f64(), Some(1.0));
+        assert_eq!(outer.get("args").get("step").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn counter_serialises_value_in_args() {
+        let j = data().to_chrome_json();
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let c = parsed
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("buffer_episodes"))
+            .unwrap();
+        assert_eq!(c.get("ph").as_str(), Some("C"));
+        assert_eq!(c.get("args").get("value").as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn span_tids_counts_only_span_threads() {
+        let d = data();
+        let tids = d.span_tids();
+        assert!(tids.contains(&1));
+        assert!(!tids.contains(&2), "counter-only thread is not a span thread");
+    }
+}

@@ -1,0 +1,279 @@
+//! Aggregated pipeline telemetry: the numbers behind the trace.
+//!
+//! Where `trace::TraceData` is the microscope (every span, Perfetto-ready),
+//! [`TelemetryReport`] is the summary the coordinator attaches to
+//! `RunOutput`/`summary_json`: per-worker rollout utilisation, trainer
+//! starvation in `pop_groups`, worker backpressure-blocked time, buffer
+//! occupancy (time series + high-water mark), and the run-level staleness
+//! histogram. Built from `BufferStats`, worker-thread accounting, and the
+//! coordinator's `PhaseTimer` — available whether or not tracing is on.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Per-rollout-worker accounting, returned from the worker thread on join.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerTelemetry {
+    pub worker: usize,
+    /// Seconds spent inside `generate_batch` (useful work).
+    pub generate_secs: f64,
+    /// Seconds spent in `push_group` (includes backpressure blocking).
+    pub push_secs: f64,
+    /// Worker-thread lifetime in seconds.
+    pub total_secs: f64,
+    pub groups_pushed: u64,
+}
+
+impl WorkerTelemetry {
+    /// Fraction of the worker's lifetime spent generating (vs blocked on
+    /// the buffer or waiting to exit).
+    pub fn utilisation(&self) -> f64 {
+        if self.total_secs <= 0.0 {
+            0.0
+        } else {
+            (self.generate_secs / self.total_secs).clamp(0.0, 1.0)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("worker", Json::Num(self.worker as f64)),
+            ("generate_secs", Json::Num(self.generate_secs)),
+            ("push_secs", Json::Num(self.push_secs)),
+            ("total_secs", Json::Num(self.total_secs)),
+            ("groups_pushed", Json::Num(self.groups_pushed as f64)),
+            ("utilisation", Json::Num(self.utilisation())),
+        ])
+    }
+}
+
+/// Episode-buffer accounting over a whole run.
+#[derive(Debug, Clone, Default)]
+pub struct BufferTelemetry {
+    pub pushed_groups: u64,
+    pub popped_groups: u64,
+    pub dropped_stale_groups: u64,
+    /// Groups still buffered at shutdown.
+    pub remaining_groups: u64,
+    /// Total worker time blocked on backpressure in `push_group`.
+    pub push_wait_secs: f64,
+    /// Total trainer time blocked in `pop_groups`.
+    pub pop_wait_secs: f64,
+    /// Max episodes ever simultaneously buffered.
+    pub high_water_episodes: u64,
+    /// Decimated `(secs since buffer creation, buffered episodes)` series.
+    pub occupancy: Vec<(f64, u64)>,
+}
+
+impl BufferTelemetry {
+    /// Conservation law: every pushed group is either served to the
+    /// trainer, dropped as stale, or still buffered at shutdown.
+    pub fn accounting_consistent(&self) -> bool {
+        self.pushed_groups == self.popped_groups + self.dropped_stale_groups + self.remaining_groups
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pushed_groups", Json::Num(self.pushed_groups as f64)),
+            ("popped_groups", Json::Num(self.popped_groups as f64)),
+            ("dropped_stale_groups", Json::Num(self.dropped_stale_groups as f64)),
+            ("remaining_groups", Json::Num(self.remaining_groups as f64)),
+            ("push_wait_secs", Json::Num(self.push_wait_secs)),
+            ("pop_wait_secs", Json::Num(self.pop_wait_secs)),
+            ("high_water_episodes", Json::Num(self.high_water_episodes as f64)),
+            (
+                "occupancy",
+                Json::Arr(
+                    self.occupancy
+                        .iter()
+                        .map(|(t, n)| Json::Arr(vec![Json::Num(*t), Json::Num(*n as f64)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run-level staleness histogram over every trained row (per-row `d`
+/// values from assembled batches; exact counts, not sampled).
+#[derive(Debug, Clone, Default)]
+pub struct StalenessHistogram {
+    counts: BTreeMap<u64, u64>,
+    n: u64,
+}
+
+impl StalenessHistogram {
+    pub fn push(&mut self, d: u64) {
+        *self.counts.entry(d).or_insert(0) += 1;
+        self.n += 1;
+    }
+
+    pub fn extend(&mut self, ds: &[u64]) {
+        for &d in ds {
+            self.push(d);
+        }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn max(&self) -> u64 {
+        self.counts.keys().next_back().copied().unwrap_or(0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self.counts.iter().map(|(&d, &c)| d as f64 * c as f64).sum();
+        sum / self.n as f64
+    }
+
+    /// Nearest-rank percentile (`p` in [0,100]) over the exact counts.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (&d, &c) in &self.counts {
+            cum += c;
+            if cum >= rank {
+                return d as f64;
+            }
+        }
+        self.max() as f64
+    }
+
+    pub fn counts(&self) -> &BTreeMap<u64, u64> {
+        &self.counts
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(self.percentile(50.0))),
+            ("p95", Json::Num(self.percentile(95.0))),
+            ("max", Json::Num(self.max() as f64)),
+            (
+                "counts",
+                Json::Arr(
+                    self.counts
+                        .iter()
+                        .map(|(&d, &c)| Json::Arr(vec![Json::Num(d as f64), Json::Num(c as f64)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The run-level rollup the coordinator attaches to `RunOutput`.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryReport {
+    /// Wall-clock seconds of the training loop (excludes final eval).
+    pub total_secs: f64,
+    /// Trainer seconds blocked in `pop_groups` waiting for admissible
+    /// groups (async starvation; 0 for sync).
+    pub trainer_wait_secs: f64,
+    /// Trainer seconds doing step work (prox + train phases).
+    pub trainer_busy_secs: f64,
+    /// Generation seconds: summed worker `generate_batch` time on async
+    /// paths, inline rollout time on the sync path.
+    pub generation_secs: f64,
+    pub workers: Vec<WorkerTelemetry>,
+    pub buffer: BufferTelemetry,
+    pub staleness: StalenessHistogram,
+}
+
+impl TelemetryReport {
+    /// Fraction of training-loop wall clock the trainer spent starved.
+    pub fn trainer_starvation_frac(&self) -> f64 {
+        if self.total_secs <= 0.0 {
+            0.0
+        } else {
+            (self.trainer_wait_secs / self.total_secs).clamp(0.0, 1.0)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_secs", Json::Num(self.total_secs)),
+            ("trainer_wait_secs", Json::Num(self.trainer_wait_secs)),
+            ("trainer_busy_secs", Json::Num(self.trainer_busy_secs)),
+            ("trainer_starvation_frac", Json::Num(self.trainer_starvation_frac())),
+            ("generation_secs", Json::Num(self.generation_secs)),
+            ("workers", Json::Arr(self.workers.iter().map(|w| w.to_json()).collect())),
+            ("buffer", self.buffer.to_json()),
+            ("staleness", self.staleness.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_nearest_rank() {
+        let mut h = StalenessHistogram::default();
+        h.extend(&[0, 0, 0, 1, 1, 2, 8]);
+        assert_eq!(h.n(), 7);
+        assert_eq!(h.percentile(50.0), 1.0);
+        assert_eq!(h.percentile(95.0), 8.0);
+        assert_eq!(h.max(), 8);
+        assert!((h.mean() - 12.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = StalenessHistogram::default();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn buffer_accounting_identity() {
+        let mut b = BufferTelemetry {
+            pushed_groups: 10,
+            popped_groups: 6,
+            dropped_stale_groups: 3,
+            remaining_groups: 1,
+            ..Default::default()
+        };
+        assert!(b.accounting_consistent());
+        b.remaining_groups = 2;
+        assert!(!b.accounting_consistent());
+    }
+
+    #[test]
+    fn worker_utilisation_bounds() {
+        let w = WorkerTelemetry {
+            worker: 0,
+            generate_secs: 3.0,
+            push_secs: 1.0,
+            total_secs: 4.0,
+            groups_pushed: 5,
+        };
+        assert!((w.utilisation() - 0.75).abs() < 1e-12);
+        let idle = WorkerTelemetry::default();
+        assert_eq!(idle.utilisation(), 0.0);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let mut rep =
+            TelemetryReport { total_secs: 10.0, trainer_wait_secs: 2.5, ..Default::default() };
+        rep.staleness.extend(&[0, 1, 1]);
+        let j = rep.to_json();
+        assert_eq!(j.get("trainer_starvation_frac").as_f64(), Some(0.25));
+        assert_eq!(j.get("staleness").get("n").as_f64(), Some(3.0));
+        // Round-trips through the serialiser.
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("total_secs").as_f64(), Some(10.0));
+    }
+}

@@ -1,0 +1,245 @@
+//! Tracing + telemetry integration: the span recorder's global state, the
+//! Chrome-trace export, and the coordinator's end-to-end telemetry report.
+//!
+//! The trace recorder is process-wide (one enabled flag, one registry), so
+//! every test that records serialises on [`TRACE_LOCK`] — the pure
+//! export-format tests live as unit tests in `trace/mod.rs` instead.
+//!
+//! Runs hermetically on the native backend (no artifacts on disk).
+
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use a3po::config::{Method, RunOptions, StalenessPolicy};
+use a3po::coordinator;
+use a3po::trace;
+use a3po::util::json::Json;
+
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // A poisoned lock just means another trace test failed; the global
+    // recorder state is still usable.
+    TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn span_events(trace: &Json) -> Vec<&Json> {
+    trace
+        .get("traceEvents")
+        .as_arr()
+        .expect("traceEvents array")
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("X"))
+        .collect()
+}
+
+#[test]
+fn span_nesting_survives_chrome_roundtrip() {
+    let _g = lock();
+    trace::start();
+    {
+        let _outer = trace::span_arg("outer", "test", "step", 7.0);
+        std::thread::sleep(Duration::from_millis(2));
+        {
+            let _inner = trace::span("inner", "test");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let data = trace::stop();
+
+    let dir = std::env::temp_dir().join(format!("a3po-trace-rt-{}", std::process::id()));
+    let path = dir.join("nested.json");
+    data.write_chrome(&path).unwrap();
+    let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let spans = span_events(&parsed);
+    let find = |name: &str| {
+        *spans.iter().find(|e| e.get("name").as_str() == Some(name)).unwrap_or_else(|| {
+            panic!("span {name:?} missing from exported trace");
+        })
+    };
+    let (outer, inner) = (find("outer"), find("inner"));
+    let iv = |e: &Json| {
+        let ts = e.get("ts").as_f64().unwrap();
+        (ts, ts + e.get("dur").as_f64().unwrap())
+    };
+    let ((os, oe), (is_, ie)) = (iv(outer), iv(inner));
+    assert!(os <= is_ && ie <= oe, "inner [{is_},{ie}] must nest in outer [{os},{oe}]");
+    assert!(ie - is_ >= 1_000.0, "inner slept 2ms, dur {}us", ie - is_);
+    assert_eq!(outer.get("tid").as_f64(), inner.get("tid").as_f64(), "same recording thread");
+    assert_eq!(outer.get("args").get("step").as_f64(), Some(7.0));
+}
+
+#[test]
+fn multi_thread_buffers_flush_on_exit() {
+    let _g = lock();
+    trace::start();
+    let handles: Vec<_> = (0..4)
+        .map(|w| {
+            std::thread::Builder::new()
+                .name(format!("recorder-{w}"))
+                .spawn(move || {
+                    for _ in 0..100 {
+                        let t = trace::now_us();
+                        trace::complete_span("tick", "test", t, t + 1.0, None);
+                    }
+                })
+                .unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    drop(trace::span("main_span", "test"));
+    let data = trace::stop();
+
+    assert_eq!(data.spans().count(), 401, "4x100 thread spans + 1 main span");
+    assert!(
+        data.span_tids().len() >= 5,
+        "expected >=5 distinct recording threads, got {:?}",
+        data.span_tids()
+    );
+    let names: Vec<&str> = data.threads.iter().map(|(_, n)| n.as_str()).collect();
+    assert!(names.iter().any(|n| n.starts_with("recorder-")), "thread names registered");
+}
+
+#[test]
+fn disabled_recorder_is_a_no_op() {
+    let _g = lock();
+    assert!(!trace::enabled());
+    // None of these may record (or panic) while tracing is off.
+    drop(trace::span("ghost", "test"));
+    drop(trace::span_arg("ghost", "test", "k", 1.0));
+    trace::counter("ghost_counter", 3.0);
+    trace::instant("ghost_instant", "test");
+    let t = trace::now_us();
+    trace::complete_span("ghost_complete", "test", t, t + 5.0, None);
+
+    trace::start();
+    let data = trace::stop();
+    assert!(data.events.is_empty(), "disabled-mode events leaked: {:?}", data.events);
+}
+
+#[test]
+fn spans_open_across_stop_are_discarded() {
+    let _g = lock();
+    trace::start();
+    let open = trace::span("straddler", "test");
+    let data = trace::stop();
+    drop(open); // closes after stop: must not bleed into a later window
+    assert!(data.spans().all(|e| e.name != "straddler"));
+    trace::start();
+    let later = trace::stop();
+    assert!(later.events.is_empty(), "straddler leaked into next window");
+}
+
+#[test]
+fn traced_async_run_reports_consistent_telemetry() {
+    let _g = lock();
+    std::env::set_var("A3PO_QUIET", "1");
+    let dir = std::env::temp_dir().join(format!("a3po-trace-smoke-{}", std::process::id()));
+    let trace_path = dir.join("trace_loglinear.json");
+    // Points at a nonexistent artifacts dir so the built-in tiny preset is
+    // used (same hermetic setup as integration_train.rs).
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let opts = RunOptions {
+        preset: "tiny".into(),
+        artifacts_dir: artifacts.to_str().unwrap().into(),
+        out_dir: dir.to_str().unwrap().into(),
+        method: Method::Loglinear,
+        steps: 3,
+        pretrain_steps: 0,
+        workers: 2,
+        eval_every: 0,
+        eval_prompts: 8,
+        seed: 7,
+        staleness: StalenessPolicy { max_staleness: 16, max_buffered: 128 },
+        trace_path: Some(trace_path.to_str().unwrap().into()),
+        ..Default::default()
+    };
+    let out = coordinator::run(&opts).expect("traced run failed");
+
+    // -- telemetry report ------------------------------------------------
+    let tel = &out.telemetry;
+    assert!(
+        tel.buffer.accounting_consistent(),
+        "pushed {} != popped {} + dropped {} + remaining {}",
+        tel.buffer.pushed_groups,
+        tel.buffer.popped_groups,
+        tel.buffer.dropped_stale_groups,
+        tel.buffer.remaining_groups
+    );
+    assert_eq!(tel.buffer.popped_groups, 3 * 4, "3 steps x 4 groups (tiny train_batch/G)");
+    assert!(tel.buffer.high_water_episodes > 0);
+    assert!(!tel.buffer.occupancy.is_empty());
+    assert_eq!(tel.staleness.n(), 3 * 16, "one staleness sample per trained row");
+    assert_eq!(tel.workers.len(), 2);
+    for w in &tel.workers {
+        assert!(w.total_secs > 0.0);
+        assert!((0.0..=1.0).contains(&w.utilisation()));
+    }
+    assert!((0.0..=1.0).contains(&tel.trainer_starvation_frac()));
+    // The trainer's measured wait envelope contains the buffer's blocked
+    // condvar time (the wait phase wraps the pop_groups call).
+    assert!(tel.buffer.pop_wait_secs <= tel.trainer_wait_secs + 0.05);
+
+    // -- step records: wait vs rollout semantics -------------------------
+    for s in &out.logger.steps {
+        assert_eq!(s.rollout_secs, 0.0, "async trainer never generates inline");
+        assert!(s.wait_secs >= 0.0);
+        assert!(s.staleness_p50 <= s.staleness_p95);
+        assert!(s.staleness_p95 <= s.staleness_max);
+    }
+
+    // -- summary carries the new fields ----------------------------------
+    let summary = out.summary_json(&opts);
+    assert!(summary.get("trainer_starvation_frac").as_f64().is_some());
+    assert!(summary.get("staleness_p95").as_f64().is_some());
+
+    // -- JSONL schema ----------------------------------------------------
+    let jsonl = std::fs::read_to_string(dir.join("tiny_loglinear.jsonl")).unwrap();
+    let first_step = jsonl
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .find(|j| j.get("kind").as_str() == Some("step"))
+        .unwrap();
+    assert!(first_step.get("wait_secs").as_f64().is_some());
+    assert_eq!(first_step.get("rollout_secs").as_f64(), Some(0.0));
+    assert!(first_step.get("staleness_max").as_f64().is_some());
+
+    // -- exported Chrome trace -------------------------------------------
+    let trace_json = Json::parse(&std::fs::read_to_string(&trace_path).unwrap())
+        .expect("trace file must be valid JSON");
+    let spans = span_events(&trace_json);
+    assert!(spans.iter().any(|e| e.get("name").as_str() == Some("step")), "trainer step spans");
+    assert!(
+        spans.iter().any(|e| e.get("name").as_str() == Some("pop_groups")),
+        "trainer buffer-wait spans"
+    );
+    let gen_tids: std::collections::BTreeSet<i64> = spans
+        .iter()
+        .filter(|e| e.get("name").as_str() == Some("generate"))
+        .filter_map(|e| e.get("tid").as_i64())
+        .collect();
+    assert!(gen_tids.len() >= 2, "both rollout workers must record generate spans: {gen_tids:?}");
+    let all_tids: std::collections::BTreeSet<i64> =
+        spans.iter().filter_map(|e| e.get("tid").as_i64()).collect();
+    assert!(all_tids.len() >= 3, "trainer + 2 workers, got tids {all_tids:?}");
+    let thread_names: Vec<&str> = trace_json
+        .get("traceEvents")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("M"))
+        .filter_map(|e| e.get("args").get("name").as_str())
+        .collect();
+    assert!(
+        thread_names.iter().filter(|n| n.starts_with("rollout-")).count() >= 2,
+        "worker lanes labelled: {thread_names:?}"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
